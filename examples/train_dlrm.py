@@ -1,0 +1,81 @@
+"""Train a ~100M-parameter DLRM for a few hundred steps with the full
+fault-tolerant runtime: checkpoint/restart, preemption handling, straggler
+flagging, row-wise Adagrad on the embedding tables.
+
+    PYTHONPATH=src python examples/train_dlrm.py [--steps 200]
+
+Interrupt with Ctrl-C and re-run: it resumes from the checkpoint.
+"""
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import EmbeddingStageConfig
+from repro.data import DLRMQueryStream
+from repro.models.dlrm import DLRM, DLRMConfig
+from repro.optim import (rowwise_adagrad_init, rowwise_adagrad_update,
+                         sgdm_init, sgdm_update)
+from repro.runtime import TrainLoop, TrainLoopConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt", default="/tmp/repro_dlrm_ckpt")
+    args = ap.parse_args()
+
+    # ~100M params: 16 tables x 48K rows x 128 dim = 98M + MLPs
+    emb = EmbeddingStageConfig(num_tables=16, rows=48_000, dim=128,
+                               pooling=20)
+    cfg = DLRMConfig(embedding=emb)
+    model = DLRM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+    print(f"DLRM parameters: {n/1e6:.1f}M")
+
+    opt_dense = sgdm_init({"bottom": params["bottom"], "top": params["top"]})
+    opt_emb = rowwise_adagrad_init(params["embedding"])
+    state = {"params": params, "opt_dense": opt_dense, "opt_emb": opt_emb}
+
+    @jax.jit
+    def train_step(state, dense, idx, labels):
+        params = state["params"]
+        loss, grads = jax.value_and_grad(model.loss)(params, dense, idx,
+                                                     labels)
+        dense_p, opt_dense = sgdm_update(
+            {"bottom": params["bottom"], "top": params["top"]},
+            {"bottom": grads["bottom"], "top": grads["top"]},
+            state["opt_dense"], lr=0.01)
+        emb_p, opt_emb = rowwise_adagrad_update(
+            params["embedding"], grads["embedding"], state["opt_emb"],
+            lr=0.05)
+        new_params = {"bottom": dense_p["bottom"], "top": dense_p["top"],
+                      "embedding": emb_p}
+        return ({"params": new_params, "opt_dense": opt_dense,
+                 "opt_emb": opt_emb}, loss)
+
+    stream = DLRMQueryStream(num_tables=16, rows=48_000, pooling=20,
+                             batch_size=64, hotness="med_hot", seed=0)
+
+    def step_fn(state, batch):
+        return train_step(state, jnp.asarray(batch.dense),
+                          jnp.asarray(batch.indices),
+                          jnp.asarray(batch.labels))
+
+    loop = TrainLoop(TrainLoopConfig(total_steps=args.steps,
+                                     checkpoint_every=20, log_every=20),
+                     step_fn, state, stream, args.ckpt)
+    loop.install_signal_handlers()
+    if loop.restore():
+        print(f"resumed from step {loop.step}")
+    hist = loop.run()
+    if hist:
+        print(f"done: steps {hist[0].step}..{hist[-1].step}  "
+              f"loss {hist[0].loss:.4f} -> {hist[-1].loss:.4f}  "
+              f"stragglers={sum(h.straggler for h in hist)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.core.access_patterns import (HOTNESS_LEVELS, PAPER_UNIQUE_PCT,
+                                        AccessPattern, coverage_curve,
+                                        hot_coverage, make_pattern,
+                                        unique_access_pct)
+from repro.core.embedding import EmbeddingBagCollection, EmbeddingStageConfig
+from repro.core.hot_cache import (HotPlan, build_plan, identity_plan,
+                                  plan_from_trace, profile_counts)
+from repro.core.plan import EmbeddingPlanReport, plan_embedding_stage

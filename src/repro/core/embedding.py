@@ -1,0 +1,153 @@
+"""EmbeddingBagCollection — the paper's embedding stage as a composable module.
+
+Owns a stack of homogeneous embedding tables [T, R, D] (heterogeneous sets are
+grouped into homogeneous collections by the DLRM model), the per-table
+hot-first plans (L2P analogue), and the kernel tuning knobs. Tables are
+processed with a single stacked lookup (vmapped kernel / gather), matching the
+paper's "each GPU executes one or more embedding tables serially" — the grid
+dimension over tables is the serialization.
+
+Distribution: table-wise sharding over the `model` mesh axis (stack axis 0),
+batch over `data` — the classic DLRM hybrid parallelism. The all-to-all that
+moves lookup outputs from model-parallel to data-parallel layout is inserted
+by XLA under jit from the in/out shardings (an explicit shard_map variant is
+exercised in launch/steps.py as the optimized path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hot_cache
+from repro.kernels.embedding_bag import EmbeddingBagOpts, embedding_bag
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingStageConfig:
+    num_tables: int = 250          # paper §V
+    rows: int = 500_000
+    dim: int = 128
+    pooling: int = 150
+    dtype: str = "float32"         # paper: 4-byte precision
+    combine: str = "sum"           # bag pooling mode
+    # paper-mechanism knobs
+    backend: str = "auto"          # 'xla' (baseline) | 'pallas' | 'auto'
+    prefetch_distance: int = 8
+    batch_block: int = 8
+    pinned_rows: int = 0           # K per table; paper: 60K rows across L2
+    # pad the table stack so it divides the global device count -> each device
+    # owns whole tables (table-parallel a2a plan; beyond-paper optimization,
+    # see EXPERIMENTS.md SPerf iteration C1). 0 = no padding (row-wise plan).
+    shard_pad_tables: int = 0
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def table_bytes(self) -> int:
+        return self.num_tables * self.rows * self.dim * self.jnp_dtype.itemsize
+
+    def kernel_opts(self, interpret: bool = False) -> EmbeddingBagOpts:
+        return EmbeddingBagOpts(
+            prefetch_distance=self.prefetch_distance,
+            batch_block=self.batch_block,
+            num_hot=self.pinned_rows,
+            mode=self.combine,
+            interpret=interpret,
+        )
+
+
+class EmbeddingBagCollection:
+    """Functional module: init(rng) -> params; apply(params, indices) -> pooled."""
+
+    def __init__(self, cfg: EmbeddingStageConfig,
+                 plans: Optional[list[hot_cache.HotPlan]] = None):
+        self.cfg = cfg
+        # One plan per table; identity when pinning is off.
+        if plans is None:
+            plans = [hot_cache.identity_plan(cfg.rows, cfg.pinned_rows)
+                     for _ in range(cfg.num_tables)]
+        assert len(plans) == cfg.num_tables
+        self.plans = plans
+        # [T, R] stacked remap, applied to raw indices before lookup.
+        self._remap = (
+            np.stack([p.inv_perm for p in plans]).astype(np.int32)
+            if cfg.pinned_rows > 0 else None)
+
+    def init(self, rng: jax.Array) -> dict:
+        cfg = self.cfg
+        scale = 1.0 / np.sqrt(cfg.dim)
+        tables = jax.random.normal(
+            rng, (cfg.num_tables + cfg.shard_pad_tables, cfg.rows, cfg.dim),
+            cfg.jnp_dtype) * scale
+        if cfg.pinned_rows > 0:
+            # Store hot-first (offline, one-time — like the paper's pinning
+            # kernel launched before the embedding bag kernel).
+            perm = jnp.asarray(np.stack(
+                [p.perm for p in self.plans]
+                + [self.plans[0].perm] * cfg.shard_pad_tables))
+            tables = jax.vmap(lambda t, p: jnp.take(t, p, axis=0))(tables, perm)
+        return {"tables": tables}
+
+    def remap_indices(self, indices: jnp.ndarray) -> jnp.ndarray:
+        """Raw row ids -> hot-first ids. indices: [B, T, L]."""
+        if self._remap is None:
+            return indices
+        remap = jnp.asarray(self._remap)  # [T, R]
+        return jax.vmap(lambda r, idx: r[idx], in_axes=(0, 1), out_axes=1)(
+            remap, indices)
+
+    def apply(self, params: dict, indices: jnp.ndarray,
+              weights: jnp.ndarray | None = None, *,
+              pre_remapped: bool = False) -> jnp.ndarray:
+        """indices: [B, T, L] int32 -> pooled [B, T, D]."""
+        cfg = self.cfg
+        if not pre_remapped:
+            indices = self.remap_indices(indices)
+        tables = params["tables"]                      # [T(+pad), R, D]
+        idx_t = jnp.swapaxes(indices, 0, 1)            # [T, B, L]
+        w_t = None if weights is None else jnp.swapaxes(weights, 0, 1)
+        if cfg.shard_pad_tables:
+            pad = jnp.zeros((cfg.shard_pad_tables, *idx_t.shape[1:]),
+                            idx_t.dtype)
+            idx_t = jnp.concatenate([idx_t, pad], axis=0)
+            if w_t is not None:
+                w_t = jnp.concatenate(
+                    [w_t, jnp.zeros((cfg.shard_pad_tables, *w_t.shape[1:]),
+                                    w_t.dtype)], axis=0)
+
+        # Pin the table-parallel layout end to end: indices reshard to the
+        # table owners (small a2a), gathers stay local, only POOLED outputs
+        # travel back (EXPERIMENTS.md SPerf C1). Lazy import: models.dlrm
+        # imports this module (avoid the package-level cycle).
+        from repro.models import pspec
+        idx_t = pspec.constrain_tablewise(idx_t)
+        if w_t is not None:
+            w_t = pspec.constrain_tablewise(w_t)
+        if cfg.backend == "xla" or (cfg.backend == "auto"
+                                    and jax.default_backend() != "tpu"):
+            rows = jax.vmap(
+                lambda t, i: jnp.take(t, i, axis=0))(tables, idx_t)  # [T,B,L,D]
+            if w_t is not None:
+                rows = rows * w_t[..., None].astype(rows.dtype)
+            pooled = rows.sum(axis=2)
+            if cfg.combine == "mean":
+                pooled = pooled / cfg.pooling
+        else:
+            opts = self.cfg.kernel_opts(interpret=jax.default_backend() != "tpu")
+            def one(table, idx, w):
+                return embedding_bag(table, idx, w, mode=cfg.combine,
+                                     backend="pallas", opts=opts)
+            if w_t is None:
+                pooled = jax.vmap(lambda t, i: one(t, i, None))(tables, idx_t)
+            else:
+                pooled = jax.vmap(one)(tables, idx_t, w_t)
+        pooled = pspec.constrain_tablewise(pooled)     # [T(+pad), B, D]
+        pooled = jnp.swapaxes(pooled, 0, 1)            # [B, T(+pad), D]
+        if cfg.shard_pad_tables:
+            pooled = pooled[:, :cfg.num_tables]
+        return pooled

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (HETERO_MIXES, DLRMBatch, DLRMQueryStream,
+                                 TokenStream)

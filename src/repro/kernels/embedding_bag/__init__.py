@@ -1,0 +1,10 @@
+from .kernel import EmbeddingBagOpts, embedding_bag_pallas
+from .ops import embedding_bag, embedding_lookup
+from .ref import (embedding_bag_ragged_ref, embedding_bag_ref,
+                  embedding_lookup_ref)
+
+__all__ = [
+    "EmbeddingBagOpts", "embedding_bag_pallas", "embedding_bag",
+    "embedding_lookup", "embedding_bag_ref", "embedding_bag_ragged_ref",
+    "embedding_lookup_ref",
+]

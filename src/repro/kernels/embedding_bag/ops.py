@@ -1,0 +1,78 @@
+"""Public jit'd wrappers around the embedding-bag kernel.
+
+Backend selection:
+  * 'pallas'    — the TPU kernel (interpret=True automatically on CPU hosts,
+                  which executes the kernel body in Python for validation).
+  * 'xla'       — the pure-jnp reference (production baseline; what stock
+                  frameworks do — the paper's "off-the-shelf" analogue).
+  * 'auto'      — pallas on TPU, xla elsewhere.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import EmbeddingBagOpts, embedding_bag_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_batch(indices: jnp.ndarray, weights: jnp.ndarray | None, bb: int):
+    """Pad batch up to a multiple of batch_block with zero-weight dummy bags."""
+    batch = indices.shape[0]
+    pad = (-batch) % bb
+    if pad == 0:
+        return indices, weights, batch
+    idx_pad = jnp.zeros((pad, indices.shape[1]), indices.dtype)
+    indices = jnp.concatenate([indices, idx_pad], axis=0)
+    if weights is not None:
+        w_pad = jnp.zeros((pad, weights.shape[1]), weights.dtype)
+        weights = jnp.concatenate([weights, w_pad], axis=0)
+    return indices, weights, batch
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "backend", "opts"))
+def embedding_bag(table: jnp.ndarray, indices: jnp.ndarray,
+                  weights: jnp.ndarray | None = None, *, mode: str = "sum",
+                  backend: str = "auto",
+                  opts: EmbeddingBagOpts | None = None) -> jnp.ndarray:
+    """Fixed-pooling embedding bag: [R,D] x [B,L] -> [B,D].
+
+    When `opts.num_hot > 0` the caller is responsible for hot-first table
+    order + remapped indices (core.embedding.EmbeddingBagCollection does this).
+    """
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "xla"
+    if backend == "xla":
+        return ref.embedding_bag_ref(table, indices, weights, mode=mode)
+    if backend != "pallas":
+        raise ValueError(f"unknown backend {backend!r}")
+    opts = opts or EmbeddingBagOpts()
+    if opts.mode != mode:
+        opts = EmbeddingBagOpts(**{**opts.__dict__, "mode": mode})
+    if not _on_tpu() and not opts.interpret:
+        opts = EmbeddingBagOpts(**{**opts.__dict__, "interpret": True})
+    indices, weights, batch = _pad_batch(indices, weights, opts.batch_block)
+    out = embedding_bag_pallas(table, indices, weights, opts)
+    return out[:batch]
+
+
+def embedding_lookup(table: jnp.ndarray, token_ids: jnp.ndarray, *,
+                     backend: str = "auto",
+                     opts: EmbeddingBagOpts | None = None) -> jnp.ndarray:
+    """Plain gather (LM vocab embedding) as a pooling=1 bag.
+
+    token_ids: any int shape [...]; returns [..., D].
+    """
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "xla"
+    if backend == "xla":
+        return ref.embedding_lookup_ref(table, token_ids)
+    flat = token_ids.reshape(-1, 1)
+    out = embedding_bag(table, flat, mode="sum", backend=backend, opts=opts)
+    return out.reshape(*token_ids.shape, table.shape[1])

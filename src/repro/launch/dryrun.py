@@ -1,0 +1,154 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# This flag is set ONLY here (never in conftest/pyproject) — smoke tests and
+# benchmarks see the real single CPU device.
+
+import argparse      # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro import utils                                    # noqa: E402
+from repro.configs import LM_ARCHS, get_config              # noqa: E402
+from repro.launch.mesh import make_production_mesh          # noqa: E402
+from repro.launch.steps import (make_dlrm_serve_step,       # noqa: E402
+                                make_dlrm_train_step, make_step)
+from repro.models import model_flops                        # noqa: E402
+from repro.models.config import SHAPES, shapes_for          # noqa: E402
+from repro.roofline.analyze import HloCost, roofline_terms  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str = RESULTS_DIR) -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    tag = f"{arch}__{shape_name}__{mesh_name}"
+    path = os.path.join(out_dir, tag + ".json")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    num_chips = mesh.devices.size
+
+    t0 = time.time()
+    if arch == "dlrm-production":
+        cfg = get_config(arch)
+        bundle = (make_dlrm_train_step(cfg, mesh) if shape_name == "train"
+                  else make_dlrm_serve_step(cfg, mesh))
+        mf = 0.0
+    else:
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        if shape not in shapes_for(cfg):
+            rec = {"cell": tag, "status": "skipped",
+                   "reason": "long_500k needs sub-quadratic attention "
+                             "(DESIGN.md §Arch-applicability)"}
+            utils.write_json(path, rec)
+            return rec
+        bundle = make_step(cfg, shape, mesh)
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                       else 1)
+        mf = model_flops(cfg, tokens,
+                         "train" if shape.kind == "train" else "serve")
+
+    with mesh:
+        jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                         out_shardings=bundle.out_shardings,
+                         donate_argnums=bundle.donate_argnums)
+        lowered = jitted.lower(*bundle.inputs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    print(compiled.memory_analysis())   # proves it fits (per instructions)
+    xla_cost = dict(compiled.cost_analysis())
+    print({k: xla_cost.get(k) for k in ("flops", "bytes accessed")})
+    hlo = compiled.as_text()
+    terms = roofline_terms(hlo, num_chips=num_chips, xla_cost=xla_cost)
+
+    hbm = 16 * 2**30
+    # CPU-backend memory_analysis aggregates across all host "devices";
+    # normalize to per-chip (verified: argument_size == sum of global shards).
+    n_dev = max(1, len(jax.devices()))
+    per_dev_bytes = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                     - mem.alias_size_in_bytes
+                     + mem.temp_size_in_bytes) / n_dev
+    rec = {
+        "cell": tag, "status": "ok",
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "num_chips": num_chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "per_device_total": per_dev_bytes,
+            "fits_16GiB_HBM": bool(per_dev_bytes < hbm),
+        },
+        "roofline": terms,
+        "model_flops_global": mf,
+        "useful_flops_ratio": (mf / (terms["per_device_flops"] * num_chips)
+                               if terms["per_device_flops"] else 0.0),
+    }
+    utils.write_json(path, rec)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--include-dlrm", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args(argv)
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = []
+    if args.all:
+        for arch in LM_ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+        if args.include_dlrm:
+            cells += [("dlrm-production", "serve"),
+                      ("dlrm-production", "train")]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch/--shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+            try:
+                rec = run_cell(arch, shape, mp, args.out)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" dom={r['dominant']}"
+                             f" comp={r['compute_s']:.2e}s"
+                             f" mem={r['memory_s']:.2e}s"
+                             f" coll={r['collective_s']:.2e}s"
+                             f" fits={rec['memory']['fits_16GiB_HBM']}")
+                print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+            except Exception:
+                failures += 1
+                print(f"[dryrun] {tag}: FAILED", flush=True)
+                traceback.print_exc()
+                utils.write_json(os.path.join(args.out, tag + ".json"),
+                                 {"cell": tag, "status": "failed",
+                                  "error": traceback.format_exc()[-2000:]})
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

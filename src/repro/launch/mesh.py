@@ -1,0 +1,47 @@
+"""Production mesh construction.
+
+Single pod: 16x16 = 256 chips, axes (data, model).
+Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model) — the `pod` axis is
+pure data parallelism across pods (gradient all-reduce crosses the
+inter-pod links; everything else stays intra-pod).
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD = (16, 16)
+MULTI_POD = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — the "
+            "dry-run entrypoint must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before any "
+            "jax import (see launch/dryrun.py)")
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for subprocess tests (device count forced by the caller)."""
+    import numpy as np
+    n = int(np.prod(shape))
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:n]).reshape(shape), axes)
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The data-parallel axes of a production mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

@@ -1,0 +1,213 @@
+"""Path-rule-based parameter/activation sharding.
+
+Strategy (DESIGN.md §5): Megatron-style TP over `model` for attention heads,
+FFN hidden, expert and vocab dims, combined with FSDP-style sharding of the
+remaining large dim over the data-parallel axes (`pod`,`data`) so optimizer
+state and parameters fit HBM at 398B scale. XLA/GSPMD inserts the FSDP
+all-gathers at use sites (per scan group == per layer-group, the ZeRO-3
+schedule).
+
+Every rule checks divisibility and degrades to replication on mismatch (e.g.
+whisper's odd 51865 vocab).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+
+
+def _div(n: int, mesh, axes) -> bool:
+    if not axes:
+        return False
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return n % size == 0 and n >= size
+
+
+def _axis(mesh, n: int, *prefs):
+    """First preference (tuple of axis names) that divides n; else None."""
+    for p in prefs:
+        p = tuple(a for a in p if a in mesh.shape)
+        if p and _div(n, mesh, p):
+            return p if len(p) > 1 else p[0]
+    return None
+
+
+def _key_names(path) -> list[str]:
+    names = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            names.append(str(k.name))      # NamedTuple fields (KVCache.k)
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            names.append(f"[{k.idx}]")
+        else:
+            names.append(str(k))
+    return names
+
+
+# (param-name, rule) where rule maps (shape, mesh, dp, stacked) -> P
+def _rule_for(name: str, names: list[str], shape, mesh, dp,
+              untied: bool = False) -> P:
+    d = shape  # alias
+
+    def col():   # [in, out*]: TP on cols, FSDP on rows
+        return P(_axis(mesh, d[0], dp), _axis(mesh, d[1], ("model",)))
+
+    def row():   # [in*, out]: TP on rows, FSDP on cols
+        return P(_axis(mesh, d[0], ("model",)), _axis(mesh, d[1], dp))
+
+    if name in ("embed", "dec_embed"):   # [V, d]
+        if untied and name == "embed":
+            # untied: only the token gather touches this table; sharding d
+            # keeps gathers local (V-sharding forces masked gather + a
+            # [B,S,d] all-reduce — measured in §Perf B2). FSDP over dp on V.
+            return P(_axis(mesh, d[0], dp), _axis(mesh, d[1], ("model",)))
+        return P(_axis(mesh, d[0], ("model",)),
+                 _axis(mesh, d[1], dp))
+    if name == "lm_head":                # [d, V]
+        return P(_axis(mesh, d[0], dp), _axis(mesh, d[1], ("model",)))
+    if name in ("enc_pos", "dec_pos"):
+        return P(None, _axis(mesh, d[1], ("model",)))
+    if name in ("wq", "wk", "wv", "w_r", "w_k", "w_v", "w_g", "in_x", "in_z",
+                "dt_proj", "wi", "wg", "w_lora_a", "cm_k", "cm_r"):
+        return col()
+    # (B2b refuted: replicating cm_r fused a second [B,S,d] into the layer
+    # all-reduce tuple — col-sharding it is strictly better; see §Perf.)
+    if name in ("wo", "w_o", "out_proj", "x_proj", "w_lora_b", "cm_v"):
+        return row()
+    if name in ("k_up", "v_up"):         # [lora, H*dim]
+        return col()
+    if name in ("w_dkv", "w_kr", "router"):
+        return P(_axis(mesh, d[0], dp), None)
+    if name == "conv_w":                 # [cd, di]
+        return P(None, _axis(mesh, d[1], ("model",)))
+    if name in ("conv_b", "dt_bias", "D", "ln_x"):
+        return P(_axis(mesh, d[0], ("model",)))
+    if name == "A_log":                  # [di, st]
+        return P(_axis(mesh, d[0], ("model",)), None)
+    if name == "u":                      # [H, dh]
+        return P(_axis(mesh, d[0], ("model",)), None)
+    if name == "tables":                 # DLRM [T, R, D]
+        # best: whole tables spread over ALL chips (a2a plan, zero masked
+        # gathers); then table-wise over TP only; then row-wise fallback.
+        t_ax = _axis(mesh, d[0], ("model", "data"), ("model",))
+        if t_ax:
+            return P(t_ax, None, None)
+        return P(None, _axis(mesh, d[1], ("model",)), None)
+    if len(shape) >= 2 and names and "moe" not in names:
+        # DLRM towers & misc 2D: FSDP rows only
+        return P(_axis(mesh, d[0], dp))
+    return P()  # norms, scalars, biases: replicated
+
+
+def _spec_one(path, leaf, mesh, dp, *, untied: bool = False) -> P:
+    names = _key_names(path)
+    name = names[-1]
+    shape = tuple(leaf.shape)
+    stacked_group = "groups" in names or names[0] in ("enc", "dec")
+    stacked_expert = (name in ("wi", "wg", "wo") and len(shape) - int(
+        stacked_group) == 3)
+    inner = shape
+    if stacked_group:
+        inner = shape[1:]
+    if stacked_expert:
+        # MoE experts [E, d, f]: experts over model, d over FSDP axes.
+        e_ax = _axis(mesh, inner[0], ("model",))
+        spec = P(e_ax, _axis(mesh, inner[1], dp), None)
+    else:
+        spec = _rule_for(name, names, inner, mesh, dp, untied=untied)
+    if stacked_group:
+        spec = P(None, *spec)
+    return spec
+
+
+def param_specs(params_tree: Any, mesh) -> Any:
+    """PartitionSpec tree matching a params pytree (of arrays or SDS)."""
+    from repro.models import pspec as _pspec
+    if _pspec.parallel_mode() == "fsdp_only":
+        all_ax = _pspec.all_axes(mesh)
+
+        def fsdp_rule(path, leaf):
+            names = _key_names(path)
+            name = names[-1]
+            shape = tuple(leaf.shape)
+            stacked = "groups" in names or (names and names[0] in
+                                            ("enc", "dec"))
+            inner = shape[1:] if stacked else shape
+            spec = [None] * len(inner)
+            if name in ("embed", "dec_embed", "lm_head") and len(inner) == 2:
+                # keep the gather/unembed dim whole: shard d (embed) / V
+                # (lm_head) — a vocab-sharded embed would force masked
+                # gathers + a full activation all-reduce.
+                spec[1] = _axis(mesh, inner[1], all_ax)
+            else:
+                # shard the largest divisible dim across ALL axes (ZeRO-3)
+                order = sorted(range(len(inner)), key=lambda i: -inner[i])
+                for i in order:
+                    ax = _axis(mesh, inner[i], all_ax)
+                    if ax is not None:
+                        spec[i] = ax
+                        break
+            out = P(*spec)
+            return P(None, *out) if stacked else out
+
+        return jax.tree_util.tree_map_with_path(fsdp_rule, params_tree)
+    dp = (dp_axes(mesh),)
+    untied = isinstance(params_tree, dict) and "lm_head" in params_tree
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _spec_one(p, l, mesh, dp[0], untied=untied),
+        params_tree)
+
+
+def cache_specs(cache_tree: Any, mesh) -> Any:
+    """KV/state cache shardings: batch over dp, heads/channels over model,
+    sequence over data as fallback (long_500k, batch=1)."""
+    dp = dp_axes(mesh)
+
+    from repro.models import pspec as _pspec
+
+    def one(path, leaf):
+        names = _key_names(path)
+        shape = tuple(leaf.shape)
+        stacked = "groups" in names or "self_kv" in names
+        inner = shape[1:] if stacked else shape
+        spec_l: list = [None] * len(inner)
+        spec_l[0] = _axis(mesh, inner[0], dp)
+        out = P(*spec_l)
+        if len(inner) >= 3 and names[-1] in ("k", "v"):      # [B,S,KV,hd]
+            out = _pspec.kv_cache_spec(mesh, inner)          # THE rule
+        elif names[-1] in ("ckv", "krope"):                   # MLA [B,S,dim]
+            out = _pspec.mla_cache_spec(mesh, inner)
+        elif names[-1] == "h":                                # mamba [B,di,st]
+            spec_l[1] = _axis(mesh, inner[1], ("model",))
+            out = P(*spec_l)
+        elif names[-1] == "conv":                             # [B,cd-1,di]
+            spec_l[2] = _axis(mesh, inner[2], ("model",))
+            out = P(*spec_l)
+        elif names[-1] == "wkv":                              # [B,H,dh,dh]
+            spec_l[1] = _axis(mesh, inner[1], ("model",))
+            out = P(*spec_l)
+        elif names[-1] in ("shift_t", "shift_c"):             # [B,d]
+            spec_l[1] = _axis(mesh, inner[1], ("model",))
+            out = P(*spec_l)
+        if stacked:
+            out = P(None, *out)
+        return out
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def to_named(spec_tree: Any, mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh) -> P:
+    return P(dp_axes(mesh))

@@ -1,0 +1,310 @@
+"""Step functions + abstract input specs for every (arch x shape) cell.
+
+`make_step(cfg, shape, mesh)` returns (fn, example_inputs, in_shardings,
+out_shardings, donate) ready for `jax.jit(...).lower(...)` — used by both the
+dry-run and the real launchers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+from repro.launch.sharding import (batch_spec, cache_specs, param_specs,
+                                   to_named)
+from repro.models import build_model
+from repro.models import pspec
+from repro.models.config import ModelConfig, ShapeConfig
+
+
+def pick_parallel_mode(cfg: ModelConfig, shape: ShapeConfig, mesh) -> str:
+    """fsdp_only when the whole-mesh batch divides AND the model is too
+    narrow to feed 16-way TP (skinny matmuls + dominant activation ARs —
+    measured in EXPERIMENTS.md §Perf A2). MoE archs keep TP (EP needs the
+    model axis)."""
+    import numpy as np
+    chips = int(np.prod(list(mesh.shape.values())))
+    tokens_ok = shape.kind == "train" and shape.global_batch % chips == 0
+    narrow = cfg.d_model <= 3072 and not cfg.moe_num_experts
+    return "fsdp_only" if (tokens_ok and narrow) else "tp_fsdp"
+from repro.optim.optimizers import adamw_lowmem_init, adamw_lowmem_update
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class StepBundle:
+    name: str
+    fn: Any                  # callable(*inputs)
+    inputs: Any              # tree of ShapeDtypeStruct
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple[int, ...] = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+def _bs(mesh, *trailing, batch: int | None = None):
+    """Batch-sharded output; degrades to replicated when B doesn't divide."""
+    ax = dp_axes(mesh)
+    if batch is not None:
+        ax = pspec.batch_axes(mesh, batch)
+    return NamedSharding(mesh, P(ax, *trailing))
+
+
+def _repl(mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# LM steps
+# ---------------------------------------------------------------------------
+
+def lm_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    model = build_model(cfg)
+    out: dict[str, Any] = {}
+    if cfg.is_encoder_decoder:
+        if shape.kind in ("train", "prefill"):
+            out["frames"] = SDS((b, s, cfg.d_model), jnp.float32)
+            out["tokens"] = SDS((b, cfg.decoder_text_len), jnp.int32)
+            if shape.kind == "train":
+                out["labels"] = SDS((b, cfg.decoder_text_len), jnp.int32)
+        else:  # decode: decoder step against self cache + encoder output
+            out["token"] = SDS((b, 1), jnp.int32)
+            out["enc_out"] = SDS((b, cfg.encoder_seq_len, cfg.d_model),
+                                 cfg.jnp_dtype)
+            out["cache"] = jax.eval_shape(
+                lambda: model.init_cache(b, s))
+            out["cache_pos"] = SDS((), jnp.int32)
+        return out
+    if shape.kind == "train":
+        out["tokens"] = SDS((b, s), jnp.int32)
+        out["labels"] = SDS((b, s), jnp.int32)
+    elif shape.kind == "prefill":
+        out["tokens"] = SDS((b, s), jnp.int32)
+        out["cache"] = jax.eval_shape(lambda: model.init_cache(b, s))
+    else:  # decode
+        out["token"] = SDS((b, 1), jnp.int32)
+        out["cache"] = jax.eval_shape(lambda: model.init_cache(b, s))
+        out["cache_pos"] = SDS((), jnp.int32)
+    if cfg.vision_prefix_tokens and shape.kind in ("train", "prefill"):
+        out["vision_embeds"] = SDS(
+            (b, cfg.vision_prefix_tokens, cfg.d_model), jnp.float32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict:
+    """NamedShardings for lm_inputs."""
+    inputs = lm_inputs(cfg, shape, mesh)
+    specs: dict[str, Any] = {}
+    for k, v in inputs.items():
+        if k in ("tokens", "labels", "token", "frames", "vision_embeds",
+                 "enc_out"):
+            bspec = batch_spec(mesh)
+            if v.shape[0] % max(1, np.prod([mesh.shape[a] for a in
+                                            dp_axes(mesh)])) != 0:
+                bspec = P()
+            specs[k] = NamedSharding(mesh, P(*bspec) if isinstance(bspec, P)
+                                     else P(bspec))
+        elif k == "cache":
+            specs[k] = to_named(cache_specs(v, mesh), mesh)
+        elif k == "cache_pos":
+            specs[k] = _repl(mesh)
+    return specs
+
+
+def make_lm_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                       with_optimizer: bool = True,
+                       parallel_mode: str | None = None) -> StepBundle:
+    mode = parallel_mode or pick_parallel_mode(cfg, shape, mesh)
+    pspec.set_parallel_mode(mode)
+    model = build_model(cfg)
+    abstract = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = param_specs(abstract, mesh)
+    p_shard = to_named(pspecs, mesh)
+    inputs = lm_inputs(cfg, shape, mesh)
+    ispecs = input_specs(cfg, shape, mesh)
+    opt_abstract = jax.eval_shape(adamw_lowmem_init, abstract)
+    opt_shard = to_named(param_specs_like(opt_abstract, pspecs), mesh)
+
+    if cfg.is_encoder_decoder:
+        def loss_fn(params, batch):
+            return model.loss(params, batch["frames"], batch["tokens"],
+                              batch["labels"])
+    else:
+        def loss_fn(params, batch):
+            return model.loss(params, batch["tokens"], batch["labels"],
+                              vision_embeds=batch.get("vision_embeds"),
+                              mesh=mesh, remat=True, vocab_chunk=512)
+
+    if with_optimizer:
+        def step(params, opt, batch):
+            pspec.set_parallel_mode(mode)
+            with pspec.use_mesh(mesh):
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+                params, opt = adamw_lowmem_update(params, grads, opt, lr=1e-4)
+            return loss, params, opt
+
+        fn_inputs = (abstract, opt_abstract, inputs)
+        in_sh = (p_shard, opt_shard, ispecs)
+        out_sh = (_repl(mesh), p_shard, opt_shard)
+        donate = (0, 1)
+    else:
+        def step(params, batch):
+            with pspec.use_mesh(mesh):
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            return loss, grads
+
+        fn_inputs = (abstract, inputs)
+        in_sh = (p_shard, ispecs)
+        out_sh = (_repl(mesh), p_shard)
+        donate = ()
+    return StepBundle(name=f"{cfg.name}:{shape.name}:train", fn=step,
+                      inputs=fn_inputs, in_shardings=in_sh,
+                      out_shardings=out_sh, donate_argnums=donate,
+                      meta={"kind": "train"})
+
+
+def make_lm_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh) -> StepBundle:
+    pspec.set_parallel_mode("tp_fsdp")
+    model = build_model(cfg)
+    abstract = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_shard = to_named(param_specs(abstract, mesh), mesh)
+    inputs = lm_inputs(cfg, shape, mesh)
+    ispecs = input_specs(cfg, shape, mesh)
+
+    if shape.kind == "prefill":
+        if cfg.is_encoder_decoder:
+            def step(params, batch):
+                with pspec.use_mesh(mesh):
+                    enc = model.encode(params, batch["frames"])
+                    logits, _ = model.decode(params, batch["tokens"], enc)
+                return logits[:, -1:]
+            fn_inputs = (abstract, {k: inputs[k] for k in ("frames", "tokens")})
+            in_sh = (p_shard, {k: ispecs[k] for k in ("frames", "tokens")})
+            return StepBundle(name=f"{cfg.name}:{shape.name}:prefill",
+                              fn=step, inputs=fn_inputs, in_shardings=in_sh,
+                              out_shardings=_bs(mesh, None, None, batch=shape.global_batch),
+                              meta={"kind": "prefill"})
+
+        def step(params, batch):
+            with pspec.use_mesh(mesh):
+                logits, cache = model.prefill(
+                    params, batch["tokens"], batch["cache"],
+                    vision_embeds=batch.get("vision_embeds"), mesh=mesh)
+            return logits, cache
+        fn_inputs = (abstract, inputs)
+        in_sh = (p_shard, ispecs)
+        out_sh = (_bs(mesh, None, None, batch=shape.global_batch), ispecs["cache"])
+        return StepBundle(name=f"{cfg.name}:{shape.name}:prefill", fn=step,
+                          inputs=fn_inputs, in_shardings=in_sh,
+                          out_shardings=out_sh, donate_argnums=(1,),
+                          meta={"kind": "prefill"})
+
+    # decode
+    if cfg.is_encoder_decoder:
+        def step(params, batch):
+            with pspec.use_mesh(mesh):
+                logits, cache = model.decode(
+                    params, batch["token"], batch["enc_out"],
+                    cache=batch["cache"], cache_pos=batch["cache_pos"])
+            return logits, cache
+    else:
+        def step(params, batch):
+            with pspec.use_mesh(mesh):
+                logits, cache = model.decode_step(
+                    params, batch["token"], batch["cache"],
+                    batch["cache_pos"], mesh=mesh)
+            return logits, cache
+    fn_inputs = (abstract, inputs)
+    in_sh = (p_shard, ispecs)
+    out_sh = (_bs(mesh, None, None, batch=shape.global_batch), ispecs["cache"])
+    return StepBundle(name=f"{cfg.name}:{shape.name}:decode", fn=step,
+                      inputs=fn_inputs, in_shardings=in_sh,
+                      out_shardings=out_sh, donate_argnums=(1,),
+                      meta={"kind": "decode"})
+
+
+def param_specs_like(opt_tree, pspecs):
+    """Optimizer state mirrors parameter sharding (m/v/master per param)."""
+    out = {"count": P()}
+    for k in ("m", "v", "master", "mom", "acc"):
+        if k in opt_tree:
+            if k == "acc":  # row-wise adagrad: param spec minus last dim
+                out[k] = jax.tree.map(lambda s: P(*s[:-1]), pspecs,
+                                      is_leaf=lambda x: isinstance(x, P))
+            else:
+                out[k] = pspecs
+    if "count" not in opt_tree:
+        out.pop("count")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# DLRM steps (the paper's workload; extra cells beyond the 40-cell grid)
+# ---------------------------------------------------------------------------
+
+def make_dlrm_serve_step(dlrm_cfg, mesh, batch: int = 2048) -> StepBundle:
+    from repro.models.dlrm import DLRM
+    model = DLRM(dlrm_cfg)
+    abstract = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_shard = to_named(param_specs(abstract, mesh), mesh)
+    e = dlrm_cfg.embedding
+    inputs = {
+        "dense": SDS((batch, dlrm_cfg.dense_features), jnp.float32),
+        "indices": SDS((batch, e.num_tables, e.pooling), jnp.int32),
+    }
+    ispecs = {"dense": _bs(mesh, None), "indices": _bs(mesh, None, None)}
+
+    def step(params, batch_in):
+        with pspec.use_mesh(mesh):
+            return model.forward(params, batch_in["dense"],
+                                 batch_in["indices"])
+
+    return StepBundle(name="dlrm-production:serve", fn=step,
+                      inputs=(abstract, inputs), in_shardings=(p_shard, ispecs),
+                      out_shardings=_bs(mesh),
+                      meta={"kind": "serve"})
+
+
+def make_dlrm_train_step(dlrm_cfg, mesh, batch: int = 2048) -> StepBundle:
+    from repro.models.dlrm import DLRM
+    model = DLRM(dlrm_cfg)
+    abstract = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = param_specs(abstract, mesh)
+    p_shard = to_named(pspecs, mesh)
+    e = dlrm_cfg.embedding
+    inputs = {
+        "dense": SDS((batch, dlrm_cfg.dense_features), jnp.float32),
+        "indices": SDS((batch, e.num_tables, e.pooling), jnp.int32),
+        "labels": SDS((batch,), jnp.float32),
+    }
+    ispecs = {"dense": _bs(mesh, None), "indices": _bs(mesh, None, None),
+              "labels": _bs(mesh)}
+
+    def step(params, batch_in):
+        with pspec.use_mesh(mesh):
+            loss, grads = jax.value_and_grad(model.loss)(
+                params, batch_in["dense"], batch_in["indices"],
+                batch_in["labels"])
+            # plain SGD on the fused step (row-wise adagrad lives in optim/)
+            params = jax.tree.map(lambda p, g: p - 0.01 * g, params, grads)
+        return loss, params
+
+    return StepBundle(name="dlrm-production:train", fn=step,
+                      inputs=(abstract, inputs), in_shardings=(p_shard, ispecs),
+                      out_shardings=(_repl(mesh), p_shard),
+                      donate_argnums=(0,), meta={"kind": "train"})
+
+
+def make_step(cfg, shape: ShapeConfig, mesh) -> StepBundle:
+    if shape.kind == "train":
+        return make_lm_train_step(cfg, shape, mesh)
+    return make_lm_serve_step(cfg, shape, mesh)

@@ -1,0 +1,233 @@
+"""Attention variants: GQA (RoPE, optional sliding window) and MLA (DeepSeek).
+
+Prefill/train use a chunked online-softmax attention (lax.scan over KV chunks)
+so 32K-token prefill never materializes an [S, S] score matrix. Decode attends
+one query against the KV cache directly through the same path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import pspec
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # [B, S_max, KV, hd]
+    v: jnp.ndarray
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      q_offset=0, kv_len=None, chunk: int = 512):
+    """Online-softmax attention, O(chunk) score memory.
+
+    q: [B, Sq, KV, G, hd_qk]   (G = query heads per KV group)
+    k: [B, Skv, KV, hd_qk];  v: [B, Skv, KV, hd_v]
+    q_offset: scalar position of q[0] (decode: cache write position)
+    window: >0 => only attend to kpos in (qpos-window, qpos]
+    kv_len: optional scalar; kpos >= kv_len masked out (decode w/ cache)
+    """
+    b, sq, nkv, g, hd = q.shape
+    hd_v = v.shape[-1]
+    skv = k.shape[1]
+
+    qpos = q_offset + jnp.arange(sq)                       # [Sq]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qf = q.astype(jnp.float32) * scale
+
+    if sq == 1:
+        # Decode fast path: one query against the whole cache, no chunk scan.
+        # With the KV sequence sharded over `model` this is sequence-parallel
+        # flash-decode: local partial scores+AV, small cross-shard softmax
+        # reductions (GSPMD inserts them from the shardings).
+        s = jnp.einsum("bqkgh,bskh->bqkgs", qf.astype(k.dtype), k,
+                       preferred_element_type=jnp.float32)
+        s = pspec.constrain_scores(s, k.shape)
+        kpos = jnp.arange(skv)
+        mask = kpos < (kv_len if kv_len is not None else skv)
+        if causal:
+            mask &= kpos <= qpos[0]
+        if window > 0:
+            mask &= kpos > qpos[0] - window
+        s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+        p = pspec.constrain_scores(jax.nn.softmax(s, axis=-1), k.shape)
+        out = jnp.einsum("bqkgs,bskh->bqkgh", p.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out.astype(q.dtype)
+
+    chunk = min(chunk, skv)
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, chunk, nkv, hd)
+    vc = v.reshape(b, n_chunks, chunk, nkv, hd_v)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        ci, k_i, v_i = inputs
+        kpos = ci * chunk + jnp.arange(chunk)              # [Ck]
+        s = jnp.einsum("bqkgh,bckh->bqkgc", qf.astype(k_i.dtype), k_i,
+                       preferred_element_type=jnp.float32)
+        mask = jnp.broadcast_to((kpos < skv)[None, :], (sq, chunk))
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        if kv_len is not None:
+            mask &= kpos[None, :] < kv_len
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1, keepdims=True)
+        acc = acc * corr + jnp.einsum(
+            "bqkgc,bckh->bqkgh", p.astype(v_i.dtype), v_i,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    init = (jnp.full((b, sq, nkv, g, 1), NEG_INF, jnp.float32),
+            jnp.zeros((b, sq, nkv, g, 1), jnp.float32),
+            jnp.zeros((b, sq, nkv, g, hd_v), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        step, init,
+        (jnp.arange(n_chunks), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0)))
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+def gqa_init(rng, cfg: ModelConfig, *, kv_heads: Optional[int] = None) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    nh = cfg.num_heads
+    nkv = kv_heads if kv_heads is not None else cfg.num_kv_heads
+    ks = jax.random.split(rng, 4)
+    dt = cfg.jnp_dtype
+    return {"wq": dense_init(ks[0], (d, nh * hd), dt),
+            "wk": dense_init(ks[1], (d, nkv * hd), dt),
+            "wv": dense_init(ks[2], (d, nkv * hd), dt),
+            "wo": dense_init(ks[3], (nh * hd, d), dt)}
+
+
+def gqa_apply(params: dict, cfg: ModelConfig, x: jnp.ndarray, *,
+              positions: jnp.ndarray, window: int = 0, causal: bool = True,
+              cache: Optional[KVCache] = None, cache_pos=None,
+              cross_kv: Optional[tuple] = None, use_rope: bool = True):
+    """x: [B, S, d]; positions: [S] (traced ok) -> ([B, S, d], new_cache)."""
+    b, s, d = x.shape
+    nh, hd = cfg.num_heads, cfg.hd
+    nkv = params["wk"].shape[1] // hd
+    g = nh // nkv
+
+    q = (x @ params["wq"]).reshape(b, s, nh, hd)
+    if cross_kv is None:
+        k = (x @ params["wk"]).reshape(b, s, nkv, hd)
+        v = (x @ params["wv"]).reshape(b, s, nkv, hd)
+        if use_rope:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = cross_kv
+        if k.shape[2] != nkv:  # cross-attn kv heads follow the provided kv
+            nkv = k.shape[2]
+            g = nh // nkv
+
+    new_cache = None
+    kv_len = None
+    q_offset = positions[0]
+    if cache is not None and cross_kv is None:
+        k_all = pspec.constrain_kv(jax.lax.dynamic_update_slice(
+            pspec.constrain_kv(cache.k), k.astype(cache.k.dtype),
+            (0, cache_pos, 0, 0)))
+        v_all = pspec.constrain_kv(jax.lax.dynamic_update_slice(
+            pspec.constrain_kv(cache.v), v.astype(cache.v.dtype),
+            (0, cache_pos, 0, 0)))
+        new_cache = KVCache(k_all, v_all)
+        k, v = k_all, v_all
+        kv_len = cache_pos + s
+
+    qg = q.reshape(b, s, nkv, g, hd)
+    out = chunked_attention(qg, k, v, causal=causal and cross_kv is None,
+                            window=window, q_offset=q_offset, kv_len=kv_len)
+    out = out.reshape(b, s, nh * hd)
+    return out @ params["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): compressed-KV multi-head latent attention
+# ---------------------------------------------------------------------------
+
+class MLACache(NamedTuple):
+    ckv: jnp.ndarray    # [B, S_max, kv_lora]
+    krope: jnp.ndarray  # [B, S_max, qk_rope_dim]
+
+
+def mla_init(rng, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    nh = cfg.num_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(rng, 6)
+    dt = cfg.jnp_dtype
+    return {
+        "wq": dense_init(ks[0], (d, nh * qk), dt),
+        "w_dkv": dense_init(ks[1], (d, cfg.kv_lora_rank), dt),
+        "w_kr": dense_init(ks[2], (d, cfg.qk_rope_dim), dt),
+        "k_up": dense_init(ks[3], (cfg.kv_lora_rank, nh * cfg.qk_nope_dim), dt),
+        "v_up": dense_init(ks[4], (cfg.kv_lora_rank, nh * cfg.v_head_dim), dt),
+        "wo": dense_init(ks[5], (nh * cfg.v_head_dim, d), dt),
+    }
+
+
+def mla_apply(params: dict, cfg: ModelConfig, x: jnp.ndarray, *,
+              positions: jnp.ndarray, cache: Optional[MLACache] = None,
+              cache_pos=None):
+    b, s, d = x.shape
+    nh = cfg.num_heads
+    nope, rope_d, vh = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+
+    q = (x @ params["wq"]).reshape(b, s, nh, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = x @ params["w_dkv"]                                   # [B, S, lora]
+    krope = apply_rope((x @ params["w_kr"])[:, :, None, :],
+                       positions, cfg.rope_theta)[:, :, 0, :]   # [B, S, rope]
+
+    new_cache = None
+    kv_len = None
+    q_offset = positions[0]
+    if cache is not None:
+        ckv_all = pspec.constrain_mla(jax.lax.dynamic_update_slice(
+            pspec.constrain_mla(cache.ckv), ckv.astype(cache.ckv.dtype),
+            (0, cache_pos, 0)))
+        kr_all = pspec.constrain_mla(jax.lax.dynamic_update_slice(
+            pspec.constrain_mla(cache.krope), krope.astype(cache.krope.dtype),
+            (0, cache_pos, 0)))
+        new_cache = MLACache(ckv_all, kr_all)
+        ckv, krope = ckv_all, kr_all
+        kv_len = cache_pos + s
+
+    skv = ckv.shape[1]
+    # Up-project the compressed cache (the absorbed-matmul decode variant is a
+    # recorded §Perf iteration; this is the faithful materializing form).
+    k_nope = (ckv @ params["k_up"]).reshape(b, skv, nh, nope)
+    v = (ckv @ params["v_up"]).reshape(b, skv, nh, vh)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope[:, :, None, :], (b, skv, nh, rope_d))],
+        axis=-1)
+    qh = jnp.concatenate([q_nope, q_rope], axis=-1)             # [B,S,H,qk]
+
+    out = chunked_attention(qh[:, :, :, None, :], k, v, causal=True,
+                            q_offset=q_offset, kv_len=kv_len)
+    out = out.reshape(b, s, nh * vh)
+    return out @ params["wo"], new_cache

@@ -1,0 +1,92 @@
+"""DLRM (Naumov et al.) — the paper's model (§II-A, Fig. 2; config from §V).
+
+Stages: Bottom MLP (continuous features) | Embedding stage (categorical) |
+Feature interaction (pairwise dot product) | Top MLP -> CTR logit.
+
+The embedding stage is an EmbeddingBagCollection (core/embedding.py) — the
+paper's technique (prefetch-pipelined, VMEM-pinned gather kernel) plugs in
+through its EmbeddingStageConfig.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.embedding import EmbeddingBagCollection, EmbeddingStageConfig
+from repro.models.layers import mlp_tower_apply, mlp_tower_init
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    # paper §V defaults
+    dense_features: int = 13
+    bottom_mlp: tuple[int, ...] = (1024, 512, 128, 128)
+    top_mlp: tuple[int, ...] = (128, 64, 1)
+    embedding: EmbeddingStageConfig = EmbeddingStageConfig()
+    interaction: str = "dot"      # dot | cat
+    dtype: str = "float32"
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def interaction_dim(self) -> int:
+        t = self.embedding.num_tables + 1      # +1: bottom MLP output
+        if self.interaction == "dot":
+            return self.bottom_mlp[-1] + t * (t - 1) // 2
+        return self.bottom_mlp[-1] * t
+
+
+class DLRM:
+    def __init__(self, cfg: DLRMConfig, plans=None):
+        assert cfg.bottom_mlp[-1] == cfg.embedding.dim, \
+            "bottom MLP output must match embedding dim for dot interaction"
+        self.cfg = cfg
+        self.ebc = EmbeddingBagCollection(cfg.embedding, plans)
+
+    def init(self, rng: jax.Array) -> dict:
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(rng, 3)
+        return {
+            "bottom": mlp_tower_init(
+                k1, (cfg.dense_features, *cfg.bottom_mlp), cfg.jnp_dtype),
+            "embedding": self.ebc.init(k2),
+            "top": mlp_tower_init(
+                k3, (self.cfg.interaction_dim(), *cfg.top_mlp), cfg.jnp_dtype),
+        }
+
+    def _interact(self, bottom_out: jnp.ndarray, pooled: jnp.ndarray):
+        """bottom_out: [B, D]; pooled: [B, T, D] -> interaction features."""
+        cfg = self.cfg
+        feats = jnp.concatenate([bottom_out[:, None, :], pooled], axis=1)
+        if cfg.interaction == "dot":
+            gram = jnp.einsum("btd,bsd->bts", feats, feats)  # [B, T+1, T+1]
+            t = feats.shape[1]
+            iu, ju = jnp.triu_indices(t, k=1)
+            pairs = gram[:, iu, ju]                          # [B, C(T+1,2)]
+            return jnp.concatenate([bottom_out, pairs], axis=1)
+        b = feats.shape[0]
+        return feats.reshape(b, -1)
+
+    def forward(self, params: dict, dense: jnp.ndarray,
+                sparse_indices: jnp.ndarray,
+                sparse_weights: jnp.ndarray | None = None) -> jnp.ndarray:
+        """dense: [B, F]; sparse_indices: [B, T, L] -> CTR logits [B]."""
+        bottom = mlp_tower_apply(params["bottom"], dense, final_act=True)
+        pooled = self.ebc.apply(params["embedding"], sparse_indices,
+                                sparse_weights)
+        z = self._interact(bottom, pooled.astype(bottom.dtype))
+        logit = mlp_tower_apply(params["top"], z)
+        return logit[:, 0]
+
+    def embedding_only(self, params: dict, sparse_indices: jnp.ndarray):
+        """Embedding stage in isolation (paper's embedding-only latency)."""
+        return self.ebc.apply(params["embedding"], sparse_indices)
+
+    def loss(self, params, dense, sparse_indices, labels):
+        logit = self.forward(params, dense, sparse_indices)
+        return jnp.mean(
+            jnp.maximum(logit, 0) - logit * labels
+            + jnp.log1p(jnp.exp(-jnp.abs(logit))))  # stable BCE-with-logits

@@ -1,0 +1,187 @@
+"""Whisper-style encoder-decoder (audio frontend is a stub per assignment:
+`input_specs()` provides precomputed conv-frontend frame embeddings).
+
+Encoder: bidirectional self-attention blocks over [B, S_audio, d] frames.
+Decoder: causal self-attention (KV-cached) + cross-attention to the encoder
+output (cross-KV computed once at prefill and cached).
+
+Whisper uses absolute positions (no RoPE): learned position embeddings on
+both sides.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import KVCache, chunked_attention, gqa_apply, gqa_init
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, ffn_apply, ffn_init, layer_norm
+
+
+class WhisperCache(NamedTuple):
+    self_kv: Any      # stacked per-decoder-group KVCache
+    cross_kv: Any     # stacked per-decoder-group (k, v) from encoder output
+
+
+def _block_init(rng, cfg: ModelConfig, *, cross: bool) -> dict:
+    ks = jax.random.split(rng, 3)
+    d = cfg.d_model
+    p = {
+        "norm1_w": jnp.ones((d,), jnp.float32),
+        "norm1_b": jnp.zeros((d,), jnp.float32),
+        "norm2_w": jnp.ones((d,), jnp.float32),
+        "norm2_b": jnp.zeros((d,), jnp.float32),
+        "attn": gqa_init(ks[0], cfg),
+        "ffn": ffn_init(ks[1], d, cfg.d_ff, "gelu", cfg.jnp_dtype),
+    }
+    if cross:
+        p["norm_x_w"] = jnp.ones((d,), jnp.float32)
+        p["norm_x_b"] = jnp.zeros((d,), jnp.float32)
+        p["xattn"] = gqa_init(ks[2], cfg)
+    return p
+
+
+class WhisperModel:
+    """cfg.num_layers encoder + cfg.num_decoder_layers decoder blocks."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.enc_layers = cfg.num_layers
+        self.dec_layers = cfg.num_decoder_layers or cfg.num_layers
+
+    def init(self, rng: jax.Array) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(rng, 6)
+        d = cfg.jnp_dtype
+
+        def stack(key, n, cross):
+            layers = [_block_init(jax.random.fold_in(key, i), cfg, cross=cross)
+                      for i in range(n)]
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+        return {
+            "enc_pos": dense_init(ks[0], (cfg.encoder_seq_len * 32, cfg.d_model),
+                                  d, scale=0.02),
+            "dec_embed": dense_init(ks[1], (cfg.vocab_size, cfg.d_model), d,
+                                    scale=1.0),
+            "dec_pos": dense_init(ks[2], (cfg.decoder_text_len * 128, cfg.d_model),
+                                  d, scale=0.02),
+            "enc": stack(ks[3], self.enc_layers, cross=False),
+            "dec": stack(ks[4], self.dec_layers, cross=True),
+            "enc_norm_w": jnp.ones((cfg.d_model,), jnp.float32),
+            "enc_norm_b": jnp.zeros((cfg.d_model,), jnp.float32),
+            "dec_norm_w": jnp.ones((cfg.d_model,), jnp.float32),
+            "dec_norm_b": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+
+    # -- encoder -----------------------------------------------------------
+    def encode(self, params, frames: jnp.ndarray) -> jnp.ndarray:
+        """frames: [B, S_audio, d_model] stub embeddings -> encoder states."""
+        cfg = self.cfg
+        s = frames.shape[1]
+        x = frames.astype(cfg.jnp_dtype) + params["enc_pos"][:s]
+        positions = jnp.arange(s)
+
+        def body(x, lp):
+            h = layer_norm(x, lp["norm1_w"], lp["norm1_b"])
+            out, _ = gqa_apply(lp["attn"], cfg, h, positions=positions,
+                               causal=False, use_rope=False)
+            x = x + out
+            h = layer_norm(x, lp["norm2_w"], lp["norm2_b"])
+            return x + ffn_apply(lp["ffn"], h, "gelu"), None
+
+        x, _ = jax.lax.scan(body, x, params["enc"])
+        return layer_norm(x, params["enc_norm_w"], params["enc_norm_b"])
+
+    # -- decoder -----------------------------------------------------------
+    def _dec_block(self, lp, cfg, x, *, positions, self_cache, cache_pos,
+                   cross_kv):
+        h = layer_norm(x, lp["norm1_w"], lp["norm1_b"])
+        out, new_self = gqa_apply(lp["attn"], cfg, h, positions=positions,
+                                  causal=True, use_rope=False,
+                                  cache=self_cache, cache_pos=cache_pos)
+        x = x + out
+        h = layer_norm(x, lp["norm_x_w"], lp["norm_x_b"])
+        out, _ = gqa_apply(lp["xattn"], cfg, h, positions=positions,
+                           use_rope=False, cross_kv=cross_kv)
+        x = x + out
+        h = layer_norm(x, lp["norm2_w"], lp["norm2_b"])
+        return x + ffn_apply(lp["ffn"], h, "gelu"), new_self
+
+    def _cross_kv(self, params, enc_out):
+        """Precompute per-decoder-layer cross K/V from encoder output."""
+        cfg = self.cfg
+        b, s, _ = enc_out.shape
+        nkv, hd = cfg.num_kv_heads, cfg.hd
+
+        def per_layer(lp, _):
+            k = (enc_out @ lp["xattn"]["wk"]).reshape(b, s, nkv, hd)
+            v = (enc_out @ lp["xattn"]["wv"]).reshape(b, s, nkv, hd)
+            return lp, (k, v)
+
+        _, kv = jax.lax.scan(lambda c, lp: (c, per_layer(lp, None)[1]),
+                             None, params["dec"])
+        return kv  # ([L, B, S, KV, hd], [L, B, S, KV, hd])
+
+    def decode(self, params, tokens, enc_out, *, cache=None, cache_pos=None):
+        """Teacher-forced decode (train) or cached step.
+
+        tokens: [B, S_text]; enc_out: [B, S_audio, d].
+        """
+        cfg = self.cfg
+        b, s = tokens.shape
+        x = jnp.take(params["dec_embed"], tokens, axis=0)
+        start = 0 if cache_pos is None else cache_pos
+        positions = start + jnp.arange(s)
+        x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], start, s, 0)
+
+        cross = self._cross_kv(params, enc_out)
+
+        def body(carry, xs):
+            x = carry
+            lp, ckv, sc = xs
+            x, new_self = self._dec_block(
+                lp, cfg, x, positions=positions,
+                self_cache=sc, cache_pos=cache_pos, cross_kv=ckv)
+            return x, new_self
+
+        if cache is None:
+            scs = jax.tree.map(
+                lambda l: None, params["dec"], is_leaf=lambda l: False)
+            def body_nc(x, xs):
+                lp, ckv = xs
+                x, _ = self._dec_block(lp, cfg, x, positions=positions,
+                                       self_cache=None, cache_pos=None,
+                                       cross_kv=ckv)
+                return x, None
+            x, _ = jax.lax.scan(body_nc, x, (params["dec"], cross))
+            new_cache = None
+        else:
+            x, new_self = jax.lax.scan(body, x,
+                                       (params["dec"], cross, cache.self_kv))
+            new_cache = WhisperCache(self_kv=new_self, cross_kv=None)
+
+        x = layer_norm(x, params["dec_norm_w"], params["dec_norm_b"])
+        logits = x @ params["dec_embed"].T  # whisper ties output embedding
+        return logits, new_cache
+
+    def init_cache(self, batch: int, s_max: int, dtype=None):
+        cfg = self.cfg
+        dtype = dtype or cfg.jnp_dtype
+        one = KVCache(
+            k=jnp.zeros((batch, s_max, cfg.num_kv_heads, cfg.hd), dtype),
+            v=jnp.zeros((batch, s_max, cfg.num_kv_heads, cfg.hd), dtype))
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (self.dec_layers, *x.shape)).copy(),
+            one)
+        return WhisperCache(self_kv=stacked, cross_kv=None)
+
+    def loss(self, params, frames, tokens, labels):
+        enc = self.encode(params, frames)
+        logits, _ = self.decode(params, tokens, enc)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        return (logz - gold).mean()

@@ -1,0 +1,189 @@
+"""Trace-time sharding hints for model internals.
+
+GSPMD propagation alone makes poor choices for loop-carried KV caches (it
+re-shards scan carries and inserts whole-cache all-gathers at the jit
+boundary). Steps set the active mesh with `use_mesh(...)`; model code pins
+the layouts it wants with `constrain(...)`. All hints are no-ops when no mesh
+is active (single-device smoke tests).
+
+The KV-cache rule here is THE rule — launch/sharding.cache_specs delegates to
+it so jit in/out shardings and in-model constraints can never disagree.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+_MESH: contextvars.ContextVar = contextvars.ContextVar("repro_mesh",
+                                                       default=None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    tok = _MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _MESH.reset(tok)
+
+
+def current_mesh():
+    return _MESH.get()
+
+
+def _dp(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _fits(mesh, n: int, axes) -> bool:
+    if not axes:
+        return False
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return size > 1 and n % size == 0
+
+
+def axis_if(mesh, n: int, *prefs):
+    for p in prefs:
+        p = tuple(a for a in p if a in mesh.shape)
+        if _fits(mesh, n, p):
+            return p if len(p) > 1 else p[0]
+    return None
+
+
+# Parallel policy: 'tp_fsdp' (Megatron TP over `model` + FSDP over dp) or
+# 'fsdp_only' (flatten every axis into data parallelism + ZeRO-3; right for
+# small-width archs where 16-way TP leaves skinny matmuls and the per-layer
+# activation all-reduces dominate — §Perf iteration A2).
+_PARALLEL_MODE = "tp_fsdp"
+
+
+def set_parallel_mode(mode: str):
+    global _PARALLEL_MODE
+    assert mode in ("tp_fsdp", "fsdp_only")
+    _PARALLEL_MODE = mode
+
+
+def parallel_mode() -> str:
+    return _PARALLEL_MODE
+
+
+def all_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+
+
+def batch_axes(mesh, b: int):
+    if _PARALLEL_MODE == "fsdp_only":
+        return axis_if(mesh, b, all_axes(mesh), _dp(mesh))
+    return axis_if(mesh, b, _dp(mesh))
+
+
+# KV-cache fallback strategy when kv_heads doesn't divide `model`:
+#   'seq' — shard the sequence: zero score-collectives, but decode's dynamic
+#           cache update becomes a masked full-slice rewrite (GSPMD select).
+#   'hd'  — shard the head_dim: clean local cache update, but scores are
+#           partial sums -> per-layer all-reduce.
+# Both are first-class; §Perf records the measured trade (hillclimb axis).
+_KV_MODE = "seq"
+
+
+def set_kv_fallback(mode: str):
+    global _KV_MODE
+    assert mode in ("seq", "hd")
+    _KV_MODE = mode
+
+
+def kv_cache_spec(mesh, shape) -> P:
+    """[B, S, KV, hd]: batch over dp; kv heads over model when divisible,
+    else the _KV_MODE fallback."""
+    b_ax = batch_axes(mesh, shape[0])
+    kv_ax = axis_if(mesh, shape[2], ("model",))
+    hd_ax = None
+    s_ax = None
+    if kv_ax is None:
+        if _KV_MODE == "hd":
+            hd_ax = axis_if(mesh, shape[3], ("model",))
+            if hd_ax is None:
+                s_ax = _free_seq_axes(mesh, shape[1], b_ax)
+        else:
+            s_ax = _free_seq_axes(mesh, shape[1], b_ax)
+            if s_ax is None:
+                hd_ax = axis_if(mesh, shape[3], ("model",))
+    return P(b_ax, s_ax, kv_ax, hd_ax)
+
+
+def mla_cache_spec(mesh, shape) -> P:
+    """[B, S, dim]: batch over dp, sequence over the free axes."""
+    b_ax = batch_axes(mesh, shape[0])
+    return P(b_ax, _free_seq_axes(mesh, shape[1], b_ax), None)
+
+
+def _free_seq_axes(mesh, s_len: int, b_ax):
+    used = set(b_ax if isinstance(b_ax, tuple) else
+               ((b_ax,) if b_ax else ()))
+    free = [a for a in ("model", "pod", "data")
+            if a in mesh.shape and a not in used]
+    return axis_if(mesh, s_len, tuple(free), *[(f,) for f in free])
+
+
+def constrain(x, spec: P):
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_kv(k):
+    mesh = current_mesh()
+    if mesh is None:
+        return k
+    return constrain(k, kv_cache_spec(mesh, k.shape))
+
+
+def constrain_mla(ckv):
+    mesh = current_mesh()
+    if mesh is None:
+        return ckv
+    return constrain(ckv, mla_cache_spec(mesh, ckv.shape))
+
+
+def table_axes(mesh, t: int):
+    """DLRM stacked-table dim: all chips when divisible, else TP only."""
+    return axis_if(mesh, t, ("model", "data"), ("model",))
+
+
+def constrain_tablewise(x, t_dim: int = 0):
+    """Pin [T, ...] tensors to whole-table sharding (a2a lookup plan)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    ax = table_axes(mesh, x.shape[t_dim])
+    spec = [None] * x.ndim
+    spec[t_dim] = ax
+    return constrain(x, P(*spec))
+
+
+def constrain_activation(x):
+    """[B, S, d] block boundary: batch over dp, rest replicated."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return constrain(x, P(batch_axes(mesh, x.shape[0]), None, None))
+
+
+def constrain_scores(s, kv_shape):
+    """Decode scores [B, 1, KV, G, S] mirroring the cache sharding (the
+    head_dim axis is contracted away, so hd-sharded caches give partial-sum
+    scores — GSPMD inserts the small all-reduce; no constraint on that dim)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return s
+    kv = kv_cache_spec(mesh, (kv_shape[0], kv_shape[1], kv_shape[2],
+                              kv_shape[3]))
+    b_ax, s_ax, kv_ax, _ = (list(kv) + [None] * 4)[:4]
+    return constrain(s, P(b_ax, None, kv_ax, None, s_ax))

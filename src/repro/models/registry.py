@@ -1,0 +1,46 @@
+"""Model construction + analytic parameter/FLOP accounting."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.encdec import WhisperModel
+from repro.models.transformer import TransformerLM, build_plan
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+        return WhisperModel(cfg)
+    return TransformerLM(cfg)
+
+
+def abstract_params(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    model = build_model(cfg)
+    return model, jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    _, tree = abstract_params(cfg)
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def analytic_param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    n = param_count(cfg)
+    if active_only and cfg.moe_num_experts:
+        plan = build_plan(cfg) if not cfg.is_encoder_decoder else None
+        if plan is not None:
+            specs = (list(plan.prefix) + list(plan.pattern) * plan.num_groups
+                     + list(plan.suffix))
+            n_moe_layers = sum(1 for s in specs if s.ffn == "moe")
+            inactive = (cfg.moe_num_experts - cfg.moe_top_k)
+            n -= n_moe_layers * inactive * 3 * cfg.d_model * cfg.moe_d_ff
+    return n
+
+
+def model_flops(cfg: ModelConfig, tokens: int, kind: str = "train") -> float:
+    """MODEL_FLOPS: 6*N*D train (dense), 6*N_active*D (MoE); 2*N*D decode."""
+    n = analytic_param_count(cfg, active_only=True)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens

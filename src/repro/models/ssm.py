@@ -1,0 +1,314 @@
+"""State-space / linear-attention blocks: Mamba (Jamba) and RWKV-6 (Finch).
+
+Both expose a sequence form (train/prefill; chunked parallel scan for Mamba,
+time scan for RWKV) and a single-step decode form carrying O(1) state — this
+is what makes the `long_500k` shape runnable for the ssm/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+
+# ---------------------------------------------------------------------------
+# Mamba (S6 selective scan), chunked associative scan
+# ---------------------------------------------------------------------------
+
+class MambaState(NamedTuple):
+    h: jnp.ndarray         # [B, d_inner, state]
+    conv: jnp.ndarray      # [B, conv_dim-1, d_inner] trailing inputs
+
+
+def mamba_init(rng, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    st = cfg.ssm_state_dim
+    dt_rank = max(1, d // 16)
+    ks = jax.random.split(rng, 6)
+    dt = cfg.jnp_dtype
+    return {
+        # separate x/z projections (clean column sharding over `model`)
+        "in_x": dense_init(ks[0], (d, di), dt),
+        "in_z": dense_init(jax.random.fold_in(ks[0], 1), (d, di), dt),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv_dim, di), dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(ks[2], (di, dt_rank + 2 * st), dt),
+        "dt_proj": dense_init(ks[3], (dt_rank, di), dt),
+        "dt_bias": jnp.full((di,), -4.6, dt),  # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, st + 1, dtype=jnp.float32), (di, st)).copy()),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), dt),
+    }
+
+
+def _mamba_scan_chunked(dA, dBx, h0, chunk: int = 256):
+    """h_t = dA_t * h_{t-1} + dBx_t over time, chunked associative scan.
+
+    dA, dBx: [B, S, di, st] (f32). Returns (ys [B,S,di,st], h_last).
+    """
+    b, s, di, st = dA.shape
+    chunk = min(chunk, s)
+    n = -(-s // chunk)
+    pad = n * chunk - s
+    if pad:  # pad with identity transitions
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                     constant_values=1.0)
+        dBx = jnp.pad(dBx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    dA = dA.reshape(b, n, chunk, di, st)
+    dBx = dBx.reshape(b, n, chunk, di, st)
+
+    def assoc(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    def step(h, inputs):
+        dA_c, dBx_c = inputs                     # [B, chunk, di, st]
+        a_cum, b_cum = jax.lax.associative_scan(assoc, (dA_c, dBx_c), axis=1)
+        hs = a_cum * h[:, None] + b_cum          # [B, chunk, di, st]
+        return hs[:, -1], hs
+
+    h_last, ys = jax.lax.scan(step, h0,
+                              (jnp.moveaxis(dA, 1, 0), jnp.moveaxis(dBx, 1, 0)))
+    ys = jnp.moveaxis(ys, 0, 1).reshape(b, n * chunk, di, st)[:, :s]
+    return ys, h_last
+
+
+def mamba_apply(params: dict, cfg: ModelConfig, x: jnp.ndarray,
+                state: MambaState | None = None):
+    """x: [B, S, d] -> ([B, S, d], new_state).
+
+    state is None for train (zero init, state discarded); for decode S==1 and
+    the conv/ssm states are carried.
+    """
+    b, s, d = x.shape
+    di = cfg.ssm_expand * d
+    st = cfg.ssm_state_dim
+    cd = cfg.ssm_conv_dim
+    dt_rank = max(1, d // 16)
+
+    xin = x @ params["in_x"]                               # [B, S, di]
+    z = x @ params["in_z"]
+
+    # Causal depthwise conv along seq.
+    if state is None:
+        xpad = jnp.pad(xin, ((0, 0), (cd - 1, 0), (0, 0)))
+        new_conv = None
+    else:
+        xpad = jnp.concatenate([state.conv.astype(xin.dtype), xin], axis=1)
+        new_conv = xpad[:, -(cd - 1):].astype(state.conv.dtype)
+    idx = jnp.arange(s)[:, None] + jnp.arange(cd)[None, :]
+    windows = xpad[:, idx]                                 # [B, S, cd, di]
+    xc = jnp.einsum("bscd,cd->bsd", windows, params["conv_w"]) + params["conv_b"]
+    xc = jax.nn.silu(xc)
+
+    proj = xc @ params["x_proj"]
+    dt_in, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + st], axis=-1)
+    dt = jax.nn.softplus(dt_in @ params["dt_proj"]
+                         + params["dt_bias"]).astype(jnp.float32)  # [B,S,di]
+    A = -jnp.exp(params["A_log"])                          # [di, st]
+    dA = jnp.exp(dt[..., None] * A)                        # [B,S,di,st]
+    dBx = (dt * xc.astype(jnp.float32))[..., None] \
+        * Bc.astype(jnp.float32)[:, :, None, :]            # [B,S,di,st]
+
+    h0 = (jnp.zeros((b, di, st), jnp.float32) if state is None
+          else state.h.astype(jnp.float32))
+    if s == 1:
+        h = dA[:, 0] * h0 + dBx[:, 0]
+        hs = h[:, None]
+        h_last = h
+    else:
+        hs, h_last = _mamba_scan_chunked(dA, dBx, h0)
+
+    y = jnp.einsum("bsdn,bsn->bsd", hs, Cc.astype(jnp.float32))
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ params["out_proj"]
+
+    new_state = None
+    if state is not None:
+        new_state = MambaState(h=h_last.astype(state.h.dtype), conv=new_conv)
+    return out, new_state
+
+
+def mamba_zero_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di = cfg.ssm_expand * cfg.d_model
+    return MambaState(
+        h=jnp.zeros((batch, di, cfg.ssm_state_dim), dtype),
+        conv=jnp.zeros((batch, cfg.ssm_conv_dim - 1, di), dtype))
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 "Finch": data-dependent decay linear attention
+# ---------------------------------------------------------------------------
+
+class RWKVState(NamedTuple):
+    wkv: jnp.ndarray       # [B, H, dh, dh]
+    shift_t: jnp.ndarray   # [B, d] last token (time mix)
+    shift_c: jnp.ndarray   # [B, d] last token (channel mix)
+
+
+def rwkv_init(rng, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dh = cfg.rwkv_head_dim
+    nh = d // dh
+    lora = 64
+    ks = jax.random.split(rng, 10)
+    dt = cfg.jnp_dtype
+    return {
+        # time-mix lerp coefficients (static part of rwkv6 ddlerp)
+        "mu": {k: dense_init(ks[i], (1, 1, d), dt, scale=0.2)
+               for i, k in enumerate(["r", "k", "v", "w", "g"])},
+        "w_r": dense_init(ks[5], (d, d), dt),
+        "w_k": dense_init(ks[6], (d, d), dt),
+        "w_v": dense_init(ks[7], (d, d), dt),
+        "w_g": dense_init(ks[8], (d, d), dt),
+        "w_o": dense_init(ks[9], (d, d), dt),
+        # data-dependent decay lora: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "w_lora_a": dense_init(jax.random.fold_in(rng, 1), (d, lora), dt),
+        "w_lora_b": dense_init(jax.random.fold_in(rng, 2), (lora, d), dt),
+        "u": dense_init(jax.random.fold_in(rng, 3), (nh, dh), jnp.float32),
+        "ln_x": jnp.ones((d,), jnp.float32),
+    }
+
+
+def _rwkv_chunked_scan(r, k, v, w, u, S0, chunk: int = 64):
+    """Chunk-parallel RWKV6 WKV. r/k/v/w: [B, S, H, dh] (w = decay in (0,1)).
+
+    Returns (y [B, S, H*dh-reshapable], S_last [B, H, dh, dh]).
+    """
+    b, s, nh, dh = r.shape
+    c = min(chunk, s)
+    n = -(-s // c)
+    pad = n * c - s
+    if pad:  # identity decays, zero k/v contributions
+        zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r = jnp.pad(r, zp)
+        k = jnp.pad(k, zp)
+        v = jnp.pad(v, zp)
+        w = jnp.pad(w, zp, constant_values=1.0)
+
+    def to_chunks(x):
+        return jnp.moveaxis(x.reshape(b, n, c, nh, dh), 1, 0)  # [n,B,C,H,dh]
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+
+    def step(S_c, inputs):
+        r_i, k_i, v_i, w_i = inputs                       # [B, C, H, dh]
+        W = jnp.cumprod(w_i, axis=1)                      # [B,C,H,dh] W_t
+        W_prev = W / w_i                                  # W_{t-1} (W_0 = 1)
+        rW = r_i * W_prev                                 # [B,C,H,dh]
+        kW = k_i / jnp.maximum(W, 1e-20)                  # k_s / W_s
+        # intra-chunk attention-like matrix [B,H,C,C]
+        A = jnp.einsum("bthi,bshi->bhts", rW, kW)
+        tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        A = jnp.where(tri[None, None], A, 0.0)
+        diag = jnp.einsum("bthi,bthi->bth", r_i * u[None, None], k_i)
+        out = jnp.einsum("bhts,bshj->bthj", A, vc_ := v_i) \
+            + diag[..., None] * v_i \
+            + jnp.einsum("bthi,bhij->bthj", rW, S_c)      # h0 contribution
+        W_C = W[:, -1]                                    # [B,H,dh]
+        S_n = W_C[..., :, None] * S_c + jnp.einsum(
+            "bshi,bshj->bhij", kW * W_C[:, None], v_i)
+        return S_n, out
+
+    S_last, ys = jax.lax.scan(step, S0, (rc, kc, vc, wc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, n * c, nh, dh)[:, :s]
+    return y, S_last
+
+
+def rwkv_time_mix(params: dict, cfg: ModelConfig, x: jnp.ndarray,
+                  state: RWKVState | None = None):
+    """RWKV-6 time mixing. x: [B, S, d] -> ([B, S, d], new (wkv, shift))."""
+    b, s, d = x.shape
+    dh = cfg.rwkv_head_dim
+    nh = d // dh
+
+    prev = (jnp.zeros((b, 1, d), x.dtype) if state is None
+            else state.shift_t[:, None].astype(x.dtype))
+    xs = jnp.concatenate([prev, x[:, :-1]], axis=1)       # token shift
+    mix = lambda m: x + (xs - x) * params["mu"][m]
+    r = (mix("r") @ params["w_r"]).reshape(b, s, nh, dh)
+    k = (mix("k") @ params["w_k"]).reshape(b, s, nh, dh)
+    v = (mix("v") @ params["w_v"]).reshape(b, s, nh, dh)
+    g = jax.nn.silu(mix("g") @ params["w_g"])
+    wdd = params["w0"] + jnp.tanh(mix("w") @ params["w_lora_a"]) \
+        @ params["w_lora_b"]
+    w = jnp.exp(-jnp.exp(wdd.astype(jnp.float32)))        # [B,S,d] decay in (0,1)
+    w = w.reshape(b, s, nh, dh)
+
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    u = params["u"]                                       # [H, dh]
+
+    S0 = (jnp.zeros((b, nh, dh, dh), jnp.float32) if state is None
+          else state.wkv.astype(jnp.float32))
+    if s > 1:
+        # Chunked WKV (§Perf iteration B1): O(S/C) sequential chunk steps of
+        # MXU-shaped einsums instead of S tiny outer-product steps. Within a
+        # chunk: A[t,s] = (r_t*W_{t-1}/W_s)·k_s (strict lower-tri) + diag
+        # (r_t*u)·k_t ; out = A @ v + (r*W_prev) @ h0 ; state update via
+        # decay-weighted k^T v. W are within-chunk cumprods of the
+        # data-dependent decays (f32; C kept small for 1/W stability).
+        y, S_last = _rwkv_chunked_scan(rf, kf, vf, w, u, S0, chunk=64)
+    else:
+        def step(S_c, inputs):
+            r_t, k_t, v_t, w_t = inputs                   # [B, H, dh]
+            kv = k_t[..., :, None] * v_t[..., None, :]    # [B,H,dh,dh]
+            out = jnp.einsum("bhi,bhij->bhj", r_t, S_c + u[..., None] * kv)
+            S_n = w_t[..., :, None] * S_c + kv
+            return S_n, out
+
+        S_last, outs = jax.lax.scan(
+            step, S0,
+            (jnp.moveaxis(rf, 1, 0), jnp.moveaxis(kf, 1, 0),
+             jnp.moveaxis(vf, 1, 0), jnp.moveaxis(w, 1, 0)))
+        y = jnp.moveaxis(outs, 0, 1)
+    y = y.reshape(b, s, d)                                # [B,S,d]
+    # group-norm per head (ln_x), then gate
+    y = y.reshape(b, s, nh, dh)
+    y = (y - y.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        y.var(-1, keepdims=True) + 64e-5)
+    y = (y.reshape(b, s, d) * params["ln_x"]).astype(x.dtype) * g
+    out = y @ params["w_o"]
+    return out, (S_last, x[:, -1])
+
+
+def rwkv_channel_mix_init(rng, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    dt = cfg.jnp_dtype
+    return {"mu_k": dense_init(ks[0], (1, 1, d), dt, scale=0.2),
+            "mu_r": dense_init(ks[1], (1, 1, d), dt, scale=0.2),
+            "cm_k": dense_init(ks[0], (d, f), dt),      # col-sharded
+            "cm_v": dense_init(ks[1], (f, d), dt),      # row-sharded
+            "cm_r": dense_init(ks[2], (d, d), dt)}
+
+
+def rwkv_channel_mix(params: dict, x: jnp.ndarray,
+                     shift: jnp.ndarray | None = None):
+    b, s, d = x.shape
+    prev = (jnp.zeros((b, 1, d), x.dtype) if shift is None
+            else shift[:, None].astype(x.dtype))
+    xs = jnp.concatenate([prev, x[:, :-1]], axis=1)
+    xk = x + (xs - x) * params["mu_k"]
+    xr = x + (xs - x) * params["mu_r"]
+    v = jnp.square(jax.nn.relu(xk @ params["cm_k"])) @ params["cm_v"]
+    return jax.nn.sigmoid(xr @ params["cm_r"]) * v, x[:, -1]
+
+
+def rwkv_zero_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    nh = d // cfg.rwkv_head_dim
+    return RWKVState(
+        wkv=jnp.zeros((batch, nh, cfg.rwkv_head_dim, cfg.rwkv_head_dim), dtype),
+        shift_t=jnp.zeros((batch, d), dtype),
+        shift_c=jnp.zeros((batch, d), dtype))

@@ -1,0 +1,479 @@
+"""HLO-text cost model for the three-term roofline.
+
+Why not `compiled.cost_analysis()` alone:
+  * XLA's HloCostAnalysis visits each `while` body ONCE, so scanned layer
+    stacks (our compile-time strategy) report a single layer group's cost.
+  * The CPU backend (the only one in this container) legalizes bf16 dots by
+    converting operands to f32, materializing shadow copies a TPU would never
+    touch; naive byte counting inflates the memory term ~50x.
+
+This parser walks the computation call graph (entry -> while bodies x
+trip-count -> fusion bodies / calls) with slice-aware byte accounting:
+
+  flops            — 2*M*N*K per dot (+convs); fusion-internal dots attributed
+                     to call sites; while bodies multiplied by trip count.
+  bytes            — HBM-traffic proxy. Per computation: one write per
+                     top-level op result (fusion root; update region only for
+                     dynamic-update-slice) + parameter reads, where a param
+                     consumed ONLY through dynamic-slice is charged the slice
+                     bytes, and dtype converts/bitcasts/copies are traffic-
+                     transparent (free on TPU, CPU-legalization artifacts).
+  collective_bytes — operand bytes of all-gather / all-reduce / reduce-scatter
+                     / all-to-all / collective-permute (incl. -start forms).
+
+Validated against cost_analysis() on unrolled modules in tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+from repro.roofline.hw import (DTYPE_BYTES, HBM_BW, ICI_BW_PER_LINK,
+                               PEAK_FLOPS_BF16)
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_TRANSPARENT = {"convert", "bitcast", "copy", "reshape", "transpose",
+                "broadcast"}
+_CONTROL = {"parameter", "constant", "get-tuple-element", "tuple", "while",
+            "after-all", "conditional", "call", "partition-id", "replica-id",
+            "custom-call", "rng-get-and-update-state", "opt-barrier"}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(
+    r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s([\w\-]+)\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, ()
+    dt, dims = m.groups()
+    return dt, tuple(int(d) for d in dims.split(",") if d)
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    result_type: str
+    operands: List[str]
+    line: str
+    is_root: bool
+
+
+class HloCost:
+    def __init__(self, hlo_text: str):
+        self._split_computations(hlo_text)
+        self.shape_of: Dict[str, str] = {}
+        self.instrs: Dict[str, Dict[str, Instr]] = {}
+        for cname, lines in self.computations.items():
+            table: Dict[str, Instr] = {}
+            for line in lines:
+                m = _DEF_RE.match(line)
+                if not m:
+                    continue
+                name, rtype, op = m.groups()
+                # operands start after "<op>(" — NOT at the first "(" (tuple
+                # result types contain parens and would swallow the arg list)
+                args_at = line.find(f" {op}(")
+                arg_str = line[args_at + len(op) + 2:] if args_at >= 0 else ""
+                ins = Instr(name=name, op=op, result_type=rtype,
+                            operands=self._operand_names("(" + arg_str),
+                            line=line, is_root=line.startswith("ROOT"))
+                table[name] = ins
+                self.shape_of[name] = rtype
+            self.instrs[cname] = table
+        self._fusion_of: Dict[str, str] = {}   # fusion body -> kind marker
+        for cname, table in self.instrs.items():
+            for ins in table.values():
+                if ins.op == "fusion":
+                    fm = re.search(r"calls=%?([\w.\-]+)", ins.line)
+                    if fm:
+                        self._fusion_of[fm.group(1)] = cname
+
+    # -- text structure -----------------------------------------------------
+    def _split_computations(self, text: str):
+        self.computations: Dict[str, list[str]] = {}
+        self.entry: Optional[str] = None
+        cur = None
+        for line in text.splitlines():
+            stripped = line.strip()
+            if (cur is None and line and not line[0].isspace()
+                    and stripped.endswith("{") and ") -> " in stripped):
+                head = stripped
+                is_entry = head.startswith("ENTRY")
+                if is_entry:
+                    head = head[len("ENTRY"):].strip()
+                cur = head.split("(", 1)[0].strip().lstrip("%").strip()
+                self.computations[cur] = []
+                if is_entry:
+                    self.entry = cur
+            elif stripped == "}":
+                cur = None
+            elif cur is not None:
+                self.computations[cur].append(stripped)
+        if self.entry is None and self.computations:
+            self.entry = next(iter(self.computations))
+
+    def _operand_names(self, line: str) -> list[str]:
+        call = line.split("(", 1)
+        if len(call) < 2:
+            return []
+        args = call[1]
+        depth = 1
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args = args[:i]
+                    break
+        return re.findall(r"%([\w.\-]+)", args)
+
+    # -- flops ---------------------------------------------------------------
+    def _dot_flops(self, ins: Instr) -> float:
+        _, rdims = _shape_dims(ins.result_type)
+        out_elems = 1
+        for d in rdims:
+            out_elems *= d
+        k = 1
+        cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+        if cm and ins.operands:
+            _, ldims = _shape_dims(self.shape_of.get(ins.operands[0], ""))
+            for ci in cm.group(1).split(","):
+                if ci and int(ci) < len(ldims):
+                    k *= ldims[int(ci)]
+        return 2.0 * out_elems * k
+
+    def _conv_flops(self, ins: Instr) -> float:
+        _, rdims = _shape_dims(ins.result_type)
+        out_elems = 1
+        for d in rdims:
+            out_elems *= d
+        kel = 1
+        if len(ins.operands) >= 2:
+            _, kdims = _shape_dims(self.shape_of.get(ins.operands[1], ""))
+            for d in kdims:
+                kel *= d
+        return 2.0 * out_elems * max(kel, 1)
+
+    def comp_flops(self, cname: str) -> float:
+        fl = 0.0
+        for ins in self.instrs.get(cname, {}).values():
+            if ins.op == "dot":
+                fl += self._dot_flops(ins)
+            elif ins.op == "convolution":
+                fl += self._conv_flops(ins)
+        return fl
+
+    # -- bytes ----------------------------------------------------------------
+    # Consumer-centric accounting: every materialized value is charged once as
+    # a write at its producer and once per substantive read at each consumer.
+    # Transparent ops (convert/bitcast/copy/reshape/transpose) are free and
+    # peeled through — the CPU backend's bf16->f32 dot legalization and layout
+    # shuffles would otherwise inflate the TPU memory term ~50x.
+
+    def _uses_map(self, cname: str) -> Dict[str, list[Instr]]:
+        uses: Dict[str, list[Instr]] = {}
+        for ins in self.instrs[cname].values():
+            for o in ins.operands:
+                uses.setdefault(o, []).append(ins)
+        return uses
+
+    def _peel_up(self, cname: str, name: str) -> Instr | None:
+        """Follow transparent producers up to the underlying value."""
+        table = self.instrs[cname]
+        ins = table.get(name)
+        for _ in range(16):
+            if ins is None:
+                return None
+            if ins.op in _TRANSPARENT and ins.operands:
+                nxt = table.get(ins.operands[0])
+                if nxt is None:
+                    return ins
+                ins = nxt
+            else:
+                return ins
+        return ins
+
+    def _peeled_bytes(self, cname: str, name: str) -> float:
+        ins = self._peel_up(cname, name)
+        if ins is None:
+            return float(_shape_bytes(self.shape_of.get(name, "")))
+        return float(_shape_bytes(ins.result_type))
+
+    def _fusion_param_read(self, body: str, pos: int) -> float:
+        """Slice-aware read charge for fusion-body parameter `pos`."""
+        table = self.instrs.get(body, {})
+        uses = self._uses_map(body)
+        pname = None
+        for ins in table.values():
+            if ins.op == "parameter" and re.search(
+                    rf"parameter\({pos}\)", ins.line):
+                pname = ins.name
+                break
+        if pname is None:
+            return 0.0
+        return self._value_read(body, pname, uses)
+
+    def _value_read(self, cname: str, vname: str, uses, depth=0) -> float:
+        if depth > 10:
+            return float(_shape_bytes(self.shape_of.get(vname, "")))
+        total = 0.0
+        for use in uses.get(vname, ()):
+            if use.op == "dynamic-slice":
+                total += _shape_bytes(use.result_type)
+            elif (use.op == "dynamic-update-slice" and use.operands
+                  and use.operands[0] == vname):
+                continue  # in-place target (write charged separately)
+            elif use.op in _TRANSPARENT or use.op == "get-tuple-element":
+                total += self._value_read(cname, use.name, uses, depth + 1)
+            elif use.op == "tuple":
+                continue
+            else:
+                return float(_shape_bytes(self.shape_of.get(vname, "")))
+        return total
+
+    def _write_bytes(self, ins: Instr, cname: str) -> float:
+        """Write charge: DUS-aware; pure relayouts of inputs are free."""
+        core = self._peel_up(cname, ins.name) if ins.op in _TRANSPARENT else ins
+        table = self.instrs[cname]
+        peeled = ins
+        for _ in range(16):
+            if peeled.op in _TRANSPARENT and peeled.operands and \
+                    peeled.operands[0] in table:
+                peeled = table[peeled.operands[0]]
+            else:
+                break
+        if peeled.op == "dynamic-update-slice" and len(peeled.operands) > 1:
+            return 2.0 * _shape_bytes(self.shape_of.get(peeled.operands[1], ""))
+        if peeled.op in ("parameter", "get-tuple-element"):
+            return 0.0  # pure relayout/convert chain of an input
+        return float(_shape_bytes(ins.result_type))
+
+    _RESHUFFLE = {"slice", "pad", "select", "concatenate", "iota", "compare",
+                  "and", "or", "not"}
+
+    def _is_relayout_fusion(self, body: str) -> bool:
+        """True when the fusion only moves/reinterprets data (CPU-backend
+        layout/f32-legalization artifacts; free on TPU)."""
+        for ins in self.instrs.get(body, {}).values():
+            if ins.op in _CONTROL or ins.op in _TRANSPARENT:
+                continue
+            if ins.op in self._RESHUFFLE:
+                continue
+            return False
+        return True
+
+    def _fusion_root(self, body: str) -> Instr | None:
+        for ins in self.instrs.get(body, {}).values():
+            if ins.is_root:
+                return ins
+        return None
+
+    def _innermost_update_bytes(self, body: str, dus: Instr) -> float:
+        """Nested scan-cache DUS chains: only the innermost update region is
+        real traffic (outer stacking DUS are in-place aliased on TPU)."""
+        table = self.instrs[body]
+        cur = dus
+        for _ in range(8):
+            if len(cur.operands) < 2:
+                break
+            upd = self._peel_up(body, cur.operands[1])
+            if upd is not None and upd.op == "dynamic-update-slice":
+                cur = upd
+            else:
+                break
+        if len(cur.operands) > 1:
+            return 2.0 * _shape_bytes(self.shape_of.get(cur.operands[1], ""))
+        return 0.0
+
+    def _chain_read(self, body: str, vname: str, uses, depth=0) -> float:
+        """Like _value_read but DUS participation (either operand) is free —
+        used inside in-place update fusions."""
+        if depth > 10:
+            return float(_shape_bytes(self.shape_of.get(vname, "")))
+        total = 0.0
+        for use in uses.get(vname, ()):
+            if use.op == "dynamic-update-slice":
+                continue
+            if use.op == "dynamic-slice":
+                # slice feeding the update chain only? check its uses
+                total += self._chain_read(body, use.name, uses, depth + 1)
+            elif use.op in _TRANSPARENT or use.op == "get-tuple-element":
+                total += self._chain_read(body, use.name, uses, depth + 1)
+            elif use.op == "tuple" or use.is_root:
+                continue
+            else:
+                return float(_shape_bytes(self.shape_of.get(vname, "")))
+        return total
+
+    def comp_bytes(self, cname: str, kind: str) -> float:
+        """kind: 'fusion' (root write only) or 'flow' (writes + reads)."""
+        table = self.instrs.get(cname, {})
+        if not table:
+            return 0.0
+        total = 0.0
+        if kind == "fusion":
+            if self._is_relayout_fusion(cname):
+                return 0.0
+            root = self._fusion_root(cname)
+            if root is None:
+                return 0.0
+            peeled = root
+            for _ in range(16):
+                if peeled.op in _TRANSPARENT and peeled.operands and \
+                        peeled.operands[0] in table:
+                    peeled = table[peeled.operands[0]]
+                else:
+                    break
+            uses = self._uses_map(cname)
+            if peeled.op == "dynamic-update-slice":
+                # in-place update fusion: innermost update + escaping reads
+                total += self._innermost_update_bytes(cname, peeled)
+                for ins in table.values():
+                    if ins.op == "parameter":
+                        total += self._chain_read(cname, ins.name, uses)
+                return total
+            total += self._write_bytes(root, cname)
+            for ins in table.values():
+                if ins.op == "parameter":
+                    total += self._value_read(cname, ins.name, uses)
+            return total
+        for ins in table.values():
+            if ins.op in _CONTROL or ins.op in _TRANSPARENT:
+                continue
+            if ins.op == "fusion":
+                fm = re.search(r"calls=%?([\w.\-]+)", ins.line)
+                if fm and fm.group(1) in self.instrs:
+                    total += self.comp_bytes(fm.group(1), "fusion")
+                continue
+            if ins.op == "dynamic-slice":
+                total += 2.0 * _shape_bytes(ins.result_type)  # read + write
+                continue
+            if ins.op == "dynamic-update-slice":
+                total += self._innermost_update_bytes(cname, ins)
+                continue
+            # write + substantive operand reads (peeled through converts)
+            total += self._write_bytes(ins, cname)
+            for o in ins.operands:
+                src = self._peel_up(cname, o)
+                if src is not None and src.op in ("constant", "iota"):
+                    continue
+                total += self._peeled_bytes(cname, o)
+        return total
+
+    # -- collectives / control ----------------------------------------------
+    def comp_collectives(self, cname: str) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for ins in self.instrs.get(cname, {}).values():
+            for kind in _COLLECTIVES:
+                if ins.op == kind or ins.op == kind + "-start":
+                    b = sum(_shape_bytes(self.shape_of.get(o, ""))
+                            for o in ins.operands)
+                    out[kind] = out.get(kind, 0.0) + b
+        return out
+
+    def trip_count(self, cond_name: str) -> int:
+        consts: Dict[str, int] = {}
+        compares: list[list[str]] = []
+        for ins in self.instrs.get(cond_name, {}).values():
+            mc = re.search(r"constant\((\d+)\)", ins.line)
+            if mc:
+                consts[ins.name] = int(mc.group(1))
+            if ins.op == "compare":
+                compares.append(ins.operands)
+        best = 0
+        for ops in compares:
+            for o in ops:
+                if o in consts:
+                    best = max(best, consts[o])
+        if best == 0 and consts:
+            best = max(consts.values())
+        return max(best, 1)
+
+    # -- rollup ---------------------------------------------------------------
+    def total(self) -> dict:
+        def roll(cname: str, depth=0):
+            if depth > 64 or cname not in self.instrs:
+                return 0.0, 0.0, {}
+            fl = self.comp_flops(cname)
+            by = self.comp_bytes(cname, "flow")
+            coll = dict(self.comp_collectives(cname))
+            for ins in self.instrs[cname].values():
+                if ins.op == "fusion":
+                    fm = re.search(r"calls=%?([\w.\-]+)", ins.line)
+                    if fm and fm.group(1) in self.instrs:
+                        body = fm.group(1)
+                        fl += self.comp_flops(body)
+                        # bytes for fusion calls are handled inside
+                        # comp_bytes(cname, 'flow') at the call site
+                        for k, v in self.comp_collectives(body).items():
+                            coll[k] = coll.get(k, 0.0) + v
+                elif ins.op == "while":
+                    cm = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                    bm = re.search(r"body=%?([\w.\-]+)", ins.line)
+                    if cm and bm:
+                        trips = self.trip_count(cm.group(1))
+                        sfl, sby, scoll = roll(bm.group(1), depth + 1)
+                        fl += trips * sfl
+                        by += trips * sby
+                        for k, v in scoll.items():
+                            coll[k] = coll.get(k, 0.0) + trips * v
+                elif ins.op in ("call", "conditional"):
+                    for ref in re.findall(
+                            r"(?:to_apply|true_computation|false_computation)"
+                            r"=%?([\w.\-]+)", ins.line):
+                        sfl, sby, scoll = roll(ref, depth + 1)
+                        fl += sfl
+                        by += sby
+                        for k, v in scoll.items():
+                            coll[k] = coll.get(k, 0.0) + v
+            return fl, by, coll
+
+        fl, by, coll = roll(self.entry)
+        return {"flops": fl, "bytes": by,
+                "collective_bytes": sum(coll.values()),
+                "collective_breakdown": coll}
+
+
+def roofline_terms(hlo_text: str, *, num_chips: int,
+                   xla_cost: dict | None = None) -> dict:
+    """The three roofline terms (seconds) from a post-SPMD per-device HLO."""
+    cost = HloCost(hlo_text).total()
+    compute_s = cost["flops"] / PEAK_FLOPS_BF16
+    memory_s = cost["bytes"] / HBM_BW
+    collective_s = cost["collective_bytes"] / ICI_BW_PER_LINK
+    dominant = max(
+        [("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)], key=lambda kv: kv[1])[0]
+    out = {
+        "per_device_flops": cost["flops"],
+        "per_device_bytes": cost["bytes"],
+        "per_device_collective_bytes": cost["collective_bytes"],
+        "collective_breakdown": cost["collective_breakdown"],
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "num_chips": num_chips,
+    }
+    if xla_cost:
+        out["xla_flops_unscaled"] = xla_cost.get("flops", 0.0)
+        out["xla_bytes_unscaled"] = xla_cost.get("bytes accessed", 0.0)
+    return out

@@ -1,0 +1,97 @@
+"""Render the dry-run result store into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m repro.roofline.report [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.roofline.hw import HBM_BYTES, PEAK_FLOPS_BF16
+
+ADVICE = {
+    "compute": "raise MXU utilization (larger per-core tiles, fuse small ops)",
+    "memory": "cut HBM traffic (remat policy, bf16 routing buffers, "
+              "in-place cache updates, pinned hot rows)",
+    "collective": "re-schedule collectives (overlap with compute, "
+                  "reduce-scatter instead of all-reduce, shard to kill "
+                  "FSDP regathers)",
+}
+
+
+def load(dirname: str) -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def mfu_proxy(rec: dict) -> float:
+    """model-useful FLOPs / (chips * peak * bound-time) — the roofline
+    fraction this cell achieves if it runs at its dominant bound."""
+    r = rec["roofline"]
+    bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    mf = rec.get("model_flops_global", 0.0)
+    if not mf or not bound:
+        return 0.0
+    return mf / (r["num_chips"] * PEAK_FLOPS_BF16 * bound)
+
+
+def row(rec: dict) -> str:
+    r = rec["roofline"]
+    mem = rec["memory"]
+    per_dev = mem.get("per_device_total",
+                      (mem["argument_bytes"] + mem["output_bytes"]
+                       - mem["alias_bytes"] + mem["temp_bytes"])
+                      / max(r["num_chips"], 1))
+    # older records stored host-aggregate sizes; normalize
+    if per_dev > 200e9:
+        per_dev /= r["num_chips"]
+    fits = per_dev < HBM_BYTES
+    return (f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | {r['dominant']} "
+            f"| {mfu_proxy(rec):.3f} | {per_dev/2**30:.2f} | "
+            f"{'yes' if fits else 'NO'} |")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args(argv)
+    recs = load(args.dir)
+    ok = [x for x in recs if x["status"] == "ok" and x["mesh"] == args.mesh]
+    skipped = [x for x in recs if x["status"] == "skipped"
+               and x["cell"].endswith(args.mesh)]
+
+    print("| arch | shape | mesh | compute_s | memory_s | collective_s "
+          "| dominant | useful-FLOP frac | GiB/dev | fits |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for rec in sorted(ok, key=lambda x: (x["arch"], x["shape"])):
+        print(row(rec))
+    print(f"\nskipped ({len(skipped)}): "
+          + ", ".join(s["cell"] for s in skipped))
+
+    # hillclimb candidates
+    train_cells = [x for x in ok if x["shape"] == "train_4k"]
+    worst = min((x for x in train_cells if mfu_proxy(x) > 0),
+                key=mfu_proxy, default=None)
+    coll = max(ok, key=lambda x: (x["roofline"]["collective_s"]
+                                  / max(1e-12, max(
+                                      x["roofline"]["compute_s"],
+                                      x["roofline"]["memory_s"]))))
+    print("\nhillclimb candidates:")
+    if worst:
+        print(f"  worst useful-FLOP fraction (train): {worst['cell']} "
+              f"({mfu_proxy(worst):.3f})")
+    print(f"  most collective-bound: {coll['cell']} "
+          f"(coll/max(comp,mem) = "
+          f"{coll['roofline']['collective_s'] / max(1e-12, max(coll['roofline']['compute_s'], coll['roofline']['memory_s'])):.2f})")
+    print("  paper-representative: dlrm-production__serve__single")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.serving.server import (Batcher, BatcherConfig, InferenceServer,
+                                  Query, ServeStats)

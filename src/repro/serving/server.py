@@ -1,0 +1,116 @@
+"""DLRM inference serving loop (paper §II-A deployment shape).
+
+Queries arrive, a batcher groups them (the paper uses large batches of 2048
+to saturate the GPU; same logic here), the engine executes the forward pass,
+and per-query latencies are tracked against an SLA target. Percentile
+reporting mirrors how the paper reports batch latency.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Query:
+    qid: int
+    dense: np.ndarray          # [F]
+    indices: np.ndarray        # [T, L]
+    arrival_s: float = 0.0
+
+
+@dataclasses.dataclass
+class BatcherConfig:
+    max_batch: int = 2048
+    max_wait_s: float = 0.002   # SLA-driven batching window
+    pad_to_max: bool = True     # stable shapes => no recompilation
+
+
+class Batcher:
+    def __init__(self, cfg: BatcherConfig):
+        self.cfg = cfg
+        self.queue: collections.deque[Query] = collections.deque()
+
+    def submit(self, q: Query) -> None:
+        q.arrival_s = time.perf_counter()
+        self.queue.append(q)
+
+    def next_batch(self) -> Optional[list[Query]]:
+        if not self.queue:
+            return None
+        deadline = self.queue[0].arrival_s + self.cfg.max_wait_s
+        if (len(self.queue) < self.cfg.max_batch
+                and time.perf_counter() < deadline):
+            return None
+        out = []
+        while self.queue and len(out) < self.cfg.max_batch:
+            out.append(self.queue.popleft())
+        return out
+
+
+@dataclasses.dataclass
+class ServeStats:
+    served: int = 0
+    batch_latencies_s: list = dataclasses.field(default_factory=list)
+    query_latencies_s: list = dataclasses.field(default_factory=list)
+
+    def percentiles(self) -> dict:
+        if not self.query_latencies_s:
+            return {}
+        q = np.asarray(self.query_latencies_s) * 1e3
+        b = np.asarray(self.batch_latencies_s) * 1e3
+        return {"p50_ms": float(np.percentile(q, 50)),
+                "p95_ms": float(np.percentile(q, 95)),
+                "p99_ms": float(np.percentile(q, 99)),
+                "mean_batch_ms": float(b.mean()),
+                "served": self.served}
+
+
+class InferenceServer:
+    """forward(dense [B,F], indices [B,T,L]) -> scores [B]."""
+
+    def __init__(self, forward: Callable, batcher_cfg: BatcherConfig,
+                 sla_ms: float = 50.0):
+        self.forward = forward
+        self.batcher = Batcher(batcher_cfg)
+        self.sla_s = sla_ms / 1e3
+        self.stats = ServeStats()
+
+    def submit(self, q: Query) -> None:
+        self.batcher.submit(q)
+
+    def poll(self) -> int:
+        """Execute at most one batch; returns #queries served."""
+        batch = self.batcher.next_batch()
+        if not batch:
+            return 0
+        cfg = self.batcher.cfg
+        n = len(batch)
+        b = cfg.max_batch if cfg.pad_to_max else n
+        dense = np.zeros((b,) + batch[0].dense.shape, np.float32)
+        idx = np.zeros((b,) + batch[0].indices.shape, np.int32)
+        for i, q in enumerate(batch):
+            dense[i] = q.dense
+            idx[i] = q.indices
+        t0 = time.perf_counter()
+        scores = self.forward(dense, idx)
+        np.asarray(scores)  # block
+        t1 = time.perf_counter()
+        self.stats.batch_latencies_s.append(t1 - t0)
+        for q in batch:
+            self.stats.query_latencies_s.append(t1 - q.arrival_s)
+        self.stats.served += n
+        return n
+
+    def drain(self, timeout_s: float = 10.0) -> None:
+        t0 = time.perf_counter()
+        while self.batcher.queue and time.perf_counter() - t0 < timeout_s:
+            self.poll()
+
+    def sla_violations(self) -> int:
+        return int(np.sum(np.asarray(self.stats.query_latencies_s)
+                          > self.sla_s))
