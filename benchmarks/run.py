@@ -276,11 +276,68 @@ def tab45_microarch():
                                     num_tables=TABLES), 4))
 
 
+def tiered_ps_capacity_sweep():
+    """Tiered parameter-server sweep (beyond-paper: beyond-HBM serving).
+
+    Hot+warm device tiers sized as a fraction of total rows; cold tier in
+    host memory. Reports exact hit/miss/eviction counters per HETERO_MIXES
+    traffic mix and per hotness level — the serving-cache generalization of
+    the paper's L2-pin (hot tier) + software prefetch (cold-tier staging).
+    Scaled-down workload: table COUNTS from Table VII divided by 5.
+    """
+    from repro.ps import ParameterServer, PSConfig
+    rows, batch, pool, dim = 2000, 256, 20, 8
+
+    def run(hotness_list, frac):
+        pats = [make_pattern(h, rows, seed=t)
+                for t, h in enumerate(hotness_list)]
+        t_count = len(pats)
+        cap = int(frac * rows)
+        cfg = PSConfig(hot_rows=cap // 2, warm_slots=cap - cap // 2,
+                       prefetch_depth=2, window_batches=8)
+
+        def mk(seed):
+            return np.stack([p.sample(batch, pool, seed=seed * 100 + t)
+                             for t, p in enumerate(pats)],
+                            axis=1).astype(np.int32)
+        trace = np.concatenate([mk(s) for s in range(2)], axis=0)
+        ps = ParameterServer(np.zeros((t_count, rows, dim), np.float32),
+                             cfg, trace=trace)
+        for s in range(2, 4):                      # warmup
+            ps.lookup(mk(s))
+        ps.reset_stats()
+        for s in range(4, 9):                      # measured
+            ps.stage(mk(s + 1))                    # prefetch next batch
+            ps.lookup(mk(s))
+        return ps.stats()
+
+    for h in ("high_hot", "med_hot", "low_hot", "random"):
+        for frac in (0.05, 0.10, 0.20):
+            st = run([h] * 4, frac)
+            emit(f"tiered_ps_cap{int(frac*100)}pct/{h}", "",
+                 f"hit={st['cache_hit_rate']:.3f} "
+                 f"hot={st['hot_hit_rate']:.3f} "
+                 f"warm={st['warm_hit_rate']:.3f} "
+                 f"evict={st['evictions']} "
+                 f"pf_hits={st['prefetch_hits']}")
+
+    for mix, counts in HETERO_MIXES.items():
+        hotness = []
+        for h, n in counts.items():
+            hotness += [h] * max(1, n // 5)
+        for frac in (0.10, 0.20):
+            st = run(hotness, frac)
+            emit(f"tiered_ps_cap{int(frac*100)}pct/{mix}", "",
+                 f"hit={st['cache_hit_rate']:.3f} "
+                 f"cold_miss={st['cold_miss_rate']:.3f} "
+                 f"evict={st['evictions']}")
+
+
 ALL = [tab3_unique_access, fig5_coverage, fig1_embedding_contribution,
        fig6_pipeline_sweep, fig9_prefetch_distance, fig11_l2p_pooling,
        fig12_embedding_speedup, fig12_measured_cpu, fig13_e2e_speedup,
        fig14_gap, fig15_buffer_schemes, fig16_no_optmt, fig17_heterogeneous,
-       tab45_microarch]
+       tab45_microarch, tiered_ps_capacity_sweep]
 
 
 def main() -> None:

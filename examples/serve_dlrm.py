@@ -4,7 +4,13 @@ Streams queries across the paper's hotness spectrum through the batching
 inference server, reports per-hotness latency percentiles and the embedding
 stage share — a scaled-down CPU rendition of paper Figs. 1/13.
 
+With --storage tiered the embedding tables live in the tiered parameter
+server (repro/ps): top rows pinned device-side hot-first, an LFU warm cache,
+full tables in host memory, periodic hot-set re-pinning from live traffic —
+the beyond-HBM serving shape. Cache hit/miss stats join the report line.
+
     PYTHONPATH=src python examples/serve_dlrm.py [--queries 256]
+    PYTHONPATH=src python examples/serve_dlrm.py --storage tiered
 """
 import argparse
 import time
@@ -16,33 +22,72 @@ import numpy as np
 from repro.core import EmbeddingStageConfig
 from repro.data import DLRMQueryStream
 from repro.models.dlrm import DLRM, DLRMConfig
+from repro.ps import PSConfig
 from repro.serving import BatcherConfig, InferenceServer, Query
+
+TABLES, ROWS, POOL = 8, 50_000, 20
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--queries", type=int, default=256)
     ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--storage", choices=("device", "tiered"),
+                    default="device")
+    ap.add_argument("--hot-rows", type=int, default=2500,
+                    help="tiered: device-pinned rows per table")
+    ap.add_argument("--warm-slots", type=int, default=2500,
+                    help="tiered: warm-cache slots per table")
+    ap.add_argument("--refresh-every", type=int, default=8,
+                    help="tiered: re-pin the hot set every N batches")
     args = ap.parse_args()
 
     cfg = DLRMConfig(embedding=EmbeddingStageConfig(
-        num_tables=8, rows=50_000, dim=128, pooling=20))
+        num_tables=TABLES, rows=ROWS, dim=128, pooling=POOL,
+        storage=args.storage))
     model = DLRM(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    fwd = jax.jit(lambda d, i: model.forward(params, d, i))
-    emb = jax.jit(lambda i: model.embedding_only(params, i))
+    emb = (jax.jit(lambda i: model.embedding_only(params, i))
+           if args.storage == "device" else None)
+
+    if args.storage == "device":
+        fwd = jax.jit(lambda d, i: model.forward(params, d, i))
+    else:
+        rest = jax.jit(lambda d, p: model.forward_from_pooled(params, d, p))
+
+        def fwd(dense, idx):
+            pooled = model.ebc.apply(params, idx)   # host PS + device pool
+            return rest(jnp.asarray(dense), pooled)
+
     # warm up (compile) outside the latency measurement
     wd = jnp.zeros((args.batch, cfg.dense_features), jnp.float32)
-    wi = jnp.zeros((args.batch, 8, 20), jnp.int32)
-    jax.block_until_ready(fwd(wd, wi))
-    jax.block_until_ready(emb(wi))
+    wi = jnp.zeros((args.batch, TABLES, POOL), jnp.int32)
 
     for hotness in ("one_item", "high_hot", "med_hot", "low_hot", "random"):
-        stream = DLRMQueryStream(num_tables=8, rows=50_000, pooling=20,
+        stream = DLRMQueryStream(num_tables=TABLES, rows=ROWS, pooling=POOL,
                                  batch_size=args.batch, hotness=hotness,
                                  seed=0)
+        ps = None
+        if args.storage == "tiered":
+            # plan the hot tier from an offline trace of this traffic, then
+            # let periodic refresh keep it pinned to the live distribution
+            ps = model.ebc.build_parameter_server(
+                params,
+                PSConfig(hot_rows=args.hot_rows, warm_slots=args.warm_slots,
+                         prefetch_depth=2, window_batches=16),
+                trace=stream.sample_trace(2))
+        jax.block_until_ready(fwd(np.asarray(wd), np.asarray(wi)))
+        if emb is not None:
+            jax.block_until_ready(emb(wi))
+        if ps is not None:
+            # warmup's all-zero batch is not traffic: drop its counters AND
+            # its footprint (warm-cache entry, refresh-window batch)
+            ps.flush()
+            ps.reset_stats()
         srv = InferenceServer(fwd, BatcherConfig(max_batch=args.batch,
-                                                 max_wait_s=0.0), sla_ms=500)
+                                                 max_wait_s=0.0), sla_ms=500,
+                              ps=ps,
+                              refresh_every_batches=args.refresh_every)
         served = 0
         while served < args.queries:
             b = stream.next_batch()
@@ -53,18 +98,26 @@ def main():
             served += args.batch
         srv.drain()
 
-        # embedding-stage share (paper Fig. 1)
-        idx = jnp.asarray(stream.next_batch().indices)
-        t0 = time.perf_counter()
-        jax.block_until_ready(emb(idx))
-        t_emb = time.perf_counter() - t0
         pct = srv.stats.percentiles()
-        frac = t_emb / max(np.mean(srv.stats.batch_latencies_s), 1e-9)
-        print(f"{hotness:9s} served={pct['served']:4d} "
-              f"p50={pct['p50_ms']:.1f}ms p99={pct['p99_ms']:.1f}ms "
-              f"batch={pct['mean_batch_ms']:.1f}ms "
-              f"emb_share~{min(frac, 1.0):.0%} "
-              f"sla_viol={srv.sla_violations()}")
+        line = (f"{hotness:9s} served={pct['served']:4d} "
+                f"p50={pct['p50_ms']:.1f}ms p99={pct['p99_ms']:.1f}ms "
+                f"batch={pct['mean_batch_ms']:.1f}ms "
+                f"sla_viol={srv.sla_violations()}")
+        if args.storage == "tiered":
+            line += (f" hit={pct['cache_hit_rate']:.2f} "
+                     f"(hot={pct['hot_hit_rate']:.2f} "
+                     f"warm={pct['warm_hit_rate']:.2f}) "
+                     f"evict={pct['evictions']} "
+                     f"refresh={pct['refreshes']}")
+        else:
+            # embedding-stage share (paper Fig. 1)
+            idx = jnp.asarray(stream.next_batch().indices)
+            t0 = time.perf_counter()
+            jax.block_until_ready(emb(idx))
+            t_emb = time.perf_counter() - t0
+            frac = t_emb / max(np.mean(srv.stats.batch_latencies_s), 1e-9)
+            line += f" emb_share~{min(frac, 1.0):.0%}"
+        print(line)
 
 
 if __name__ == "__main__":

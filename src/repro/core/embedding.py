@@ -26,6 +26,22 @@ from repro.core import hot_cache
 from repro.kernels.embedding_bag import EmbeddingBagOpts, embedding_bag
 
 
+def _pool_rows_core(rows_t: jnp.ndarray, w_t: jnp.ndarray | None,
+                    combine: str, pooling: int) -> jnp.ndarray:
+    """Pool gathered rows [T, B, L, D] -> [T, B, D].
+
+    The single reduction shared by the dense-XLA and tiered paths — both
+    feed it identically-valued [T, B, L, D] rows, which is what makes
+    storage='tiered' bit-identical to storage='device'.
+    """
+    if w_t is not None:
+        rows_t = rows_t * w_t[..., None].astype(rows_t.dtype)
+    pooled = rows_t.sum(axis=2)
+    if combine == "mean":
+        pooled = pooled / pooling
+    return pooled
+
+
 @dataclasses.dataclass(frozen=True)
 class EmbeddingStageConfig:
     num_tables: int = 250          # paper §V
@@ -36,6 +52,10 @@ class EmbeddingStageConfig:
     combine: str = "sum"           # bag pooling mode
     # paper-mechanism knobs
     backend: str = "auto"          # 'xla' (baseline) | 'pallas' | 'auto'
+    # 'device': tables fully HBM-resident (seed behaviour). 'tiered': tables
+    # live in the repro/ps parameter server (hot/warm device tiers + host
+    # cold tier) — beyond-HBM models; bit-exact with the device path.
+    storage: str = "device"        # 'device' | 'tiered'
     prefetch_distance: int = 8
     batch_block: int = 8
     pinned_rows: int = 0           # K per table; paper: 60K rows across L2
@@ -65,8 +85,19 @@ class EmbeddingBagCollection:
     """Functional module: init(rng) -> params; apply(params, indices) -> pooled."""
 
     def __init__(self, cfg: EmbeddingStageConfig,
-                 plans: Optional[list[hot_cache.HotPlan]] = None):
+                 plans: Optional[list[hot_cache.HotPlan]] = None,
+                 ps=None):
+        if cfg.storage not in ("device", "tiered"):
+            raise ValueError(f"storage must be 'device' or 'tiered', "
+                             f"got {cfg.storage!r}")
+        if cfg.storage == "tiered" and cfg.pinned_rows > 0:
+            # The parameter server owns the hot-first permutation (its hot
+            # tier); a second EBC-level remap would double-remap indices.
+            raise ValueError("storage='tiered' manages hot rows in the "
+                             "parameter server; set pinned_rows=0 and size "
+                             "the hot tier via PSConfig.hot_rows")
         self.cfg = cfg
+        self.ps = ps                   # repro.ps.ParameterServer (tiered)
         # One plan per table; identity when pinning is off.
         if plans is None:
             plans = [hot_cache.identity_plan(cfg.rows, cfg.pinned_rows)
@@ -77,6 +108,20 @@ class EmbeddingBagCollection:
         self._remap = (
             np.stack([p.inv_perm for p in plans]).astype(np.int32)
             if cfg.pinned_rows > 0 else None)
+
+    def build_parameter_server(self, params: dict, ps_cfg,
+                               trace: Optional[np.ndarray] = None):
+        """Move initialized tables into a tiered ParameterServer and attach.
+
+        `params["tables"]` becomes the host cold tier (authoritative copy);
+        the hot tier is planned from `trace` when given. Returns the server.
+        """
+        from repro.ps import ParameterServer  # lazy: ps imports core
+        if "tables" not in params and "embedding" in params:
+            params = params["embedding"]      # full DLRM params accepted
+        tables = np.asarray(params["tables"])[:self.cfg.num_tables]
+        self.ps = ParameterServer(tables, ps_cfg, trace=trace)
+        return self.ps
 
     def init(self, rng: jax.Array) -> dict:
         cfg = self.cfg
@@ -101,11 +146,33 @@ class EmbeddingBagCollection:
         return jax.vmap(lambda r, idx: r[idx], in_axes=(0, 1), out_axes=1)(
             remap, indices)
 
+    def _apply_tiered(self, indices, weights) -> jnp.ndarray:
+        """Tiered path: rows come from the parameter server (host call — run
+        OUTSIDE jit), pooling runs on device via the same reduction as the
+        dense XLA branch, so outputs are bit-identical."""
+        if self.ps is None:
+            raise RuntimeError(
+                "storage='tiered' needs a ParameterServer: call "
+                "build_parameter_server(params, ps_cfg) or pass ps= to "
+                "EmbeddingBagCollection")
+        rows = self.ps.lookup(np.asarray(indices))      # [B, T, L, D]
+        rows_t = jnp.swapaxes(jnp.asarray(rows), 0, 1)  # [T, B, L, D]
+        w_t = (None if weights is None
+               else jnp.swapaxes(jnp.asarray(weights), 0, 1))
+        # eager on purpose: op-by-op execution matches the dense path's
+        # eager reduction bit-for-bit (a jitted wrapper re-fuses mul+sum
+        # and drifts by 1 ULP)
+        pooled = _pool_rows_core(rows_t, w_t, self.cfg.combine,
+                                 self.cfg.pooling)
+        return jnp.swapaxes(pooled, 0, 1)               # [B, T, D]
+
     def apply(self, params: dict, indices: jnp.ndarray,
               weights: jnp.ndarray | None = None, *,
               pre_remapped: bool = False) -> jnp.ndarray:
         """indices: [B, T, L] int32 -> pooled [B, T, D]."""
         cfg = self.cfg
+        if cfg.storage == "tiered":
+            return self._apply_tiered(indices, weights)
         if not pre_remapped:
             indices = self.remap_indices(indices)
         tables = params["tables"]                      # [T(+pad), R, D]
@@ -132,11 +199,7 @@ class EmbeddingBagCollection:
                                     and jax.default_backend() != "tpu"):
             rows = jax.vmap(
                 lambda t, i: jnp.take(t, i, axis=0))(tables, idx_t)  # [T,B,L,D]
-            if w_t is not None:
-                rows = rows * w_t[..., None].astype(rows.dtype)
-            pooled = rows.sum(axis=2)
-            if cfg.combine == "mean":
-                pooled = pooled / cfg.pooling
+            pooled = _pool_rows_core(rows, w_t, cfg.combine, cfg.pooling)
         else:
             opts = self.cfg.kernel_opts(interpret=jax.default_backend() != "tpu")
             def one(table, idx, w):

@@ -43,6 +43,8 @@ class DLRMQueryStream:
         assert len(hotness) == num_tables
         self.patterns = [make_pattern(h, rows, seed=seed + t)
                          for t, h in enumerate(hotness)]
+        self.num_tables = num_tables
+        self.rows = rows
         self.batch_size = batch_size
         self.pooling = pooling
         self.dense_features = dense_features
@@ -72,6 +74,24 @@ class DLRMQueryStream:
         )
         self.step += 1
         return batch
+
+    def sample_trace(self, num_batches: int = 4,
+                     peek: bool = False) -> np.ndarray:
+        """The next `num_batches` batches' indices as one planning trace
+        [num_batches * B, T, L] — offline profiling input for hot-tier
+        planning (paper §IV-C) and the tiered parameter server's initial
+        plans. By default the profiled batches are CONSUMED (they are the
+        profiling window's traffic; serving continues on fresh batches —
+        planning and evaluation windows must not coincide). `peek=True`
+        restores the stream position instead."""
+        step0 = self.step
+        try:
+            return np.concatenate(
+                [self.next_batch().indices for _ in range(num_batches)],
+                axis=0)
+        finally:
+            if peek:
+                self.step = step0
 
     def __iter__(self) -> Iterator[DLRMBatch]:
         while True:

@@ -201,7 +201,9 @@ def embedding_bag_pallas(table: jnp.ndarray, indices: jnp.ndarray,
             pltpu.VMEM((distance, dim), table.dtype),  # DMA dst dtype == src
             pltpu.SemaphoreType.DMA((distance,)),
         ],
-        compiler_params=pltpu.CompilerParams(
+        # CompilerParams was TPUCompilerParams before jax 0.5; support both
+        compiler_params=getattr(pltpu, "CompilerParams",
+                                getattr(pltpu, "TPUCompilerParams", None))(
             dimension_semantics=("arbitrary",),
         ),
         interpret=opts.interpret,

@@ -18,7 +18,8 @@ from repro.launch.steps import (make_dlrm_serve_step,       # noqa: E402
                                 make_dlrm_train_step, make_step)
 from repro.models import model_flops                        # noqa: E402
 from repro.models.config import SHAPES, shapes_for          # noqa: E402
-from repro.roofline.analyze import HloCost, roofline_terms  # noqa: E402
+from repro.roofline.analyze import (HloCost, roofline_terms,  # noqa: E402
+                                    xla_cost_analysis)
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")
@@ -64,7 +65,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     print(compiled.memory_analysis())   # proves it fits (per instructions)
-    xla_cost = dict(compiled.cost_analysis())
+    xla_cost = xla_cost_analysis(compiled)
     print({k: xla_cost.get(k) for k in ("flops", "bytes accessed")})
     hlo = compiled.as_text()
     terms = roofline_terms(hlo, num_chips=num_chips, xla_cost=xla_cost)

@@ -74,9 +74,18 @@ class DLRM:
                 sparse_indices: jnp.ndarray,
                 sparse_weights: jnp.ndarray | None = None) -> jnp.ndarray:
         """dense: [B, F]; sparse_indices: [B, T, L] -> CTR logits [B]."""
-        bottom = mlp_tower_apply(params["bottom"], dense, final_act=True)
         pooled = self.ebc.apply(params["embedding"], sparse_indices,
                                 sparse_weights)
+        return self.forward_from_pooled(params, dense, pooled)
+
+    def forward_from_pooled(self, params: dict, dense: jnp.ndarray,
+                            pooled: jnp.ndarray) -> jnp.ndarray:
+        """Everything after the embedding stage: pooled [B, T, D] -> logits.
+
+        Split out so tiered storage can run the parameter-server lookup on
+        the host and feed the pooled rows into this jitted remainder.
+        """
+        bottom = mlp_tower_apply(params["bottom"], dense, final_act=True)
         z = self._interact(bottom, pooled.astype(bottom.dtype))
         logit = mlp_tower_apply(params["top"], z)
         return logit[:, 0]

@@ -197,14 +197,16 @@ def _moe_apply(params, cfg, x2d, mesh):
     ep = mesh.shape["model"]
     ctx = MoEContext(ep_axis="model", ep_size=ep)
 
-    @jax.shard_map(mesh=mesh,
-                   in_specs=(
-                       {"router": P(), "wi": P("model"), "wg": P("model"),
-                        "wo": P("model"),
-                        **({"shared": P()} if "shared" in params else {})},
-                       P(tok_axes)),
-                   out_specs=P(tok_axes),
-                   check_vma=False)
+    from repro.utils import shard_map_compat
+
+    @shard_map_compat(mesh=mesh,
+                      in_specs=(
+                          {"router": P(), "wi": P("model"), "wg": P("model"),
+                           "wo": P("model"),
+                           **({"shared": P()} if "shared" in params else {})},
+                          P(tok_axes)),
+                      out_specs=P(tok_axes),
+                      check_vma=False)
     def run(p, x):
         return moe_ffn_local(p, cfg, x, ctx)
 

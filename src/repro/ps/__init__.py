@@ -1,0 +1,5 @@
+from repro.ps.cold_store import ColdStore
+from repro.ps.config import PSConfig
+from repro.ps.prefetch import PrefetchQueue, StagedBatch
+from repro.ps.server import ParameterServer
+from repro.ps.warm_cache import WarmCache

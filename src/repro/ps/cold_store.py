@@ -1,0 +1,38 @@
+"""Cold tier — full embedding tables in host memory.
+
+Holds the authoritative copy of every table as one [T, R, D] numpy array
+(raw row-id space; no hot-first permutation — remapping is a hot-tier
+concern). Serves batched gathers for warm-tier misses and hands out whole
+hot blocks at (re)planning time. Gather counters feed the benchmark's
+host-traffic accounting.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ColdStore:
+    def __init__(self, tables: np.ndarray):
+        tables = np.ascontiguousarray(tables)
+        assert tables.ndim == 3, "expected stacked tables [T, R, D]"
+        self.tables = tables
+        self.num_tables, self.num_rows, self.dim = tables.shape
+        self.gathered_rows = 0      # rows pulled host->device (proxy)
+        self.gather_calls = 0
+
+    @property
+    def nbytes(self) -> int:
+        return self.tables.nbytes
+
+    def gather(self, table: int, rows: np.ndarray) -> np.ndarray:
+        """Batched miss resolution: rows [M] -> [M, D] (one host gather)."""
+        self.gather_calls += 1
+        self.gathered_rows += int(rows.size)
+        return self.tables[table, rows]
+
+    def hot_block(self, table: int, hot_row_ids: np.ndarray) -> np.ndarray:
+        """Materialize the device-resident hot block for one table."""
+        return self.tables[table, hot_row_ids].copy()
+
+    def row(self, table: int, row: int) -> np.ndarray:
+        return self.tables[table, row]

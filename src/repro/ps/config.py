@@ -1,0 +1,49 @@
+"""Configuration for the tiered embedding parameter server.
+
+The hierarchy generalizes the paper's two placement techniques across the
+memory system (HugeCTR HPS-style):
+
+  tier 0 (hot)  — device-resident block of the top-K hottest rows per table,
+                  stored hot-first (the paper's L2-pin analogue, §IV-C).
+  tier 1 (warm) — fixed-capacity device cache with LFU/LRU admission and
+                  eviction over row slots; misses resolve in batches.
+  tier 2 (cold) — full tables in host memory (numpy), serving batched
+                  gathers for warm misses, fronted by a prefetch queue that
+                  resolves the NEXT batch's misses while the current batch
+                  computes (the paper's software prefetching, §IV-B,
+                  generalized across the hierarchy).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PSConfig:
+    # tier 0: rows pinned hot-first per table (0 disables the hot tier)
+    hot_rows: int = 0
+    # tier 1: warm-cache slots per table (0 disables the warm tier)
+    warm_slots: int = 0
+    # admission/eviction policy for the warm tier
+    eviction: str = "lfu"          # 'lfu' | 'lru'
+    # prefetch queue depth (staged future batches); 0 disables staging
+    prefetch_depth: int = 2
+    # sliding window (in batches, per table) kept for hot-set re-planning
+    window_batches: int = 16
+    # decay applied to warm-tier frequency counters at refresh (LFU aging)
+    freq_decay: float = 0.5
+
+    def __post_init__(self):
+        if self.eviction not in ("lfu", "lru"):
+            raise ValueError(f"eviction must be 'lfu' or 'lru', "
+                             f"got {self.eviction!r}")
+        if self.hot_rows < 0 or self.warm_slots < 0:
+            raise ValueError("tier capacities must be >= 0")
+
+    def capacity_rows(self) -> int:
+        """Device-resident rows per table across hot + warm tiers."""
+        return self.hot_rows + self.warm_slots
+
+    def device_bytes(self, num_tables: int, dim: int,
+                     itemsize: int = 4) -> int:
+        return num_tables * self.capacity_rows() * dim * itemsize

@@ -1,0 +1,84 @@
+"""Prefetch queue — the paper's software prefetching across the hierarchy.
+
+The GPU kernel prefetches rows `distance` iterations ahead so the gather
+latency overlaps compute (§IV-B). At the parameter-server level the same
+idea applies one level up: while batch N computes, batch N+1's indices are
+already known (they sit in the batcher queue), so their warm-tier misses can
+be resolved against the host cold store ahead of time.
+
+`stage()` snapshots the rows a future batch will miss and gathers their
+payloads immediately; `consume()` hands those payloads back when the batch
+is actually looked up. The warm cache may have changed in between (earlier
+batches admit rows), so staged data is keyed by row id and the server only
+uses it for rows that still miss — any residual misses fall through to a
+direct cold gather. Correctness never depends on the queue; it only moves
+gather work earlier.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StagedBatch:
+    indices: np.ndarray                  # [B, T, L] raw row ids
+    rows: dict[int, np.ndarray]          # table -> distinct staged row ids
+    data: dict[int, np.ndarray]          # table -> staged payload [M, D]
+
+
+class PrefetchQueue:
+    def __init__(self, depth: int):
+        self.depth = int(depth)
+        self.queue: collections.deque[StagedBatch] = collections.deque()
+        self.staged_rows = 0
+        self.prefetch_hits = 0       # missed rows served from staged data
+        self.prefetch_misses = 0     # missed rows needing a late cold gather
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+    def stage(self, batch: StagedBatch) -> bool:
+        """Enqueue a resolved future batch; False when the queue is full."""
+        if self.depth == 0 or len(self.queue) >= self.depth:
+            return False
+        self.staged_rows += sum(int(r.size) for r in batch.rows.values())
+        self.queue.append(batch)
+        return True
+
+    def consume(self, indices: np.ndarray) -> StagedBatch | None:
+        """Pop the staged batch matching `indices` (FIFO scan), if any."""
+        for i, st in enumerate(self.queue):
+            if st.indices.shape == indices.shape and \
+                    np.array_equal(st.indices, indices):
+                del self.queue[i]
+                return st
+        return None
+
+    def split_misses(self, staged: StagedBatch | None, table: int,
+                     miss_rows: np.ndarray):
+        """Partition missed rows into (staged payload, residual row ids).
+
+        Returns (rows_hit, data_hit, rows_residual) with staged-hit payloads
+        already gathered at stage time.
+        """
+        if staged is None or table not in staged.rows or miss_rows.size == 0:
+            self.prefetch_misses += int(miss_rows.size)
+            return (np.empty(0, np.int64),
+                    np.empty((0, 0), np.float32), miss_rows)
+        srows = staged.rows[table]
+        pos = np.searchsorted(srows, miss_rows)
+        pos = np.minimum(pos, len(srows) - 1)
+        hit = srows[pos] == miss_rows
+        self.prefetch_hits += int(hit.sum())
+        self.prefetch_misses += int((~hit).sum())
+        return (miss_rows[hit], staged.data[table][pos[hit]],
+                miss_rows[~hit])
+
+    def stats(self) -> dict:
+        return {"staged_rows": self.staged_rows,
+                "prefetch_hits": self.prefetch_hits,
+                "prefetch_misses": self.prefetch_misses,
+                "queue_depth": len(self.queue)}

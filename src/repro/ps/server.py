@@ -1,0 +1,241 @@
+"""Tiered embedding parameter server (HugeCTR-HPS-shaped, paper-mechanized).
+
+Three tiers per table, probed in order:
+
+  hot  — device-resident block of the top-K rows, stored hot-first via a
+         `hot_cache.HotPlan` permutation (tier-0; the paper's L2 pinning).
+  warm — fixed-capacity LFU/LRU row cache (tier-1), batched miss admission.
+  cold — full tables in host memory (tier-2), batched gathers, fronted by a
+         prefetch queue that resolves future batches' misses early (the
+         paper's software prefetching lifted to the memory hierarchy).
+
+Every tier holds byte-identical copies of the same rows, so `lookup()` is
+bit-exact with a dense `table[indices]` gather regardless of placement —
+only locality changes. A sliding window of observed traffic supports
+`refresh()`: re-plan the hot set from recent batches (paper §IV-C "update
+the pinned data periodically") without touching served values.
+"""
+from __future__ import annotations
+
+import collections
+
+import numpy as np
+
+from repro.core import hot_cache
+from repro.ps.cold_store import ColdStore
+from repro.ps.config import PSConfig
+from repro.ps.prefetch import PrefetchQueue, StagedBatch
+from repro.ps.warm_cache import WarmCache
+
+
+class ParameterServer:
+    """lookup(indices [B, T, L]) -> rows [B, T, L, D] (float32, bit-exact)."""
+
+    def __init__(self, tables: np.ndarray, cfg: PSConfig,
+                 plans: list[hot_cache.HotPlan] | None = None,
+                 trace: np.ndarray | None = None):
+        self.cfg = cfg
+        self.cold = ColdStore(np.asarray(tables))
+        T, R, D = self.cold.tables.shape
+        k = min(cfg.hot_rows, R)
+        if plans is None:
+            if trace is not None and k > 0:
+                plans = [hot_cache.plan_from_trace(trace[:, t], R, k)
+                         for t in range(T)]
+            else:
+                plans = [hot_cache.identity_plan(R, k) for _ in range(T)]
+        assert len(plans) == T
+        self.plans = plans
+        self.warm = [WarmCache(cfg.warm_slots, D, cfg.eviction,
+                               self.cold.tables.dtype) for _ in range(T)]
+        self.prefetch = PrefetchQueue(cfg.prefetch_depth)
+        self.window: collections.deque[np.ndarray] = collections.deque(
+            maxlen=cfg.window_batches)
+        self.hot_hits = 0
+        self.total_accesses = 0
+        self.refreshes = 0
+        # one-shot hint from the serving layer: only the first N queries of
+        # the next lookup are real traffic (the rest is batcher padding)
+        self._valid_hint: int | None = None
+        self._install_hot_tier()
+
+    # -- hot tier -----------------------------------------------------------
+    def _install_hot_tier(self) -> None:
+        T, R, D = self.cold.tables.shape
+        k = min(self.cfg.hot_rows, R)
+        self.num_hot = k
+        if k > 0:
+            self._inv_perm = np.stack([p.inv_perm for p in self.plans])
+            self._hot = np.stack(
+                [self.cold.hot_block(t, self.plans[t].perm[:k])
+                 for t in range(T)])                       # [T, K, D]
+        else:
+            self._inv_perm = None
+            self._hot = None
+
+    # -- lookup -------------------------------------------------------------
+    def _lookup_table(self, t: int, flat: np.ndarray,
+                      staged: StagedBatch | None) -> np.ndarray:
+        """flat [N] raw row ids for table t -> [N, D]."""
+        D = self.cold.dim
+        out = np.empty((flat.size, D), self.cold.tables.dtype)
+        if self.num_hot > 0:
+            pos = self._inv_perm[t][flat]
+            hot = pos < self.num_hot
+            out[hot] = self._hot[t][pos[hot]]
+            self.hot_hits += int(hot.sum())
+            cold_idx = np.flatnonzero(~hot)
+        else:
+            cold_idx = np.arange(flat.size)
+        if cold_idx.size == 0:
+            return out
+
+        rows = flat[cold_idx]
+        u, inv, counts = np.unique(rows, return_inverse=True,
+                                   return_counts=True)
+        warm = self.warm[t]
+        slots = warm.probe(u)
+        resident = slots >= 0
+        vals = np.empty((len(u), D), self.cold.tables.dtype)
+        if resident.any():
+            warm.touch(slots[resident], counts[resident])
+            vals[resident] = warm.read(slots[resident])
+        if (~resident).any():
+            mu, mcounts = u[~resident], counts[~resident]
+            srows, sdata, residual = self.prefetch.split_misses(
+                staged, t, mu)
+            payload = np.empty((len(mu), D), self.cold.tables.dtype)
+            if residual.size:
+                rdata = self.cold.gather(t, residual)
+            # mu is sorted; scatter staged + residual payloads back
+            if srows.size:
+                payload[np.searchsorted(mu, srows)] = sdata
+            if residual.size:
+                payload[np.searchsorted(mu, residual)] = rdata
+            vals[~resident] = payload
+            # admit hottest-first so capacity truncation keeps the best rows
+            order = np.lexsort((mu, -mcounts))
+            warm.admit(mu[order], payload[order], mcounts[order])
+        out[cold_idx] = vals[inv]
+        return out
+
+    def hint_valid(self, n: int) -> None:
+        """Mark only the first `n` queries of the NEXT lookup as real
+        traffic. The serving batcher pads partial batches to max_batch with
+        zero queries for shape stability; without this hint those fabricated
+        row-0 accesses would inflate hit rates and skew refresh planning."""
+        self._valid_hint = int(n)
+
+    def lookup(self, indices: np.ndarray) -> np.ndarray:
+        """indices [B, T, L] raw row ids -> rows [B, T, L, D]."""
+        indices = np.asarray(indices)
+        B, T, L = indices.shape
+        assert T == self.cold.num_tables
+        valid, self._valid_hint = self._valid_hint, None
+        if valid is not None and valid < B:
+            real = self.lookup(indices[:valid])
+            # padding rows: serve values directly (uncounted, not cached)
+            pad = self.cold.tables[np.arange(T)[None, :, None],
+                                   indices[valid:]]
+            return np.concatenate([real, pad], axis=0)
+        staged = self.prefetch.consume(indices)
+        self.window.append(indices)
+        self.total_accesses += indices.size
+        out = np.empty((B, T, L, self.cold.dim), self.cold.tables.dtype)
+        for t in range(T):
+            out[:, t] = self._lookup_table(
+                t, indices[:, t].ravel(), staged).reshape(B, L, -1)
+        return out
+
+    # -- prefetch -----------------------------------------------------------
+    def stage(self, indices: np.ndarray) -> bool:
+        """Pre-resolve a FUTURE batch's cold misses (overlap analogue).
+
+        Gathers, at call time, every row the batch would miss in hot+warm;
+        `lookup()` later consumes the staged payload instead of touching the
+        cold store on the critical path. Always correctness-neutral: rows
+        admitted to warm (or re-pinned hot) in between are simply unused.
+        """
+        if self.prefetch.depth == 0 or \
+                len(self.prefetch.queue) >= self.prefetch.depth:
+            return False    # queue full: don't burn gathers on a discard
+        indices = np.asarray(indices)
+        rows: dict[int, np.ndarray] = {}
+        data: dict[int, np.ndarray] = {}
+        for t in range(self.cold.num_tables):
+            flat = indices[:, t].ravel()
+            if self.num_hot > 0:
+                flat = flat[self._inv_perm[t][flat] >= self.num_hot]
+            u = np.unique(flat)
+            miss = u[self.warm[t].probe(u) < 0]
+            if miss.size:
+                rows[t] = miss
+                data[t] = self.cold.gather(t, miss)
+        return self.prefetch.stage(StagedBatch(indices, rows, data))
+
+    def flush(self) -> None:
+        """Drop cached state — warm entries, the traffic window, staged
+        batches — without touching the hot tier, plans, or counters. Use
+        after synthetic traffic (e.g. jit warmup batches) so it cannot
+        linger in the warm cache or skew the next refresh()."""
+        for w in self.warm:
+            w.clear()
+        self.window.clear()
+        self.prefetch.queue.clear()
+
+    # -- periodic re-pinning ------------------------------------------------
+    def refresh(self) -> dict:
+        """Re-plan the hot tier from the sliding traffic window (§IV-C)."""
+        if not self.window or self.num_hot == 0:
+            if self.cfg.freq_decay < 1.0:
+                for w in self.warm:
+                    w.decay(self.cfg.freq_decay)
+            return {"replanned": False, "refreshes": self.refreshes}
+        trace = np.concatenate([w.reshape(w.shape[0], w.shape[1], -1)
+                                for w in self.window], axis=0)  # [N, T, L]
+        R = self.cold.num_rows
+        self.plans = [hot_cache.plan_from_trace(trace[:, t], R, self.num_hot)
+                      for t in range(self.cold.num_tables)]
+        self._install_hot_tier()
+        for t, w in enumerate(self.warm):
+            w.invalidate(self.plans[t].perm[:self.num_hot])
+            if self.cfg.freq_decay < 1.0:
+                w.decay(self.cfg.freq_decay)
+        # staged payloads remain valid (keyed by raw row id); keep the queue
+        self.refreshes += 1
+        return {"replanned": True, "refreshes": self.refreshes}
+
+    # -- stats --------------------------------------------------------------
+    def stats(self) -> dict:
+        warm_hits = sum(w.hits for w in self.warm)
+        warm_misses = sum(w.misses for w in self.warm)
+        total = self.total_accesses
+        s = {
+            "total_accesses": total,
+            "hot_hits": self.hot_hits,
+            "warm_hits": warm_hits,
+            "cold_misses": warm_misses,
+            "evictions": sum(w.evictions for w in self.warm),
+            "insertions": sum(w.insertions for w in self.warm),
+            "warm_occupancy": sum(len(w) for w in self.warm),
+            "refreshes": self.refreshes,
+            "hot_hit_rate": self.hot_hits / total if total else 0.0,
+            "warm_hit_rate": warm_hits / total if total else 0.0,
+            "cold_miss_rate": warm_misses / total if total else 0.0,
+            "cache_hit_rate": (self.hot_hits + warm_hits) / total
+                              if total else 0.0,
+            "cold_gathered_rows": self.cold.gathered_rows,
+        }
+        s.update(self.prefetch.stats())
+        return s
+
+    def reset_stats(self) -> None:
+        self.hot_hits = 0
+        self.total_accesses = 0
+        for w in self.warm:
+            w.hits = w.misses = w.evictions = w.insertions = 0
+        self.cold.gathered_rows = 0
+        self.cold.gather_calls = 0
+        self.prefetch.staged_rows = 0
+        self.prefetch.prefetch_hits = 0
+        self.prefetch.prefetch_misses = 0

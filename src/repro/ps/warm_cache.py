@@ -1,0 +1,132 @@
+"""Warm tier — fixed-capacity per-table row cache with LFU/LRU eviction.
+
+Slot-array layout mirrors a device-side cache: `data [C, D]` is the cached
+row payload (the device allocation analogue), `slot_row / slot_freq /
+slot_tick` are the tag store. Admission is miss-driven and batched: the
+server resolves a lookup's distinct missing rows against the cold store in
+one gather and admits them together, evicting the coldest victims
+(lowest-frequency for LFU, least-recent for LRU; ties broken by older tick
+then slot id — fully deterministic).
+
+Counters are access-granular with standard cache semantics: a row resident
+at batch start counts every access as a hit; a missed row counts ONE miss
+(the fetch that brings it in) and its remaining same-batch accesses as hits
+— intra-batch reuse is served from the just-fetched payload, exactly like a
+hardware cache line filled on first touch.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class WarmCache:
+    """One table's warm cache."""
+
+    def __init__(self, capacity: int, dim: int, policy: str = "lfu",
+                 dtype=np.float32):
+        assert policy in ("lfu", "lru")
+        self.capacity = int(capacity)
+        self.policy = policy
+        self.data = np.zeros((self.capacity, dim), dtype)
+        self.slot_row = np.full(self.capacity, -1, np.int64)
+        self.slot_freq = np.zeros(self.capacity, np.int64)
+        self.slot_tick = np.zeros(self.capacity, np.int64)
+        self.loc: dict[int, int] = {}      # row id -> slot
+        self.tick = 0
+        # access-granular counters
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.insertions = 0
+
+    def __len__(self) -> int:
+        return len(self.loc)
+
+    def probe(self, rows: np.ndarray) -> np.ndarray:
+        """rows [M] (distinct) -> slot per row, -1 where absent."""
+        return np.fromiter((self.loc.get(int(r), -1) for r in rows),
+                           dtype=np.int64, count=len(rows))
+
+    def read(self, slots: np.ndarray) -> np.ndarray:
+        return self.data[slots]
+
+    def touch(self, slots: np.ndarray, counts: np.ndarray) -> None:
+        """Register `counts[i]` accesses to resident slot `slots[i]`."""
+        self.tick += 1
+        self.slot_freq[slots] += counts
+        self.slot_tick[slots] = self.tick
+        self.hits += int(counts.sum())
+
+    def admit(self, rows: np.ndarray, payload: np.ndarray,
+              counts: np.ndarray) -> int:
+        """Insert distinct missed rows (evicting victims as needed).
+
+        Returns the number of evictions. When more rows arrive than the
+        cache holds, only the first `capacity` are admitted (the rest stay
+        cold-only — still correct, just uncached).
+        """
+        # one miss per distinct fetched row; its remaining accesses in this
+        # batch are reuse of the fetched payload (hits)
+        self.misses += len(rows)
+        self.hits += int(counts.sum()) - len(rows)
+        if self.capacity == 0 or len(rows) == 0:
+            return 0
+        self.tick += 1
+        n = min(len(rows), self.capacity)
+        rows, payload, counts = rows[:n], payload[:n], counts[:n]
+
+        free = np.flatnonzero(self.slot_row < 0)
+        n_evict = max(0, n - len(free))
+        if n_evict:
+            occupied = np.flatnonzero(self.slot_row >= 0)
+            if self.policy == "lfu":
+                order = np.lexsort((occupied, self.slot_tick[occupied],
+                                    self.slot_freq[occupied]))
+            else:  # lru
+                order = np.lexsort((occupied, self.slot_tick[occupied]))
+            victims = occupied[order[:n_evict]]
+            for s in victims:
+                del self.loc[int(self.slot_row[s])]
+            self.evictions += n_evict
+            slots = np.concatenate([free, victims])[:n]
+        else:
+            slots = free[:n]
+
+        self.data[slots] = payload
+        self.slot_row[slots] = rows
+        self.slot_freq[slots] = counts
+        self.slot_tick[slots] = self.tick
+        for r, s in zip(rows, slots):
+            self.loc[int(r)] = int(s)
+        self.insertions += n
+        return n_evict
+
+    def invalidate(self, rows: np.ndarray) -> int:
+        """Drop entries (e.g. rows promoted to the hot tier at refresh)."""
+        dropped = 0
+        for r in rows:
+            s = self.loc.pop(int(r), None)
+            if s is not None:
+                self.slot_row[s] = -1
+                self.slot_freq[s] = 0
+                self.slot_tick[s] = 0
+                dropped += 1
+        return dropped
+
+    def clear(self) -> None:
+        """Drop every entry (counters untouched)."""
+        self.slot_row.fill(-1)
+        self.slot_freq.fill(0)
+        self.slot_tick.fill(0)
+        self.loc.clear()
+
+    def decay(self, factor: float) -> None:
+        """LFU aging so a stale hot burst cannot pin slots forever."""
+        self.slot_freq = (self.slot_freq * factor).astype(np.int64)
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "insertions": self.insertions,
+                "occupancy": len(self.loc),
+                "hit_rate": self.hits / total if total else 0.0}

@@ -32,6 +32,31 @@ from typing import Dict, List, Optional
 from repro.roofline.hw import (DTYPE_BYTES, HBM_BW, ICI_BW_PER_LINK,
                                PEAK_FLOPS_BF16)
 
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize `Compiled.cost_analysis()` across JAX versions.
+
+    The API has drifted: some versions return a bare properties dict, others
+    a list with one dict per device program (and `None` is possible when the
+    backend reports nothing). Returns a single flat dict, summing numeric
+    properties across list entries.
+    """
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, dict):
+        return dict(ca)
+    out: dict = {}
+    for entry in ca:
+        if not isinstance(entry, dict):
+            continue
+        for k, v in entry.items():
+            if isinstance(v, (int, float)):
+                out[k] = out.get(k, 0.0) + v
+            else:
+                out.setdefault(k, v)
+    return out
+
+
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 _TRANSPARENT = {"convert", "bitcast", "copy", "reshape", "transpose",

@@ -39,11 +39,14 @@ class Batcher:
         q.arrival_s = time.perf_counter()
         self.queue.append(q)
 
-    def next_batch(self) -> Optional[list[Query]]:
+    def next_batch(self, force: bool = False) -> Optional[list[Query]]:
+        """A full batch, or a partial one once the head query's batching
+        window has elapsed. `force=True` flushes a partial batch
+        immediately (drain/shutdown path)."""
         if not self.queue:
             return None
         deadline = self.queue[0].arrival_s + self.cfg.max_wait_s
-        if (len(self.queue) < self.cfg.max_batch
+        if (not force and len(self.queue) < self.cfg.max_batch
                 and time.perf_counter() < deadline):
             return None
         out = []
@@ -57,45 +60,92 @@ class ServeStats:
     served: int = 0
     batch_latencies_s: list = dataclasses.field(default_factory=list)
     query_latencies_s: list = dataclasses.field(default_factory=list)
+    # tiered parameter-server cache counters (storage='tiered' only):
+    # hot/warm hit rates, cold misses, evictions, refreshes — updated by
+    # InferenceServer.poll() after every executed batch.
+    ps_stats: dict = dataclasses.field(default_factory=dict)
+
+    _PS_KEYS = ("hot_hit_rate", "warm_hit_rate", "cache_hit_rate",
+                "cold_miss_rate", "hot_hits", "warm_hits", "cold_misses",
+                "evictions", "refreshes", "prefetch_hits")
 
     def percentiles(self) -> dict:
         if not self.query_latencies_s:
             return {}
         q = np.asarray(self.query_latencies_s) * 1e3
         b = np.asarray(self.batch_latencies_s) * 1e3
-        return {"p50_ms": float(np.percentile(q, 50)),
-                "p95_ms": float(np.percentile(q, 95)),
-                "p99_ms": float(np.percentile(q, 99)),
-                "mean_batch_ms": float(b.mean()),
-                "served": self.served}
+        out = {"p50_ms": float(np.percentile(q, 50)),
+               "p95_ms": float(np.percentile(q, 95)),
+               "p99_ms": float(np.percentile(q, 99)),
+               "mean_batch_ms": float(b.mean()),
+               "served": self.served}
+        for k in self._PS_KEYS:
+            if k in self.ps_stats:
+                out[k] = self.ps_stats[k]
+        return out
 
 
 class InferenceServer:
-    """forward(dense [B,F], indices [B,T,L]) -> scores [B]."""
+    """forward(dense [B,F], indices [B,T,L]) -> scores [B].
+
+    When serving a tiered-storage model, pass its `ParameterServer` as
+    `ps`: the server then (a) stages the NEXT pending batch's cache misses
+    before executing the current one (prefetch overlap), (b) re-plans the
+    hot tier every `refresh_every_batches` executed batches from the PS's
+    sliding traffic window (paper §IV-C periodic re-pinning), and (c)
+    mirrors cache counters into `stats.percentiles()`.
+    """
 
     def __init__(self, forward: Callable, batcher_cfg: BatcherConfig,
-                 sla_ms: float = 50.0):
+                 sla_ms: float = 50.0, ps=None,
+                 refresh_every_batches: int = 0):
         self.forward = forward
         self.batcher = Batcher(batcher_cfg)
         self.sla_s = sla_ms / 1e3
         self.stats = ServeStats()
+        self.ps = ps
+        self.refresh_every_batches = refresh_every_batches
+        self._executed_batches = 0
 
     def submit(self, q: Query) -> None:
         self.batcher.submit(q)
 
-    def poll(self) -> int:
-        """Execute at most one batch; returns #queries served."""
-        batch = self.batcher.next_batch()
-        if not batch:
-            return 0
+    def _assemble(self, batch: list[Query]):
         cfg = self.batcher.cfg
-        n = len(batch)
-        b = cfg.max_batch if cfg.pad_to_max else n
+        b = cfg.max_batch if cfg.pad_to_max else len(batch)
         dense = np.zeros((b,) + batch[0].dense.shape, np.float32)
         idx = np.zeros((b,) + batch[0].indices.shape, np.int32)
         for i, q in enumerate(batch):
             dense[i] = q.dense
             idx[i] = q.indices
+        return dense, idx
+
+    def _stage_next(self) -> None:
+        """Prefetch: resolve the next FULL pending batch's cold misses now,
+        so its host gathers overlap the current batch's compute. Only a
+        full batch is staged — its contents are then FIFO-deterministic, so
+        the staged indices exactly match the upcoming lookup."""
+        q = self.batcher.queue
+        if len(q) < self.batcher.cfg.max_batch:
+            return
+        nxt = list(q)[:self.batcher.cfg.max_batch]
+        _, idx = self._assemble(nxt)
+        self.ps.stage(idx)
+
+    def poll(self, force: bool = False) -> int:
+        """Execute at most one batch; returns #queries served."""
+        batch = self.batcher.next_batch(force=force)
+        if not batch:
+            return 0
+        n = len(batch)
+        dense, idx = self._assemble(batch)
+        if self.ps is not None:
+            # outside the timed region: staging models work that overlaps
+            # the PREVIOUS batch's compute, so it must not bill this batch
+            self._stage_next()
+            # batcher padding is not traffic — keep it out of cache stats
+            # and the refresh window
+            self.ps.hint_valid(n)
         t0 = time.perf_counter()
         scores = self.forward(dense, idx)
         np.asarray(scores)  # block
@@ -104,12 +154,27 @@ class InferenceServer:
         for q in batch:
             self.stats.query_latencies_s.append(t1 - q.arrival_s)
         self.stats.served += n
+        if self.ps is not None:
+            self._executed_batches += 1
+            if (self.refresh_every_batches
+                    and self._executed_batches
+                    % self.refresh_every_batches == 0):
+                self.ps.refresh()
+            self.stats.ps_stats = self.ps.stats()
         return n
 
     def drain(self, timeout_s: float = 10.0) -> None:
+        """Serve until the queue empties. Honours the batching window while
+        it is open, but force-flushes the partial batch once the head
+        query's deadline — or this call's own timeout — is reached, so a
+        sub-`max_batch` remainder can never starve (busy-spin bug)."""
         t0 = time.perf_counter()
-        while self.batcher.queue and time.perf_counter() - t0 < timeout_s:
-            self.poll()
+        while self.batcher.queue:
+            now = time.perf_counter()
+            head_deadline = (self.batcher.queue[0].arrival_s
+                             + self.batcher.cfg.max_wait_s)
+            force = now >= head_deadline or now - t0 >= timeout_s
+            self.poll(force=force)
 
     def sla_violations(self) -> int:
         return int(np.sum(np.asarray(self.stats.query_latencies_s)

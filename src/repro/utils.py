@@ -26,6 +26,23 @@ def asdict_shallow(cfg: Any) -> dict:
     return {f.name: getattr(cfg, f.name) for f in dataclasses.fields(cfg)}
 
 
+def shard_map_compat(*, mesh, in_specs, out_specs, check_vma=True):
+    """Decorator form of shard_map across JAX versions.
+
+    Newer JAX exposes `jax.shard_map(..., check_vma=)`; older releases have
+    `jax.experimental.shard_map.shard_map(..., check_rep=)`. Same semantics.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map
+
+    def deco(fn):
+        return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=check_vma)
+    return deco
+
+
 @contextlib.contextmanager
 def timed(label: str, sink: dict | None = None) -> Iterator[None]:
     t0 = time.perf_counter()
