@@ -333,11 +333,98 @@ def tiered_ps_capacity_sweep():
                  f"evict={st['evictions']}")
 
 
+def tiered_ps_sync_vs_async():
+    """Sync vs async (threaded, double-buffered) prefetch staging.
+
+    Runs identical traffic through both engines, verifies every lookup is
+    bit-exact across modes, and reports the overlap stats the async path
+    exists for: max queue depth, the fraction of cold-missed rows resolved
+    off the critical path (`off_critical`), and — async only — how often
+    the consumer found its double buffer already resolved (`overlap`) vs
+    had to wait for / inline-resolve it (`waits`).
+    """
+    from repro.ps import ParameterServer, PSConfig
+    rows, batch, pool, dim, t_count = 2000, 256, 20, 8, 4
+    rng = np.random.default_rng(0)
+    tables = rng.normal(size=(t_count, rows, dim)).astype(np.float32)
+
+    def run(hotness, async_prefetch):
+        pats = [make_pattern(hotness, rows, seed=t) for t in range(t_count)]
+
+        def mk(seed):
+            return np.stack([p.sample(batch, pool, seed=seed * 100 + t)
+                             for t, p in enumerate(pats)],
+                            axis=1).astype(np.int32)
+        cfg = PSConfig(hot_rows=100, warm_slots=100, prefetch_depth=2,
+                       async_prefetch=async_prefetch, window_batches=8)
+        ps = ParameterServer(tables, cfg,
+                             trace=np.concatenate([mk(s) for s in range(2)],
+                                                  axis=0))
+        outs = []
+        for s in range(2, 10):
+            ps.stage(mk(s + 1))                # overlap the next batch
+            outs.append(ps.lookup(mk(s)))
+            if s == 5:
+                ps.refresh()                   # re-pin mid-stream
+        st = ps.stats()
+        ps.close()
+        return np.stack(outs), st
+
+    for h in ("med_hot", "random"):
+        res = {m: run(h, m == "async") for m in ("sync", "async")}
+        exact = bool(np.array_equal(res["sync"][0], res["async"][0]))
+        for m, (_, st) in res.items():
+            line = (f"bit_exact={exact} "
+                    f"off_critical={st['off_critical_frac']:.3f} "
+                    f"qdepth_max={st['max_queue_depth']}")
+            if m == "async":
+                line += (f" overlap={st['consume_overlap_frac']:.2f} "
+                         f"waits={st['consume_waited']}")
+            emit(f"tiered_ps_{m}_prefetch/{h}", "", line)
+
+
+def tiered_ps_autotune():
+    """Planner-driven tier sizing: `plan_tier_capacities()` splits a device
+    byte budget into hot/warm capacities from the trace's coverage curve,
+    then the planned config is measured on fresh traffic of the same
+    distribution (achieved cache hit rate vs the planner's coverage bound).
+    """
+    from repro.core import plan_tier_capacities
+    from repro.ps import ParameterServer, PSConfig
+    rows, batch, pool, dim, t_count = 2000, 256, 20, 8, 4
+    for h in ("high_hot", "med_hot", "low_hot"):
+        pats = [make_pattern(h, rows, seed=t) for t in range(t_count)]
+
+        def mk(seed):
+            return np.stack([p.sample(batch, pool, seed=seed * 100 + t)
+                             for t, p in enumerate(pats)],
+                            axis=1).astype(np.int32)
+        trace = np.concatenate([mk(s) for s in range(2)], axis=0)
+        for budget_kib in (8, 32, 128):
+            plan = plan_tier_capacities(trace, rows, dim,
+                                        budget_kib * 1024)
+            cfg = PSConfig.from_plan(plan, prefetch_depth=2)
+            ps = ParameterServer(
+                np.zeros((t_count, rows, dim), np.float32), cfg,
+                trace=trace)
+            for s in range(2, 4):                      # warmup
+                ps.lookup(mk(s))
+            ps.reset_stats()
+            for s in range(4, 8):                      # measured
+                ps.lookup(mk(s))
+            st = ps.stats()
+            emit(f"tiered_ps_autotune_kib{budget_kib}/{h}", "",
+                 f"hot={plan.hot_rows} warm={plan.warm_slots} "
+                 f"plan_cov={plan.total_coverage:.3f} "
+                 f"hit={st['cache_hit_rate']:.3f}")
+
+
 ALL = [tab3_unique_access, fig5_coverage, fig1_embedding_contribution,
        fig6_pipeline_sweep, fig9_prefetch_distance, fig11_l2p_pooling,
        fig12_embedding_speedup, fig12_measured_cpu, fig13_e2e_speedup,
        fig14_gap, fig15_buffer_schemes, fig16_no_optmt, fig17_heterogeneous,
-       tab45_microarch, tiered_ps_capacity_sweep]
+       tab45_microarch, tiered_ps_capacity_sweep, tiered_ps_sync_vs_async,
+       tiered_ps_autotune]
 
 
 def main() -> None:

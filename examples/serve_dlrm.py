@@ -8,9 +8,15 @@ With --storage tiered the embedding tables live in the tiered parameter
 server (repro/ps): top rows pinned device-side hot-first, an LFU warm cache,
 full tables in host memory, periodic hot-set re-pinning from live traffic —
 the beyond-HBM serving shape. Cache hit/miss stats join the report line.
+--async moves both overlap mechanisms off the critical path (threaded
+prefetch double buffer + helper-thread re-planning); --auto-budget-kib
+sizes the tiers from the trace with core.plan.plan_tier_capacities instead
+of --hot-rows/--warm-slots. See docs/serving.md for the full operator guide.
 
     PYTHONPATH=src python examples/serve_dlrm.py [--queries 256]
     PYTHONPATH=src python examples/serve_dlrm.py --storage tiered
+    PYTHONPATH=src python examples/serve_dlrm.py --storage tiered --async \
+        --auto-budget-kib 4096 --warm-backing device
 """
 import argparse
 import time
@@ -40,6 +46,16 @@ def main():
                     help="tiered: warm-cache slots per table")
     ap.add_argument("--refresh-every", type=int, default=8,
                     help="tiered: re-pin the hot set every N batches")
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="tiered: threaded prefetch (double buffer) + "
+                         "helper-thread hot-set re-planning")
+    ap.add_argument("--warm-backing", choices=("host", "device"),
+                    default="host",
+                    help="tiered: warm-cache payload backing")
+    ap.add_argument("--auto-budget-kib", type=int, default=0,
+                    help="tiered: size hot/warm tiers from the trace under "
+                         "this device budget (overrides --hot-rows/"
+                         "--warm-slots)")
     args = ap.parse_args()
 
     cfg = DLRMConfig(embedding=EmbeddingStageConfig(
@@ -71,11 +87,24 @@ def main():
         if args.storage == "tiered":
             # plan the hot tier from an offline trace of this traffic, then
             # let periodic refresh keep it pinned to the live distribution
-            ps = model.ebc.build_parameter_server(
-                params,
-                PSConfig(hot_rows=args.hot_rows, warm_slots=args.warm_slots,
-                         prefetch_depth=2, window_batches=16),
-                trace=stream.sample_trace(2))
+            trace = stream.sample_trace(2)
+            if args.auto_budget_kib:
+                # planner-driven tier sizing from the trace coverage curve
+                ps = model.ebc.build_parameter_server(
+                    params, trace=trace,
+                    device_budget_bytes=args.auto_budget_kib * 1024,
+                    prefetch_depth=2, window_batches=16,
+                    async_prefetch=args.async_mode,
+                    warm_backing=args.warm_backing)
+            else:
+                ps = model.ebc.build_parameter_server(
+                    params,
+                    PSConfig(hot_rows=args.hot_rows,
+                             warm_slots=args.warm_slots,
+                             prefetch_depth=2, window_batches=16,
+                             async_prefetch=args.async_mode,
+                             warm_backing=args.warm_backing),
+                    trace=trace)
         jax.block_until_ready(fwd(np.asarray(wd), np.asarray(wi)))
         if emb is not None:
             jax.block_until_ready(emb(wi))
@@ -87,15 +116,19 @@ def main():
         srv = InferenceServer(fwd, BatcherConfig(max_batch=args.batch,
                                                  max_wait_s=0.0), sla_ms=500,
                               ps=ps,
-                              refresh_every_batches=args.refresh_every)
-        served = 0
-        while served < args.queries:
+                              refresh_every_batches=args.refresh_every,
+                              async_refresh=args.async_mode)
+        # keep one batch queued ahead of the executing one so the server's
+        # _stage_next() sees the full next batch and prefetch overlap fires
+        submitted = 0
+        while submitted < args.queries:
             b = stream.next_batch()
             for i in range(args.batch):
-                srv.submit(Query(qid=served + i, dense=b.dense[i],
+                srv.submit(Query(qid=submitted + i, dense=b.dense[i],
                                  indices=b.indices[i]))
-            srv.poll()
-            served += args.batch
+            submitted += args.batch
+            if submitted > args.batch:
+                srv.poll()
         srv.drain()
 
         pct = srv.stats.percentiles()
@@ -104,11 +137,15 @@ def main():
                 f"batch={pct['mean_batch_ms']:.1f}ms "
                 f"sla_viol={srv.sla_violations()}")
         if args.storage == "tiered":
+            srv.close()     # install any in-flight async refresh
+            pct = srv.stats.percentiles()
             line += (f" hit={pct['cache_hit_rate']:.2f} "
                      f"(hot={pct['hot_hit_rate']:.2f} "
                      f"warm={pct['warm_hit_rate']:.2f}) "
                      f"evict={pct['evictions']} "
-                     f"refresh={pct['refreshes']}")
+                     f"refresh={pct['refreshes']} "
+                     f"off_crit={pct['off_critical_frac']:.2f}")
+            ps.close()
         else:
             # embedding-stage share (paper Fig. 1)
             idx = jnp.asarray(stream.next_batch().indices)

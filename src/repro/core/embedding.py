@@ -109,14 +109,37 @@ class EmbeddingBagCollection:
             np.stack([p.inv_perm for p in plans]).astype(np.int32)
             if cfg.pinned_rows > 0 else None)
 
-    def build_parameter_server(self, params: dict, ps_cfg,
-                               trace: Optional[np.ndarray] = None):
+    def build_parameter_server(self, params: dict, ps_cfg=None,
+                               trace: Optional[np.ndarray] = None, *,
+                               device_budget_bytes: Optional[int] = None,
+                               **ps_cfg_overrides):
         """Move initialized tables into a tiered ParameterServer and attach.
 
         `params["tables"]` becomes the host cold tier (authoritative copy);
         the hot tier is planned from `trace` when given. Returns the server.
+
+        Pass an explicit `ps_cfg`, or leave it None with
+        `device_budget_bytes` set to auto-tune the tier capacities from the
+        trace's coverage curve (`core.plan.plan_tier_capacities`);
+        `ps_cfg_overrides` then forward to `PSConfig.from_plan` (e.g.
+        `async_prefetch=True`, `warm_backing="device"`).
         """
-        from repro.ps import ParameterServer  # lazy: ps imports core
+        from repro.ps import ParameterServer, PSConfig  # lazy: ps imports core
+        if ps_cfg is None:
+            if device_budget_bytes is None or trace is None:
+                raise ValueError(
+                    "auto-tuned tiers need both trace= and "
+                    "device_budget_bytes= (or pass an explicit ps_cfg)")
+            from repro.core.plan import plan_tier_capacities
+            tier_plan = plan_tier_capacities(
+                trace, self.cfg.rows, self.cfg.dim, device_budget_bytes,
+                itemsize=self.cfg.jnp_dtype.itemsize)
+            ps_cfg = PSConfig.from_plan(tier_plan, **ps_cfg_overrides)
+        elif ps_cfg_overrides or device_budget_bytes is not None:
+            raise ValueError("device_budget_bytes and PSConfig overrides "
+                             "only apply when ps_cfg is None (auto-tuning "
+                             "path) — the explicit config would silently "
+                             "win otherwise")
         if "tables" not in params and "embedding" in params:
             params = params["embedding"]      # full DLRM params accepted
         tables = np.asarray(params["tables"])[:self.cfg.num_tables]

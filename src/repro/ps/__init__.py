@@ -1,5 +1,20 @@
+"""Tiered embedding parameter server (hot / warm / cold) for beyond-HBM
+DLRM serving — see docs/architecture.md for the data path and
+docs/serving.md for the operator guide.
+
+Public surface:
+  `ParameterServer` — three-tier, bit-exact `lookup()`; sync or async
+                      (threaded, double-buffered) prefetch staging.
+  `PSConfig`        — tier capacities + policies; `from_plan()` accepts a
+                      `repro.core.plan.plan_tier_capacities` result.
+  `WarmCache` / `DeviceWarmCache` — host- and device-backed warm tiers.
+  `PrefetchQueue` / `AsyncPrefetcher` — the two staging engines.
+"""
 from repro.ps.cold_store import ColdStore
 from repro.ps.config import PSConfig
-from repro.ps.prefetch import PrefetchQueue, StagedBatch
+from repro.ps.prefetch import AsyncPrefetcher, PrefetchQueue, StagedBatch
 from repro.ps.server import ParameterServer
-from repro.ps.warm_cache import WarmCache
+from repro.ps.warm_cache import DeviceWarmCache, WarmCache
+
+__all__ = ["ColdStore", "PSConfig", "AsyncPrefetcher", "PrefetchQueue",
+           "StagedBatch", "ParameterServer", "DeviceWarmCache", "WarmCache"]

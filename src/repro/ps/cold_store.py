@@ -5,8 +5,15 @@ Holds the authoritative copy of every table as one [T, R, D] numpy array
 concern). Serves batched gathers for warm-tier misses and hands out whole
 hot blocks at (re)planning time. Gather counters feed the benchmark's
 host-traffic accounting.
+
+Thread-safety: tables are immutable during serving, so concurrent reads
+(the async prefetch worker gathering while the serving thread resolves a
+residual miss) are race-free by construction; only the traffic counters
+need the lock.
 """
 from __future__ import annotations
+
+import threading
 
 import numpy as np
 
@@ -19,16 +26,27 @@ class ColdStore:
         self.num_tables, self.num_rows, self.dim = tables.shape
         self.gathered_rows = 0      # rows pulled host->device (proxy)
         self.gather_calls = 0
+        self._lock = threading.Lock()   # counters only; tables are read-only
 
     @property
     def nbytes(self) -> int:
         return self.tables.nbytes
 
     def gather(self, table: int, rows: np.ndarray) -> np.ndarray:
-        """Batched miss resolution: rows [M] -> [M, D] (one host gather)."""
-        self.gather_calls += 1
-        self.gathered_rows += int(rows.size)
+        """Batched miss resolution: rows [M] -> [M, D] (one host gather).
+
+        Safe to call from any thread; the payload is a copy (fancy
+        indexing), so callers own the returned buffer outright.
+        """
+        with self._lock:
+            self.gather_calls += 1
+            self.gathered_rows += int(rows.size)
         return self.tables[table, rows]
+
+    def reset_counters(self) -> None:
+        with self._lock:
+            self.gathered_rows = 0
+            self.gather_calls = 0
 
     def hot_block(self, table: int, hot_row_ids: np.ndarray) -> np.ndarray:
         """Materialize the device-resident hot block for one table."""

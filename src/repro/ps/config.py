@@ -6,12 +6,21 @@ memory system (HugeCTR HPS-style):
   tier 0 (hot)  — device-resident block of the top-K hottest rows per table,
                   stored hot-first (the paper's L2-pin analogue, §IV-C).
   tier 1 (warm) — fixed-capacity device cache with LFU/LRU admission and
-                  eviction over row slots; misses resolve in batches.
+                  eviction over row slots; misses resolve in batches. With
+                  `warm_backing="device"` the payload is a real JAX device
+                  buffer updated via dynamic-update-slice.
   tier 2 (cold) — full tables in host memory (numpy), serving batched
                   gathers for warm misses, fronted by a prefetch queue that
                   resolves the NEXT batch's misses while the current batch
                   computes (the paper's software prefetching, §IV-B,
-                  generalized across the hierarchy).
+                  generalized across the hierarchy). With
+                  `async_prefetch=True` those gathers run on a background
+                  worker thread into a double buffer instead of on the
+                  caller thread.
+
+Tier capacities can be hand-set or derived from an offline trace with
+`repro.core.plan.plan_tier_capacities` + `PSConfig.from_plan` (the
+planner-driven auto-tuning path).
 """
 from __future__ import annotations
 
@@ -26,8 +35,15 @@ class PSConfig:
     warm_slots: int = 0
     # admission/eviction policy for the warm tier
     eviction: str = "lfu"          # 'lfu' | 'lru'
+    # payload backing for the warm tier: 'host' keeps numpy (cheap, exact
+    # simulation), 'device' keeps a JAX device buffer updated via
+    # dynamic-update-slice (the deployment shape)
+    warm_backing: str = "host"     # 'host' | 'device'
     # prefetch queue depth (staged future batches); 0 disables staging
     prefetch_depth: int = 2
+    # resolve staged cold misses on a background worker thread (double
+    # buffer) instead of synchronously on the stage() caller
+    async_prefetch: bool = False
     # sliding window (in batches, per table) kept for hot-set re-planning
     window_batches: int = 16
     # decay applied to warm-tier frequency counters at refresh (LFU aging)
@@ -37,8 +53,19 @@ class PSConfig:
         if self.eviction not in ("lfu", "lru"):
             raise ValueError(f"eviction must be 'lfu' or 'lru', "
                              f"got {self.eviction!r}")
+        if self.warm_backing not in ("host", "device"):
+            raise ValueError(f"warm_backing must be 'host' or 'device', "
+                             f"got {self.warm_backing!r}")
         if self.hot_rows < 0 or self.warm_slots < 0:
             raise ValueError("tier capacities must be >= 0")
+
+    @classmethod
+    def from_plan(cls, plan, **overrides) -> "PSConfig":
+        """Build a config from a `core.plan.TierCapacityPlan` (duck-typed:
+        anything with `hot_rows`/`warm_slots`). Keyword overrides pass
+        through to the constructor (e.g. `async_prefetch=True`)."""
+        return cls(hot_rows=int(plan.hot_rows),
+                   warm_slots=int(plan.warm_slots), **overrides)
 
     def capacity_rows(self) -> int:
         """Device-resident rows per table across hot + warm tiers."""

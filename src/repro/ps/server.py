@@ -5,15 +5,30 @@ Three tiers per table, probed in order:
   hot  — device-resident block of the top-K rows, stored hot-first via a
          `hot_cache.HotPlan` permutation (tier-0; the paper's L2 pinning).
   warm — fixed-capacity LFU/LRU row cache (tier-1), batched miss admission.
+         `PSConfig.warm_backing="device"` keeps the payload in a JAX device
+         buffer updated via dynamic-update-slice (`DeviceWarmCache`).
   cold — full tables in host memory (tier-2), batched gathers, fronted by a
-         prefetch queue that resolves future batches' misses early (the
+         prefetch stage that resolves future batches' misses early (the
          paper's software prefetching lifted to the memory hierarchy).
+         `PSConfig.async_prefetch=True` moves those gathers onto a
+         background worker thread with a double-buffered bounded queue
+         (`AsyncPrefetcher`), so they overlap the current batch's compute
+         instead of running on the caller.
 
 Every tier holds byte-identical copies of the same rows, so `lookup()` is
-bit-exact with a dense `table[indices]` gather regardless of placement —
-only locality changes. A sliding window of observed traffic supports
-`refresh()`: re-plan the hot set from recent batches (paper §IV-C "update
-the pinned data periodically") without touching served values.
+bit-exact with a dense `table[indices]` gather regardless of placement,
+backing, or prefetch mode — only locality and overlap change. A sliding
+window of observed traffic supports `refresh()`: re-plan the hot set from
+recent batches (paper §IV-C "update the pinned data periodically") without
+touching served values. `refresh()` is split into a pure `plan_refresh()`
+(safe to run on a helper thread) and a mutating `install_refresh()` so the
+serving layer can re-plan off the critical path too.
+
+Threading model: `lookup()`, `stage()`, `refresh()`/`install_refresh()`,
+`flush()` and the stats methods must all be called from ONE serving thread.
+The only concurrency is internal and read-only: the async prefetch worker
+gathers from the immutable cold tables, and `plan_refresh()` may run on a
+helper thread against a snapshot of the traffic window.
 """
 from __future__ import annotations
 
@@ -24,8 +39,8 @@ import numpy as np
 from repro.core import hot_cache
 from repro.ps.cold_store import ColdStore
 from repro.ps.config import PSConfig
-from repro.ps.prefetch import PrefetchQueue, StagedBatch
-from repro.ps.warm_cache import WarmCache
+from repro.ps.prefetch import AsyncPrefetcher, PrefetchQueue, StagedBatch
+from repro.ps.warm_cache import DeviceWarmCache, WarmCache
 
 
 class ParameterServer:
@@ -46,9 +61,18 @@ class ParameterServer:
                 plans = [hot_cache.identity_plan(R, k) for _ in range(T)]
         assert len(plans) == T
         self.plans = plans
-        self.warm = [WarmCache(cfg.warm_slots, D, cfg.eviction,
-                               self.cold.tables.dtype) for _ in range(T)]
-        self.prefetch = PrefetchQueue(cfg.prefetch_depth)
+        warm_cls = (DeviceWarmCache if cfg.warm_backing == "device"
+                    else WarmCache)
+        self.warm = [warm_cls(cfg.warm_slots, D, cfg.eviction,
+                              self.cold.tables.dtype) for _ in range(T)]
+        # depth 0 disables staging entirely — don't spawn a worker thread
+        # that could never receive work
+        if cfg.async_prefetch and cfg.prefetch_depth > 0:
+            self.prefetch = AsyncPrefetcher(cfg.prefetch_depth,
+                                            self.cold.gather)
+        else:
+            self.prefetch = PrefetchQueue(cfg.prefetch_depth,
+                                          self.cold.gather)
         self.window: collections.deque[np.ndarray] = collections.deque(
             maxlen=cfg.window_batches)
         self.hot_hits = 0
@@ -58,6 +82,19 @@ class ParameterServer:
         # the next lookup are real traffic (the rest is batcher padding)
         self._valid_hint: int | None = None
         self._install_hot_tier()
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self) -> None:
+        """Stop the async prefetch worker (no-op in sync mode). Idempotent;
+        the server remains usable for sync lookups afterwards only if it
+        was constructed without `async_prefetch`."""
+        self.prefetch.close()
+
+    def __enter__(self) -> "ParameterServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- hot tier -----------------------------------------------------------
     def _install_hot_tier(self) -> None:
@@ -76,7 +113,22 @@ class ParameterServer:
     # -- lookup -------------------------------------------------------------
     def _lookup_table(self, t: int, flat: np.ndarray,
                       staged: StagedBatch | None) -> np.ndarray:
-        """flat [N] raw row ids for table t -> [N, D]."""
+        """flat [N] raw row ids for table t -> [N, D].
+
+        Tier probe order and invariants:
+          1. hot — positional test `inv_perm[row] < num_hot`; hot payloads
+             come from the pinned block, never the warm/cold tiers.
+          2. warm — probed with the DISTINCT missed rows (`np.unique`), so
+             hit/miss counters are per-row, and intra-batch duplicates of a
+             missed row count one miss + (count-1) hits.
+          3. cold — the remaining misses split into rows already staged by
+             the prefetch engine (payload gathered earlier, possibly on the
+             worker thread) and residual rows gathered right here, on the
+             critical path.
+        All three sources hold byte-identical row values (the cold store is
+        authoritative; hot/warm are copies), which is the bit-exactness
+        invariant the tests pin down.
+        """
         D = self.cold.dim
         out = np.empty((flat.size, D), self.cold.tables.dtype)
         if self.num_hot > 0:
@@ -127,7 +179,13 @@ class ParameterServer:
         self._valid_hint = int(n)
 
     def lookup(self, indices: np.ndarray) -> np.ndarray:
-        """indices [B, T, L] raw row ids -> rows [B, T, L, D]."""
+        """indices [B, T, L] raw row ids -> rows [B, T, L, D].
+
+        Consumes the matching staged batch if one exists (in async mode
+        this may wait on — or inline-resolve — a buffer the worker has not
+        finished; the wait is recorded in the overlap stats). Appends the
+        real-traffic slice to the refresh window and updates counters.
+        """
         indices = np.asarray(indices)
         B, T, L = indices.shape
         assert T == self.cold.num_tables
@@ -148,20 +206,32 @@ class ParameterServer:
         return out
 
     # -- prefetch -----------------------------------------------------------
+    def can_stage(self) -> bool:
+        """Backpressure probe for callers that would otherwise do assembly
+        work just to have stage() discard it (queue full / staging off)."""
+        return self.prefetch.can_stage()
+
     def stage(self, indices: np.ndarray) -> bool:
         """Pre-resolve a FUTURE batch's cold misses (overlap analogue).
 
-        Gathers, at call time, every row the batch would miss in hot+warm;
-        `lookup()` later consumes the staged payload instead of touching the
-        cold store on the critical path. Always correctness-neutral: rows
-        admitted to warm (or re-pinned hot) in between are simply unused.
+        The hot/warm probe runs here, on the caller thread, against current
+        tier state — that snapshot is what makes the operation safe: the
+        staged row set is frozen before any concurrent work starts. The
+        cold gathers for those rows then run either inline (sync engine) or
+        on the prefetch worker (async engine, double-buffered). `lookup()`
+        later consumes the staged payload instead of touching the cold
+        store on the critical path.
+
+        Always correctness-neutral: rows admitted to warm (or re-pinned
+        hot) between stage and consume are simply unused, and rows evicted
+        in between fall through to a residual cold gather. Returns False
+        (and performs no gather work) when the queue is full — the
+        backpressure signal.
         """
-        if self.prefetch.depth == 0 or \
-                len(self.prefetch.queue) >= self.prefetch.depth:
-            return False    # queue full: don't burn gathers on a discard
+        if not self.prefetch.can_stage():
+            return False    # queue full: don't burn probes on a discard
         indices = np.asarray(indices)
         rows: dict[int, np.ndarray] = {}
-        data: dict[int, np.ndarray] = {}
         for t in range(self.cold.num_tables):
             flat = indices[:, t].ravel()
             if self.num_hot > 0:
@@ -170,32 +240,53 @@ class ParameterServer:
             miss = u[self.warm[t].probe(u) < 0]
             if miss.size:
                 rows[t] = miss
-                data[t] = self.cold.gather(t, miss)
-        return self.prefetch.stage(StagedBatch(indices, rows, data))
+        return self.prefetch.stage(StagedBatch(indices, rows, {}))
 
     def flush(self) -> None:
         """Drop cached state — warm entries, the traffic window, staged
-        batches — without touching the hot tier, plans, or counters. Use
-        after synthetic traffic (e.g. jit warmup batches) so it cannot
-        linger in the warm cache or skew the next refresh()."""
+        batches (in-flight async buffers are cancelled) — without touching
+        the hot tier, plans, or counters. Use after synthetic traffic
+        (e.g. jit warmup batches) so it cannot linger in the warm cache or
+        skew the next refresh()."""
         for w in self.warm:
             w.clear()
         self.window.clear()
-        self.prefetch.queue.clear()
+        self.prefetch.flush()
 
     # -- periodic re-pinning ------------------------------------------------
-    def refresh(self) -> dict:
-        """Re-plan the hot tier from the sliding traffic window (§IV-C)."""
-        if not self.window or self.num_hot == 0:
+    def plan_refresh(self, window: list[np.ndarray] | None = None
+                     ) -> list[hot_cache.HotPlan] | None:
+        """Phase 1 of refresh: re-plan the hot set from a traffic window.
+
+        Pure function of its inputs — no server state is mutated — so the
+        serving layer may run it on a helper thread against
+        `list(ps.window)` snapshotted on the serving thread. Returns None
+        when there is nothing to plan from (empty window or no hot tier).
+        """
+        window = list(self.window) if window is None else window
+        if not window or self.num_hot == 0:
+            return None
+        trace = np.concatenate([w.reshape(w.shape[0], w.shape[1], -1)
+                                for w in window], axis=0)  # [N, T, L]
+        R = self.cold.num_rows
+        return [hot_cache.plan_from_trace(trace[:, t], R, self.num_hot)
+                for t in range(self.cold.num_tables)]
+
+    def install_refresh(self, plans: list[hot_cache.HotPlan] | None) -> dict:
+        """Phase 2 of refresh: swap the planned hot set in (serving thread
+        ONLY — mutates the hot block, the warm tag stores, and the plans).
+
+        Invariants: served values never change (every tier holds the same
+        bytes); warm entries for newly-pinned rows are invalidated so a row
+        lives in at most one device tier; staged prefetch payloads remain
+        valid because they are keyed by raw row id.
+        """
+        if plans is None:
             if self.cfg.freq_decay < 1.0:
                 for w in self.warm:
                     w.decay(self.cfg.freq_decay)
             return {"replanned": False, "refreshes": self.refreshes}
-        trace = np.concatenate([w.reshape(w.shape[0], w.shape[1], -1)
-                                for w in self.window], axis=0)  # [N, T, L]
-        R = self.cold.num_rows
-        self.plans = [hot_cache.plan_from_trace(trace[:, t], R, self.num_hot)
-                      for t in range(self.cold.num_tables)]
+        self.plans = plans
         self._install_hot_tier()
         for t, w in enumerate(self.warm):
             w.invalidate(self.plans[t].perm[:self.num_hot])
@@ -205,8 +296,19 @@ class ParameterServer:
         self.refreshes += 1
         return {"replanned": True, "refreshes": self.refreshes}
 
+    def refresh(self) -> dict:
+        """Re-plan + install the hot tier from the sliding window (§IV-C).
+        The synchronous driver; see plan_refresh/install_refresh for the
+        split the async serving driver uses."""
+        return self.install_refresh(self.plan_refresh())
+
     # -- stats --------------------------------------------------------------
     def stats(self) -> dict:
+        """Counter snapshot. Tier counters satisfy
+        `hot_hits + warm_hits + cold_misses == total_accesses`; the
+        prefetch engine contributes staging/overlap counters (see
+        `prefetch.stats()`), including `off_critical_frac` — the fraction
+        of cold-missed rows whose gather never ran on the lookup path."""
         warm_hits = sum(w.hits for w in self.warm)
         warm_misses = sum(w.misses for w in self.warm)
         total = self.total_accesses
@@ -234,8 +336,5 @@ class ParameterServer:
         self.total_accesses = 0
         for w in self.warm:
             w.hits = w.misses = w.evictions = w.insertions = 0
-        self.cold.gathered_rows = 0
-        self.cold.gather_calls = 0
-        self.prefetch.staged_rows = 0
-        self.prefetch.prefetch_hits = 0
-        self.prefetch.prefetch_misses = 0
+        self.cold.reset_counters()
+        self.prefetch.reset()

@@ -8,6 +8,18 @@ one gather and admits them together, evicting the coldest victims
 (lowest-frequency for LFU, least-recent for LRU; ties broken by older tick
 then slot id — fully deterministic).
 
+Two payload backings share the tag store and every policy decision:
+
+  `WarmCache`       — host numpy payload (the PR-1 behaviour).
+  `DeviceWarmCache` — payload lives in a device-resident JAX buffer.
+                      Admission writes scattered slots as contiguous runs
+                      via `jax.lax.dynamic_update_slice` (the HBM-resident
+                      cache the paper's L2 pin approximates, made explicit);
+                      the tag store stays host-side so `probe()` never
+                      round-trips the device. float32 rows survive the
+                      host->device->host round trip bit-exactly, so lookups
+                      remain bit-identical to a dense gather.
+
 Counters are access-granular with standard cache semantics: a row resident
 at batch start counts every access as a hit; a missed row counts ONE miss
 (the fetch that brings it in) and its remaining same-batch accesses as hits
@@ -20,14 +32,16 @@ import numpy as np
 
 
 class WarmCache:
-    """One table's warm cache."""
+    """One table's warm cache (host-backed payload)."""
 
     def __init__(self, capacity: int, dim: int, policy: str = "lfu",
                  dtype=np.float32):
         assert policy in ("lfu", "lru")
         self.capacity = int(capacity)
+        self.dim = int(dim)
         self.policy = policy
-        self.data = np.zeros((self.capacity, dim), dtype)
+        self.dtype = np.dtype(dtype)
+        self._alloc_payload()
         self.slot_row = np.full(self.capacity, -1, np.int64)
         self.slot_freq = np.zeros(self.capacity, np.int64)
         self.slot_tick = np.zeros(self.capacity, np.int64)
@@ -39,16 +53,34 @@ class WarmCache:
         self.evictions = 0
         self.insertions = 0
 
+    # -- payload backing (overridden by DeviceWarmCache) --------------------
+    def _alloc_payload(self) -> None:
+        self.data = np.zeros((self.capacity, self.dim), self.dtype)
+
+    def _read_payload(self, slots: np.ndarray) -> np.ndarray:
+        """slots [M] -> rows [M, D] as host numpy."""
+        return self.data[slots]
+
+    def _write_payload(self, slots: np.ndarray,
+                       payload: np.ndarray) -> None:
+        """Store rows [M, D] into (possibly scattered) slots [M]."""
+        self.data[slots] = payload
+
+    # -- tag store / policy --------------------------------------------------
     def __len__(self) -> int:
         return len(self.loc)
 
     def probe(self, rows: np.ndarray) -> np.ndarray:
-        """rows [M] (distinct) -> slot per row, -1 where absent."""
+        """rows [M] (distinct) -> slot per row, -1 where absent.
+
+        Pure tag-store read: never touches the payload backing, mutates no
+        state — safe to call speculatively (the prefetch stage probe).
+        """
         return np.fromiter((self.loc.get(int(r), -1) for r in rows),
                            dtype=np.int64, count=len(rows))
 
     def read(self, slots: np.ndarray) -> np.ndarray:
-        return self.data[slots]
+        return self._read_payload(slots)
 
     def touch(self, slots: np.ndarray, counts: np.ndarray) -> None:
         """Register `counts[i]` accesses to resident slot `slots[i]`."""
@@ -92,7 +124,7 @@ class WarmCache:
         else:
             slots = free[:n]
 
-        self.data[slots] = payload
+        self._write_payload(slots, payload)
         self.slot_row[slots] = rows
         self.slot_freq[slots] = counts
         self.slot_tick[slots] = self.tick
@@ -102,7 +134,11 @@ class WarmCache:
         return n_evict
 
     def invalidate(self, rows: np.ndarray) -> int:
-        """Drop entries (e.g. rows promoted to the hot tier at refresh)."""
+        """Drop entries (e.g. rows promoted to the hot tier at refresh).
+
+        Tag-store only: the stale payload stays in its slot but is
+        unreachable (no `loc` entry), matching a hardware invalidate.
+        """
         dropped = 0
         for r in rows:
             s = self.loc.pop(int(r), None)
@@ -130,3 +166,56 @@ class WarmCache:
                 "evictions": self.evictions, "insertions": self.insertions,
                 "occupancy": len(self.loc),
                 "hit_rate": self.hits / total if total else 0.0}
+
+
+class DeviceWarmCache(WarmCache):
+    """Warm cache whose payload is a device-resident JAX buffer.
+
+    `data` is a `jax.Array` of shape [C, D]; an admission whose (sorted)
+    slots form one contiguous run — the free-list fill path while the
+    cache warms up — lands as a single `jax.lax.dynamic_update_slice`;
+    fragmented slots (steady-state eviction victims) land as one fused
+    scatter. Reads gather with `jnp.take` and
+    materialize to host numpy, which is bit-exact for the float dtypes the
+    tables use. The tag store (`slot_row`/`slot_freq`/`slot_tick`/`loc`)
+    is inherited unchanged and stays on the host.
+    """
+
+    def _alloc_payload(self) -> None:
+        import jax.numpy as jnp        # lazy: host-only deployments of
+        self._jnp = jnp                # WarmCache never import jax
+        import jax
+        self._lax = jax.lax
+        self.data = jnp.zeros((self.capacity, self.dim), self.dtype)
+        if self.data.dtype != self.dtype:
+            # e.g. float64 without jax_enable_x64: jnp would silently
+            # downcast and break the bit-exactness guarantee
+            raise ValueError(
+                f"device warm cache cannot hold dtype {self.dtype} "
+                f"(JAX allocated {self.data.dtype}); use "
+                f"warm_backing='host' or enable jax_enable_x64")
+
+    def _read_payload(self, slots: np.ndarray) -> np.ndarray:
+        gathered = self._jnp.take(self.data, self._jnp.asarray(slots),
+                                  axis=0)
+        return np.asarray(gathered)
+
+    def _write_payload(self, slots: np.ndarray,
+                       payload: np.ndarray) -> None:
+        order = np.argsort(slots, kind="stable")
+        slots = slots[order]
+        payload = np.ascontiguousarray(payload[order])
+        # One contiguous run — the free-list fill path (cache warming up
+        # hands out adjacent slots) — is a single dynamic_update_slice.
+        # Anything fragmented goes through ONE fused scatter: every eager
+        # DUS copies the whole [C, D] buffer, so even two runs already
+        # cost more than the scatter.
+        if slots.size and slots[-1] - slots[0] == slots.size - 1:
+            self.data = self._lax.dynamic_update_slice(
+                self.data, self._jnp.asarray(payload), (int(slots[0]), 0))
+        else:
+            self.data = self.data.at[self._jnp.asarray(slots)].set(
+                self._jnp.asarray(payload))
+
+    def device_bytes(self) -> int:
+        return int(self.capacity * self.dim * self.dtype.itemsize)

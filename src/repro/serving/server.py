@@ -4,11 +4,25 @@ Queries arrive, a batcher groups them (the paper uses large batches of 2048
 to saturate the GPU; same logic here), the engine executes the forward pass,
 and per-query latencies are tracked against an SLA target. Percentile
 reporting mirrors how the paper reports batch latency.
+
+Tiered-storage integration (see docs/serving.md): the server drives the
+parameter server's two overlap mechanisms —
+  * prefetch: before each forward, the NEXT pending full batch's cache
+    misses are staged (`ParameterServer.stage`); with
+    `PSConfig.async_prefetch` the gathers run on the PS worker thread.
+  * refresh: every `refresh_every_batches` executed batches the hot set is
+    re-planned. With `async_refresh=True` the planning phase
+    (`ParameterServer.plan_refresh`) runs on a helper thread against a
+    window snapshot and `poll()` installs the result on a later iteration
+    (`ParameterServer.install_refresh`) — re-pinning leaves the critical
+    path too.
 """
 from __future__ import annotations
 
 import collections
+import concurrent.futures
 import dataclasses
+import itertools
 import time
 from typing import Callable, Optional
 
@@ -60,16 +74,27 @@ class ServeStats:
     served: int = 0
     batch_latencies_s: list = dataclasses.field(default_factory=list)
     query_latencies_s: list = dataclasses.field(default_factory=list)
+    # refreshes whose planning phase ran on the helper thread
+    async_refreshes: int = 0
     # tiered parameter-server cache counters (storage='tiered' only):
-    # hot/warm hit rates, cold misses, evictions, refreshes — updated by
-    # InferenceServer.poll() after every executed batch.
+    # hot/warm hit rates, cold misses, evictions, refreshes, and the
+    # prefetch queue/overlap counters — updated by InferenceServer.poll()
+    # after every executed batch.
     ps_stats: dict = dataclasses.field(default_factory=dict)
 
     _PS_KEYS = ("hot_hit_rate", "warm_hit_rate", "cache_hit_rate",
                 "cold_miss_rate", "hot_hits", "warm_hits", "cold_misses",
-                "evictions", "refreshes", "prefetch_hits")
+                "evictions", "refreshes", "prefetch_hits",
+                # queue / overlap counters (async + sync staging)
+                "queue_depth", "max_queue_depth", "off_critical_frac",
+                "consume_ready", "consume_waited", "consume_wait_s",
+                "consume_overlap_frac")
 
     def percentiles(self) -> dict:
+        """Latency percentiles plus (when a PS is attached) the cache and
+        overlap counters whitelisted in `_PS_KEYS`. `off_critical_frac` is
+        the fraction of cold-missed rows whose host gather never ran on the
+        lookup critical path — the headline overlap metric."""
         if not self.query_latencies_s:
             return {}
         q = np.asarray(self.query_latencies_s) * 1e3
@@ -82,6 +107,8 @@ class ServeStats:
         for k in self._PS_KEYS:
             if k in self.ps_stats:
                 out[k] = self.ps_stats[k]
+        if self.async_refreshes:
+            out["async_refreshes"] = self.async_refreshes
         return out
 
 
@@ -92,45 +119,96 @@ class InferenceServer:
     `ps`: the server then (a) stages the NEXT pending batch's cache misses
     before executing the current one (prefetch overlap), (b) re-plans the
     hot tier every `refresh_every_batches` executed batches from the PS's
-    sliding traffic window (paper §IV-C periodic re-pinning), and (c)
-    mirrors cache counters into `stats.percentiles()`.
+    sliding traffic window (paper §IV-C periodic re-pinning) — on a helper
+    thread when `async_refresh=True` — and (c) mirrors cache + overlap
+    counters into `stats.percentiles()`.
     """
 
     def __init__(self, forward: Callable, batcher_cfg: BatcherConfig,
                  sla_ms: float = 50.0, ps=None,
-                 refresh_every_batches: int = 0):
+                 refresh_every_batches: int = 0,
+                 async_refresh: bool = False):
         self.forward = forward
         self.batcher = Batcher(batcher_cfg)
         self.sla_s = sla_ms / 1e3
         self.stats = ServeStats()
         self.ps = ps
         self.refresh_every_batches = refresh_every_batches
+        self.async_refresh = async_refresh
         self._executed_batches = 0
+        self._refresh_pool: Optional[
+            concurrent.futures.ThreadPoolExecutor] = None
+        self._refresh_future: Optional[concurrent.futures.Future] = None
 
     def submit(self, q: Query) -> None:
         self.batcher.submit(q)
+
+    @staticmethod
+    def _assemble_indices(batch: list[Query], b: int) -> np.ndarray:
+        """[b, T, L] int32 index tensor; rows past len(batch) stay zero
+        (the padding hint_valid() later excludes from PS stats). Shared by
+        _assemble and _stage_next so staged indices always match the
+        upcoming lookup's bit-for-bit (consume() matches on equality)."""
+        idx = np.zeros((b,) + batch[0].indices.shape, np.int32)
+        for i, q in enumerate(batch):
+            idx[i] = q.indices
+        return idx
 
     def _assemble(self, batch: list[Query]):
         cfg = self.batcher.cfg
         b = cfg.max_batch if cfg.pad_to_max else len(batch)
         dense = np.zeros((b,) + batch[0].dense.shape, np.float32)
-        idx = np.zeros((b,) + batch[0].indices.shape, np.int32)
         for i, q in enumerate(batch):
             dense[i] = q.dense
-            idx[i] = q.indices
-        return dense, idx
+        return dense, self._assemble_indices(batch, b)
 
     def _stage_next(self) -> None:
         """Prefetch: resolve the next FULL pending batch's cold misses now,
         so its host gathers overlap the current batch's compute. Only a
         full batch is staged — its contents are then FIFO-deterministic, so
-        the staged indices exactly match the upcoming lookup."""
+        the staged indices exactly match the upcoming lookup. Backpressure
+        is checked before any assembly work, and only the indices are
+        assembled (staging never needs the dense features)."""
         q = self.batcher.queue
-        if len(q) < self.batcher.cfg.max_batch:
+        b = self.batcher.cfg.max_batch
+        if len(q) < b or not self.ps.can_stage():
             return
-        nxt = list(q)[:self.batcher.cfg.max_batch]
-        _, idx = self._assemble(nxt)
-        self.ps.stage(idx)
+        nxt = list(itertools.islice(q, b))
+        self.ps.stage(self._assemble_indices(nxt, b))
+
+    # -- async refresh driver -----------------------------------------------
+    def _start_refresh(self) -> None:
+        """Kick off re-pinning. Sync mode blocks here (PR-1 behaviour);
+        async mode snapshots the traffic window on this thread and plans on
+        a helper, leaving installation to a later poll()."""
+        if not self.async_refresh:
+            self.ps.refresh()
+            return
+        if self._refresh_future is not None:    # previous plan still in
+            return                              # flight: don't pile up
+        if self._refresh_pool is None:
+            self._refresh_pool = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="ps-refresh")
+        window = list(self.ps.window)           # snapshot on serving thread
+        self._refresh_future = self._refresh_pool.submit(
+            self.ps.plan_refresh, window)
+
+    def _install_refresh_if_ready(self) -> None:
+        """Install a finished helper-thread plan (serving thread only —
+        install_refresh mutates tier state). Planner exceptions re-raise
+        here, on the serving thread."""
+        if self._refresh_future is not None and self._refresh_future.done():
+            self._install_pending_refresh()
+
+    def _install_pending_refresh(self) -> None:
+        """Take the in-flight future (blocking if unfinished), install its
+        plan — a None plan still applies the scheduled warm-tier decay,
+        exactly like a sync refresh — count a real re-pin, and re-mirror
+        PS stats. Shared by the poll() path and close()."""
+        fut, self._refresh_future = self._refresh_future, None
+        if self.ps.install_refresh(fut.result())["replanned"]:
+            self.stats.async_refreshes += 1
+        self.stats.ps_stats = self.ps.stats()
 
     def poll(self, force: bool = False) -> int:
         """Execute at most one batch; returns #queries served."""
@@ -140,8 +218,13 @@ class InferenceServer:
         n = len(batch)
         dense, idx = self._assemble(batch)
         if self.ps is not None:
-            # outside the timed region: staging models work that overlaps
-            # the PREVIOUS batch's compute, so it must not bill this batch
+            # both run outside the timed region. Install a finished
+            # refresh FIRST so staging probes the post-refresh tier state
+            # (staging against the old plan would prefetch rows about to
+            # become hot and skip warm rows about to be invalidated).
+            self._install_refresh_if_ready()
+            # staging models work that overlaps the PREVIOUS batch's
+            # compute, so it must not bill this batch
             self._stage_next()
             # batcher padding is not traffic — keep it out of cache stats
             # and the refresh window
@@ -159,7 +242,7 @@ class InferenceServer:
             if (self.refresh_every_batches
                     and self._executed_batches
                     % self.refresh_every_batches == 0):
-                self.ps.refresh()
+                self._start_refresh()
             self.stats.ps_stats = self.ps.stats()
         return n
 
@@ -175,6 +258,22 @@ class InferenceServer:
                              + self.batcher.cfg.max_wait_s)
             force = now >= head_deadline or now - t0 >= timeout_s
             self.poll(force=force)
+
+    def close(self) -> None:
+        """Finish any in-flight async refresh — wait for the planner
+        (pool shutdown would block on it anyway), install its plan, and
+        re-mirror PS stats so the final report sees it — then stop the
+        helper thread. Planner exceptions re-raise here, matching the
+        poll() path. Does NOT close the parameter server — its prefetch
+        worker may outlive this frontend. Idempotent."""
+        try:
+            if self._refresh_future is not None:
+                self._install_pending_refresh()
+        finally:
+            # a raising planner must not leak the helper pool/thread
+            if self._refresh_pool is not None:
+                self._refresh_pool.shutdown(wait=True)
+                self._refresh_pool = None
 
     def sla_violations(self) -> int:
         return int(np.sum(np.asarray(self.stats.query_latencies_s)

@@ -1,0 +1,473 @@
+"""Async tiered serving: threaded prefetch double buffer, device-resident
+warm cache, and planner-driven tier auto-tuning.
+
+Covers the PR-2 acceptance contract: thread lifecycle (start/stop/
+exception propagation), double-buffer correctness under adversarial
+stage/consume interleavings, bit-exactness of async mode and of the
+device-backed warm cache vs the dense gather path, monotonicity of
+`plan_tier_capacities()` in the byte budget, and the serving layer's
+async refresh driver + overlap stats.
+"""
+import threading
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (EmbeddingBagCollection, EmbeddingStageConfig,
+                        make_pattern, plan_tier_capacities)
+from repro.data import DLRMQueryStream
+from repro.models.dlrm import DLRM, DLRMConfig
+from repro.ps import (AsyncPrefetcher, DeviceWarmCache, ParameterServer,
+                      PSConfig, StagedBatch, WarmCache)
+from repro.serving import BatcherConfig, InferenceServer, Query
+
+ROWS, TABLES, DIM, POOL = 256, 4, 32, 6
+
+
+def _tables(rng_seed=0):
+    rng = np.random.default_rng(rng_seed)
+    return rng.normal(size=(TABLES, ROWS, DIM)).astype(np.float32)
+
+
+def _med_pats(rows=ROWS):
+    return [make_pattern("med_hot", rows, seed=t) for t in range(TABLES)]
+
+
+def _batch(pats, batch, pooling, seed):
+    return np.stack([p.sample(batch, pooling, seed=seed * 100 + t)
+                     for t, p in enumerate(pats)], axis=1).astype(np.int32)
+
+
+def _dense(tables, idx):
+    return tables[np.arange(tables.shape[0])[None, :, None], idx]
+
+
+def _payload(rows):
+    """Deterministic fake resolver payload: row id broadcast over DIM."""
+    return np.repeat(rows.astype(np.float32)[:, None], 4, axis=1)
+
+
+def _sb(tag, rows):
+    """A staged batch whose indices are a unique [1,1,1] tag."""
+    return StagedBatch(np.full((1, 1, 1), tag, np.int32),
+                       {0: np.asarray(rows, np.int64)}, {})
+
+
+# ---------------------------------------------------------------------------
+# AsyncPrefetcher: thread lifecycle
+# ---------------------------------------------------------------------------
+
+def test_async_prefetcher_start_stop_idempotent():
+    pf = AsyncPrefetcher(2, lambda t, rows: _payload(rows))
+    assert pf._thread.is_alive()
+    pf.close()
+    assert not pf._thread.is_alive()
+    pf.close()                                   # idempotent
+    # the can_stage-then-stage guard must keep working after close
+    assert not pf.can_stage()
+    with pytest.raises(RuntimeError, match="closed"):
+        pf.stage(_sb(0, [1, 2]))
+
+
+def test_async_prefetcher_worker_exception_degrades_then_raises_once():
+    calls = []
+
+    def resolver(t, rows):
+        calls.append(t)
+        if len(calls) == 1:
+            raise ValueError("cold store on fire")
+        return _payload(rows)
+
+    pf = AsyncPrefetcher(2, resolver)
+    batch = _sb(7, [1, 2, 3])
+    assert pf.stage(batch)
+    # a failed buffer is dropped, not raised: the lookup falls back to a
+    # direct cold gather and stays correct
+    assert pf.consume(batch.indices) is None
+    # ...and the failed job must be dequeued — an error must not pin a
+    # queue slot and starve future staging (regression)
+    assert len(pf) == 0 and pf.can_stage()
+    # the failure surfaces exactly once, on the next stage(), chained to
+    # the original exception
+    with pytest.raises(RuntimeError, match="prefetch worker") as ei:
+        pf.stage(_sb(8, [4]))
+    assert isinstance(ei.value.__cause__, ValueError)
+    # after the one report, staging works again
+    b = _sb(9, [5])
+    assert pf.stage(b)
+    got = pf.consume(b.indices)
+    np.testing.assert_array_equal(got.data[0], _payload(np.array([5])))
+    pf.close()
+
+
+def test_async_prefetcher_close_surfaces_unreported_error():
+    """An error nobody staged over must raise at close(), not vanish."""
+    def resolver(t, rows):
+        raise ValueError("boom")
+
+    pf = AsyncPrefetcher(2, resolver)
+    b = _sb(1, [1])
+    assert pf.stage(b)
+    assert pf.consume(b.indices) is None         # degrade path, no raise
+    with pytest.raises(RuntimeError, match="prefetch worker"):
+        pf.close()
+    pf.close()                                   # idempotent, no re-raise
+
+
+def test_async_prefetcher_stage_error_raised_on_next_call():
+    def resolver(t, rows):
+        raise ValueError("boom")
+
+    pf = AsyncPrefetcher(2, resolver)
+    assert pf.stage(_sb(1, [4]))
+    deadline = time.perf_counter() + 5.0
+    while pf._error is None and time.perf_counter() < deadline:
+        time.sleep(0.005)                        # let the worker fail it
+    with pytest.raises(RuntimeError, match="prefetch worker"):
+        pf.stage(_sb(2, [5]))
+    pf.close()
+
+
+# ---------------------------------------------------------------------------
+# AsyncPrefetcher: double-buffer ownership under adversarial interleavings
+# ---------------------------------------------------------------------------
+
+def test_async_consume_paths_ready_wait_and_inline():
+    """Exercise all three consume paths: READY (full overlap), RUNNING
+    (consumer waits on the buffer), PENDING (consumer claims the job and
+    resolves inline)."""
+    gate = threading.Event()
+    resolved_by = []
+
+    def resolver(t, rows):
+        name = threading.current_thread().name
+        resolved_by.append(name)
+        # only the worker blocks on the gate; an inline (consumer-thread)
+        # resolution must run immediately
+        if name.startswith("ps-async-prefetch") and not gate.is_set():
+            assert gate.wait(timeout=10.0)
+        return _payload(rows)
+
+    pf = AsyncPrefetcher(3, resolver)
+    b1, b2 = _sb(1, [1, 2]), _sb(2, [3])
+    assert pf.stage(b1)                          # worker picks it, blocks
+    deadline = time.perf_counter() + 5.0
+    while not resolved_by and time.perf_counter() < deadline:
+        time.sleep(0.005)
+    assert pf.stage(b2)                          # stays PENDING
+    # PENDING path: worker is stuck on b1, so the consumer claims b2
+    got2 = pf.consume(b2.indices)
+    assert not got2.ready_at_consume
+    np.testing.assert_array_equal(got2.data[0], _payload(np.array([3])))
+    assert "ps-async-prefetch" not in resolved_by[-1]
+    # RUNNING path: release the gate while the consumer waits on b1
+    threading.Timer(0.05, gate.set).start()
+    got1 = pf.consume(b1.indices)
+    assert not got1.ready_at_consume
+    np.testing.assert_array_equal(got1.data[0], _payload(np.array([1, 2])))
+    # READY path: stage, wait until the buffer's ready event is actually
+    # set (not just until the resolver started), then consume
+    b3 = _sb(3, [9])
+    assert pf.stage(b3)
+    deadline = time.perf_counter() + 5.0
+    while time.perf_counter() < deadline:
+        with pf._cv:
+            jobs = list(pf._jobs)
+        if jobs and jobs[-1].ready.is_set():
+            break
+        time.sleep(0.005)
+    got3 = pf.consume(b3.indices)
+    assert got3.ready_at_consume
+    st = pf.stats()
+    assert st["consume_waited"] == 2 and st["consume_ready"] == 1
+    pf.close()
+
+
+def test_async_backpressure_and_flush_mid_flight():
+    gate = threading.Event()
+
+    def resolver(t, rows):
+        if not gate.is_set():
+            assert gate.wait(timeout=10.0)
+        return _payload(rows)
+
+    pf = AsyncPrefetcher(2, resolver)
+    assert pf.stage(_sb(1, [1]))                 # RUNNING (blocked)
+    assert pf.stage(_sb(2, [2]))                 # PENDING
+    assert not pf.can_stage()
+    assert not pf.stage(_sb(3, [3]))             # backpressure: full
+    pf.flush()                                   # cancel everything
+    assert len(pf) == 0
+    gate.set()
+    # flushed batches are unreachable; new traffic proceeds normally
+    assert pf.consume(_sb(1, [1]).indices) is None
+    b4 = _sb(4, [4])
+    assert pf.stage(b4)
+    got = pf.consume(b4.indices)
+    np.testing.assert_array_equal(got.data[0], _payload(np.array([4])))
+    pf.close()
+
+
+def test_async_ps_bit_exact_under_adversarial_interleavings():
+    """Random stage/lookup/flush/refresh schedules: async lookups must stay
+    bit-identical to the dense gather whatever the double buffer is doing."""
+    tables = _tables()
+    pats = _med_pats()
+    rng = np.random.default_rng(42)
+    with ParameterServer(
+            tables, PSConfig(hot_rows=24, warm_slots=24, prefetch_depth=2,
+                             async_prefetch=True, window_batches=4),
+            trace=_batch(pats, 16, POOL, seed=0)) as ps:
+        for step in range(1, 40):
+            op = rng.integers(0, 10)
+            if op < 5:                           # stage some future batch
+                ps.stage(_batch(pats, 8, POOL, seed=int(rng.integers(50))))
+            elif op == 5:
+                ps.flush()
+            elif op == 6:
+                ps.refresh()
+            idx = _batch(pats, 8, POOL, seed=int(rng.integers(50)))
+            got = ps.lookup(idx)
+            assert np.array_equal(got, _dense(tables, idx)), step
+        st = ps.stats()
+        assert (st["hot_hits"] + st["warm_hits"] + st["cold_misses"]
+                == st["total_accesses"])
+
+
+def test_async_matches_sync_stats_and_values():
+    tables = _tables()
+    pats = _med_pats()
+
+    def run(async_prefetch):
+        ps = ParameterServer(
+            tables, PSConfig(hot_rows=32, warm_slots=32, prefetch_depth=2,
+                             async_prefetch=async_prefetch),
+            trace=_batch(pats, 16, POOL, seed=0))
+        outs = []
+        for s in range(1, 8):
+            ps.stage(_batch(pats, 8, POOL, seed=s + 1))
+            outs.append(ps.lookup(_batch(pats, 8, POOL, seed=s)))
+            if s == 4:
+                ps.refresh()
+        st = ps.stats()
+        ps.close()
+        return np.stack(outs), st
+
+    out_s, st_s = run(False)
+    out_a, st_a = run(True)
+    assert np.array_equal(out_s, out_a)          # bit-exact across modes
+    # identical traffic => identical tier + staging counters; only the
+    # async-only wait/overlap counters may differ
+    for k in ("total_accesses", "hot_hits", "warm_hits", "cold_misses",
+              "prefetch_hits", "prefetch_misses", "staged_rows"):
+        assert st_s[k] == st_a[k], k
+    assert "consume_overlap_frac" in st_a and "consume_ready" in st_a
+
+
+# ---------------------------------------------------------------------------
+# Device-resident warm cache
+# ---------------------------------------------------------------------------
+
+def test_device_warm_cache_payload_is_jax_and_matches_host():
+    """Same admission/eviction stream through host and device backings:
+    identical tag stores, identical (bit-exact) payload reads, and the
+    device payload actually lives in a jax.Array."""
+    rng = np.random.default_rng(0)
+    host = WarmCache(6, DIM, "lfu")
+    dev = DeviceWarmCache(6, DIM, "lfu")
+    assert isinstance(dev.data, jax.Array)
+    for step in range(12):
+        n = int(rng.integers(1, 5))
+        rows = rng.choice(64, size=n, replace=False).astype(np.int64)
+        payload = rng.normal(size=(n, DIM)).astype(np.float32)
+        counts = rng.integers(1, 9, size=n)
+        for c in (host, dev):
+            resident = c.probe(rows) >= 0
+            if resident.any():
+                c.touch(c.probe(rows)[resident], counts[resident])
+            order = np.lexsort((rows[~resident], -counts[~resident]))
+            c.admit(rows[~resident][order], payload[~resident][order],
+                    counts[~resident][order])
+        assert host.loc == dev.loc
+        np.testing.assert_array_equal(host.slot_row, dev.slot_row)
+        occupied = np.flatnonzero(host.slot_row >= 0)
+        assert np.array_equal(host.read(occupied), dev.read(occupied))
+    assert dev.evictions == host.evictions > 0
+    assert dev.device_bytes() == 6 * DIM * 4
+
+
+def test_device_warm_cache_scattered_slot_update():
+    """Writes must land exactly whether the slots form one contiguous run
+    (dynamic-update-slice path) or are fragmented (fused scatter path)."""
+    c = DeviceWarmCache(8, 4, "lru")
+    c._write_payload(np.array([7, 0, 3, 4]),             # fragmented
+                     _payload(np.array([70, 0, 30, 40])))
+    data = np.asarray(c.data)
+    np.testing.assert_array_equal(data[0], np.full(4, 0.0))
+    np.testing.assert_array_equal(data[3], np.full(4, 30.0))
+    np.testing.assert_array_equal(data[4], np.full(4, 40.0))
+    np.testing.assert_array_equal(data[7], np.full(4, 70.0))
+    np.testing.assert_array_equal(data[[1, 2, 5, 6]], np.zeros((4, 4)))
+    c._write_payload(np.array([2, 1]),                   # contiguous run
+                     _payload(np.array([20, 10])))
+    data = np.asarray(c.data)
+    np.testing.assert_array_equal(data[1], np.full(4, 10.0))
+    np.testing.assert_array_equal(data[2], np.full(4, 20.0))
+    np.testing.assert_array_equal(data[7], np.full(4, 70.0))
+
+
+def test_device_warm_ps_bit_exact_vs_dense_gather():
+    tables = _tables()
+    pats = _med_pats()
+    ps = ParameterServer(tables,
+                         PSConfig(hot_rows=16, warm_slots=32,
+                                  warm_backing="device"),
+                         trace=_batch(pats, 16, POOL, seed=0))
+    assert all(isinstance(w, DeviceWarmCache) for w in ps.warm)
+    for s in range(1, 6):
+        idx = _batch(pats, 8, POOL, seed=s)
+        assert np.array_equal(ps.lookup(idx), _dense(tables, idx))
+    assert sum(w.insertions for w in ps.warm) > 0   # device path exercised
+
+
+def test_ps_config_validates_new_knobs():
+    with pytest.raises(ValueError, match="warm_backing"):
+        PSConfig(warm_backing="l2")
+    cfg = PSConfig(hot_rows=4, warm_slots=4, warm_backing="device",
+                   async_prefetch=True)
+    assert cfg.capacity_rows() == 8
+
+
+# ---------------------------------------------------------------------------
+# Planner-driven tier auto-tuning
+# ---------------------------------------------------------------------------
+
+def test_plan_tier_capacities_monotone_in_budget():
+    trace = _batch(_med_pats(), 64, POOL, seed=0)
+    prev_hot = prev_total = -1
+    for budget in (0, 256, 1024, 4096, 16384, 65536, 262144, 2**22):
+        p = plan_tier_capacities(trace, ROWS, DIM, budget)
+        total = p.hot_rows + p.warm_slots
+        assert p.hot_rows >= prev_hot
+        assert total >= prev_total
+        assert total <= p.budget_rows
+        assert p.used_bytes <= max(budget, 0)
+        assert 0.0 <= p.hot_coverage <= p.total_coverage <= 1.0
+        prev_hot, prev_total = p.hot_rows, total
+    assert prev_total == ROWS                    # huge budget: all resident
+
+
+def test_plan_tier_capacities_shapes_and_edges():
+    trace2d = _batch(_med_pats(), 32, POOL, seed=1)[:, 0]   # [N, L]
+    p = plan_tier_capacities(trace2d, ROWS, DIM, 1 << 20)
+    assert p.hot_rows + p.warm_slots == ROWS
+    p0 = plan_tier_capacities(trace2d, ROWS, DIM, 0)
+    assert p0.hot_rows == p0.warm_slots == 0
+    assert any("cold" in n for n in p0.notes)
+    # a trace with no recurring row => nothing worth pinning
+    once = np.arange(ROWS, dtype=np.int64)[:, None, None]   # each row once
+    p1 = plan_tier_capacities(once, ROWS, DIM, 1 << 30)
+    assert p1.hot_rows == 0 and p1.warm_slots == ROWS
+
+
+def test_ps_config_from_plan_and_ebc_autotune():
+    pats = _med_pats()
+    trace = _batch(pats, 32, POOL, seed=0)
+    plan = plan_tier_capacities(trace, ROWS, DIM, 64 * 1024)
+    cfg = PSConfig.from_plan(plan, async_prefetch=True, prefetch_depth=3)
+    assert cfg.hot_rows == plan.hot_rows
+    assert cfg.warm_slots == plan.warm_slots
+    assert cfg.async_prefetch and cfg.prefetch_depth == 3
+
+    ebc = EmbeddingBagCollection(EmbeddingStageConfig(
+        num_tables=TABLES, rows=ROWS, dim=DIM, pooling=POOL,
+        storage="tiered"))
+    params = ebc.init(jax.random.PRNGKey(0))
+    ps = ebc.build_parameter_server(params, trace=trace,
+                                    device_budget_bytes=64 * 1024,
+                                    async_prefetch=True)
+    assert ps.cfg.hot_rows == plan.hot_rows
+    assert ps.cfg.async_prefetch
+    idx = _batch(pats, 8, POOL, seed=3)
+    base = _dense(np.asarray(params["tables"]), idx)
+    assert np.array_equal(ps.lookup(idx), base)
+    ps.close()
+    with pytest.raises(ValueError, match="device_budget_bytes"):
+        ebc.build_parameter_server(params)       # no cfg, no budget
+    with pytest.raises(ValueError, match="overrides"):
+        ebc.build_parameter_server(params, PSConfig(hot_rows=1),
+                                   async_prefetch=True)
+
+
+# ---------------------------------------------------------------------------
+# Serving: async refresh driver + overlap stats
+# ---------------------------------------------------------------------------
+
+def test_serving_async_refresh_and_overlap_stats():
+    emb = EmbeddingStageConfig(num_tables=TABLES, rows=ROWS, dim=DIM,
+                               pooling=POOL, storage="tiered")
+    model = DLRM(DLRMConfig(embedding=emb, bottom_mlp=(64, DIM),
+                            top_mlp=(32, 1)))
+    params = model.init(jax.random.PRNGKey(0))
+    stream = DLRMQueryStream(num_tables=TABLES, rows=ROWS, pooling=POOL,
+                             batch_size=8, hotness="med_hot", seed=1)
+    ps = model.ebc.build_parameter_server(
+        params, PSConfig(hot_rows=32, warm_slots=32, window_batches=4,
+                         async_prefetch=True),
+        trace=stream.sample_trace(2))
+    rest = jax.jit(lambda d, p: model.forward_from_pooled(params, d, p))
+
+    def fwd(dense, idx):
+        pooled = model.ebc.apply(params, idx)
+        return rest(jnp.asarray(dense), pooled)
+
+    srv = InferenceServer(fwd, BatcherConfig(max_batch=8, max_wait_s=0.0),
+                          sla_ms=1e6, ps=ps, refresh_every_batches=2,
+                          async_refresh=True)
+    # submit two batches ahead so _stage_next() sees a full next batch
+    for b in range(6):
+        batch = stream.next_batch()
+        for i in range(8):
+            srv.submit(Query(qid=b * 8 + i, dense=batch.dense[i],
+                             indices=batch.indices[i]))
+        if b >= 1:
+            srv.poll()
+    srv.drain()
+    srv.close()                                  # installs pending plan
+    srv.close()                                  # idempotent
+    ps.close()
+    pct = srv.stats.percentiles()
+    assert pct["served"] == 48
+    # async refresh actually planned + installed off the serving path
+    assert pct["refreshes"] >= 1
+    assert pct.get("async_refreshes", 0) >= 1
+    # overlap stats surfaced through ServeStats.percentiles()
+    for key in ("queue_depth", "max_queue_depth", "off_critical_frac",
+                "consume_overlap_frac", "consume_ready", "consume_waited"):
+        assert key in pct, (key, pct)
+    assert pct["max_queue_depth"] >= 1           # staging actually queued
+
+
+def test_sync_refresh_driver_unchanged():
+    """async_refresh=False keeps the PR-1 blocking refresh semantics."""
+    pats = _med_pats()
+    ps = ParameterServer(_tables(), PSConfig(hot_rows=16, warm_slots=16,
+                                             window_batches=4))
+
+    def fwd(dense, idx):
+        ps.lookup(idx)
+        return np.zeros(len(dense), np.float32)
+
+    srv = InferenceServer(fwd, BatcherConfig(max_batch=4, max_wait_s=0.0),
+                          sla_ms=1e6, ps=ps, refresh_every_batches=1)
+    idx = _batch(pats, 4, POOL, seed=0)
+    for q in range(4):
+        srv.submit(Query(qid=q, dense=np.zeros(2, np.float32),
+                         indices=idx[q]))
+    srv.drain(timeout_s=1.0)
+    assert ps.refreshes == 1
+    assert srv.stats.async_refreshes == 0
+    srv.close()                                  # no-op without async pool

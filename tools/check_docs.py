@@ -1,0 +1,77 @@
+"""Docs gate: fail on broken intra-repo links in README.md and docs/*.md.
+
+Checks every markdown link/image whose target is repo-relative (external
+http(s)/mailto links and pure #anchors are skipped; #anchor suffixes on
+file targets are stripped before the existence check). Exit code 1 lists
+the broken links; used by the CI `docs` job together with
+`python -m compileall -q src` as a cheap syntax gate.
+
+    python tools/check_docs.py [repo_root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# [text](target) and ![alt](target); stop at the first unescaped ')'
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def iter_doc_files(root: Path):
+    yield root / "README.md"
+    docs = root / "docs"
+    if docs.is_dir():
+        yield from sorted(docs.glob("*.md"))
+
+
+def check_file(path: Path, root: Path) -> list[str]:
+    errors = []
+    in_code_fence = False
+    for lineno, line in enumerate(path.read_text().splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_code_fence = not in_code_fence
+            continue
+        if in_code_fence:
+            continue
+        for m in _LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(_SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = (path.parent / rel).resolve()
+            try:
+                resolved.relative_to(root.resolve())
+            except ValueError:
+                errors.append(f"{path.relative_to(root)}:{lineno}: "
+                              f"link escapes the repo: {target}")
+                continue
+            if not resolved.exists():
+                errors.append(f"{path.relative_to(root)}:{lineno}: "
+                              f"broken link: {target}")
+    return errors
+
+
+def main(root: Path) -> int:
+    errors = []
+    n_files = 0
+    for f in iter_doc_files(root):
+        if not f.exists():
+            errors.append(f"missing doc file: {f.relative_to(root)}")
+            continue
+        n_files += 1
+        errors.extend(check_file(f, root))
+    if errors:
+        print("\n".join(errors))
+        return 1
+    print(f"docs ok: {n_files} files, all intra-repo links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    repo_root = (Path(sys.argv[1]) if len(sys.argv) > 1
+                 else Path(__file__).resolve().parents[1])
+    sys.exit(main(repo_root))
