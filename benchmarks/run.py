@@ -8,12 +8,28 @@ Output: ``name,us_per_call,derived`` CSV rows.
 
 Scaled-down workload (CPU-feasible) unless noted; the full paper config
 (250 x 500K x 128, B=2048, pool 150) runs through the dry-run path instead.
+
+CLI: ``--sweep NAME`` (repeatable) runs a subset; ``--backend
+{device,tiered,sharded,...}`` routes the `storage_backends` sweep through
+the `repro.storage` registry for that backend only (default: every
+registered backend). Existing sweep names are unchanged.
 """
 from __future__ import annotations
+
+import argparse
+import os
+import sys
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+
+# support direct script runs (`python benchmarks/run.py`): python puts
+# benchmarks/ on sys.path, but the imports need the repo root (for
+# `benchmarks.tpu_model`) and src/ (for `repro`, when PYTHONPATH is unset)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+sys.path.insert(0, _ROOT)
 
 from repro.core import (EmbeddingBagCollection, EmbeddingStageConfig,
                         coverage_curve, hot_coverage, make_pattern,
@@ -419,18 +435,100 @@ def tiered_ps_autotune():
                  f"hit={st['cache_hit_rate']:.3f}")
 
 
+def storage_backends(backends: list[str] | None = None):
+    """Serve identical traffic through every registered storage backend via
+    `ServingSession` (the protocol path: registry -> backend -> generic
+    overlap driver) and report bit-exactness vs the dense pooled reference
+    plus the cache/overlap counters each backend surfaces. Tiny shapes:
+    a CI-smoke-speed sweep (seconds), not a throughput measurement.
+    """
+    from repro import storage as storage_registry
+    from repro.data import DLRMQueryStream
+    from repro.ps import PSConfig
+    from repro.serving import BatcherConfig, ServingSession
+    backends = backends or storage_registry.available()
+    rows, dim, batch, pool, t_count = 2000, 16, 32, 10, 4
+
+    def mk_model(backend):
+        cfg = DLRMConfig(embedding=EmbeddingStageConfig(
+            num_tables=t_count, rows=rows, dim=dim, pooling=pool,
+            backend="xla", storage=backend),
+            bottom_mlp=(32, dim), top_mlp=(16, 1))
+        return DLRM(cfg)
+
+    ref_model = mk_model("device")
+    params = ref_model.init(jax.random.PRNGKey(0))
+    for backend in backends:
+        for h in ("med_hot", "random"):
+            stream = DLRMQueryStream(num_tables=t_count, rows=rows,
+                                     pooling=pool, batch_size=batch,
+                                     hotness=h, seed=0)
+            model = mk_model(backend)
+            store = model.ebc.storage
+            caps = store.capabilities()
+            if not caps.device_resident:
+                build_kw = ({"num_shards": 2} if caps.shardable else {})
+                store.build(params,
+                            PSConfig(hot_rows=rows // 10,
+                                     warm_slots=rows // 10,
+                                     window_batches=8,
+                                     async_prefetch=True),
+                            trace=stream.sample_trace(2), **build_kw)
+                caps = store.capabilities()   # staging caps appear on build
+            # bit-exactness of the pooled embedding stage on one batch
+            idx = jnp.asarray(stream.next_batch().indices)
+            exact = bool(np.array_equal(
+                np.asarray(model.embedding_only(params, idx)),
+                np.asarray(ref_model.embedding_only(params, idx))))
+            sess = ServingSession(
+                model, params,
+                batcher=BatcherConfig(max_batch=batch, max_wait_s=0.0),
+                sla_ms=1e6,
+                refresh_every_batches=4 if caps.refreshable else 0)
+            for b in range(4):
+                nb = stream.next_batch()
+                sess.submit_batch(nb.dense, nb.indices, qid0=b * batch)
+                if b >= 1:
+                    sess.poll()
+            sess.drain()
+            sess.close()     # install any in-flight refresh before reading
+            pct = sess.percentiles()
+            line = (f"bit_exact={exact} served={pct['served']} "
+                    f"caps={caps.describe()}")
+            if "cache_hit_rate" in pct:
+                line += (f" hit={pct['cache_hit_rate']:.3f}"
+                         f" off_critical={pct['off_critical_frac']:.3f}")
+            emit(f"storage_backend/{backend}/{h}", "", line)
+
+
 ALL = [tab3_unique_access, fig5_coverage, fig1_embedding_contribution,
        fig6_pipeline_sweep, fig9_prefetch_distance, fig11_l2p_pooling,
        fig12_embedding_speedup, fig12_measured_cpu, fig13_e2e_speedup,
        fig14_gap, fig15_buffer_schemes, fig16_no_optmt, fig17_heterogeneous,
        tab45_microarch, tiered_ps_capacity_sweep, tiered_ps_sync_vs_async,
-       tiered_ps_autotune]
+       tiered_ps_autotune, storage_backends]
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    from repro import storage as storage_registry
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sweep", action="append", default=None,
+                    choices=[fn.__name__ for fn in ALL],
+                    help="run only this sweep (repeatable; default: all)")
+    ap.add_argument("--backend", action="append", default=None,
+                    choices=storage_registry.available(),
+                    help="storage backend(s) for the storage_backends "
+                         "sweep, resolved through the repro.storage "
+                         "registry (repeatable; default: all registered)")
+    args = ap.parse_args(argv)
+    selected = (ALL if args.sweep is None
+                else [fn for fn in ALL if fn.__name__ in args.sweep])
     print("name,us_per_call,derived")
-    for fn in ALL:
-        fn()
+    for fn in selected:
+        if fn is storage_backends:
+            fn(args.backend)
+        else:
+            fn()
 
 
 if __name__ == "__main__":

@@ -4,19 +4,24 @@ Streams queries across the paper's hotness spectrum through the batching
 inference server, reports per-hotness latency percentiles and the embedding
 stage share — a scaled-down CPU rendition of paper Figs. 1/13.
 
-With --storage tiered the embedding tables live in the tiered parameter
-server (repro/ps): top rows pinned device-side hot-first, an LFU warm cache,
-full tables in host memory, periodic hot-set re-pinning from live traffic —
-the beyond-HBM serving shape. Cache hit/miss stats join the report line.
---async moves both overlap mechanisms off the critical path (threaded
-prefetch double buffer + helper-thread re-planning); --auto-budget-kib
-sizes the tiers from the trace with core.plan.plan_tier_capacities instead
-of --hot-rows/--warm-slots. See docs/serving.md for the full operator guide.
+The storage backend comes from the `repro.storage` registry: `device`
+(tables HBM-resident, the dense baseline), `tiered` (the repro/ps
+hot/warm/cold parameter server — beyond-HBM serving), or `sharded`
+(table-wise partition of the tiered store across `--shards` workers, one
+merged stats report). The `ServingSession` facade owns batcher + engine +
+storage and drives prefetch/refresh generically through the protocol, so
+the cache/overlap columns appear for any async-capable backend. `--legacy`
+exercises the deprecated PR-2 shim path (`build_parameter_server` +
+`InferenceServer(ps=...)`) instead — same traffic, same numbers, one
+DeprecationWarning. See docs/serving.md for the operator guide and the
+old→new migration table.
 
     PYTHONPATH=src python examples/serve_dlrm.py [--queries 256]
     PYTHONPATH=src python examples/serve_dlrm.py --storage tiered
+    PYTHONPATH=src python examples/serve_dlrm.py --storage sharded --shards 4
     PYTHONPATH=src python examples/serve_dlrm.py --storage tiered --async \
         --auto-budget-kib 4096 --warm-backing device
+    PYTHONPATH=src python examples/serve_dlrm.py --storage tiered --legacy
 """
 import argparse
 import time
@@ -25,136 +30,193 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import storage as storage_registry
 from repro.core import EmbeddingStageConfig
 from repro.data import DLRMQueryStream
 from repro.models.dlrm import DLRM, DLRMConfig
 from repro.ps import PSConfig
-from repro.serving import BatcherConfig, InferenceServer, Query
+from repro.serving import (BatcherConfig, InferenceServer, Query,
+                           ServingSession)
 
-TABLES, ROWS, POOL = 8, 50_000, 20
+HOTNESS = ("one_item", "high_hot", "med_hot", "low_hot", "random")
 
 
-def main():
+def parse_args():
     ap = argparse.ArgumentParser()
     ap.add_argument("--queries", type=int, default=256)
     ap.add_argument("--batch", type=int, default=64)
-    ap.add_argument("--storage", choices=("device", "tiered"),
-                    default="device")
+    ap.add_argument("--tables", type=int, default=8)
+    ap.add_argument("--rows", type=int, default=50_000)
+    ap.add_argument("--pooling", type=int, default=20)
+    ap.add_argument("--storage", choices=storage_registry.available(),
+                    default="device",
+                    help="storage backend (repro.storage registry)")
+    ap.add_argument("--shards", type=int, default=2,
+                    help="sharded: table-wise shard workers")
     ap.add_argument("--hot-rows", type=int, default=2500,
-                    help="tiered: device-pinned rows per table")
+                    help="tiered/sharded: device-pinned rows per table")
     ap.add_argument("--warm-slots", type=int, default=2500,
-                    help="tiered: warm-cache slots per table")
+                    help="tiered/sharded: warm-cache slots per table")
     ap.add_argument("--refresh-every", type=int, default=8,
-                    help="tiered: re-pin the hot set every N batches")
+                    help="re-pin the hot set every N batches")
     ap.add_argument("--async", dest="async_mode", action="store_true",
-                    help="tiered: threaded prefetch (double buffer) + "
+                    help="threaded prefetch (double buffer) + "
                          "helper-thread hot-set re-planning")
     ap.add_argument("--warm-backing", choices=("host", "device"),
                     default="host",
-                    help="tiered: warm-cache payload backing")
+                    help="tiered/sharded: warm-cache payload backing")
     ap.add_argument("--auto-budget-kib", type=int, default=0,
-                    help="tiered: size hot/warm tiers from the trace under "
-                         "this device budget (overrides --hot-rows/"
-                         "--warm-slots)")
-    args = ap.parse_args()
+                    help="size hot/warm tiers from the trace under this "
+                         "device budget (overrides --hot-rows/--warm-slots)")
+    ap.add_argument("--hotness", choices=HOTNESS + ("all",), default="all",
+                    help="run one hotness level (CI smoke) or the sweep")
+    ap.add_argument("--legacy", action="store_true",
+                    help="drive the deprecated build_parameter_server + "
+                         "InferenceServer(ps=...) shim path")
+    return ap.parse_args()
 
+
+def build_storage(args, model, params, stream):
+    """Materialize a host-backed backend from the traffic trace through the
+    protocol's build() — tier sizing explicit or planner-driven."""
+    trace = stream.sample_trace(2)
+    kw = dict(trace=trace)
+    if model.ebc.storage.capabilities().shardable:
+        kw["num_shards"] = args.shards
+    if args.auto_budget_kib:
+        # planner-driven tier sizing from the trace coverage curve
+        return model.ebc.storage.build(
+            params, device_budget_bytes=args.auto_budget_kib * 1024,
+            prefetch_depth=2, window_batches=16,
+            async_prefetch=args.async_mode,
+            warm_backing=args.warm_backing, **kw)
+    return model.ebc.storage.build(
+        params,
+        PSConfig(hot_rows=args.hot_rows, warm_slots=args.warm_slots,
+                 prefetch_depth=2, window_batches=16,
+                 async_prefetch=args.async_mode,
+                 warm_backing=args.warm_backing), **kw)
+
+
+def run_session(args, hotness) -> tuple[dict, int, float]:
+    """The current API: ServingSession owns engine + loop + storage."""
     cfg = DLRMConfig(embedding=EmbeddingStageConfig(
-        num_tables=TABLES, rows=ROWS, dim=128, pooling=POOL,
-        storage=args.storage))
+        num_tables=args.tables, rows=args.rows, dim=128,
+        pooling=args.pooling, storage=args.storage))
     model = DLRM(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    emb = (jax.jit(lambda i: model.embedding_only(params, i))
-           if args.storage == "device" else None)
-
-    if args.storage == "device":
-        fwd = jax.jit(lambda d, i: model.forward(params, d, i))
-    else:
-        rest = jax.jit(lambda d, p: model.forward_from_pooled(params, d, p))
-
-        def fwd(dense, idx):
-            pooled = model.ebc.apply(params, idx)   # host PS + device pool
-            return rest(jnp.asarray(dense), pooled)
-
-    # warm up (compile) outside the latency measurement
-    wd = jnp.zeros((args.batch, cfg.dense_features), jnp.float32)
-    wi = jnp.zeros((args.batch, TABLES, POOL), jnp.int32)
-
-    for hotness in ("one_item", "high_hot", "med_hot", "low_hot", "random"):
-        stream = DLRMQueryStream(num_tables=TABLES, rows=ROWS, pooling=POOL,
-                                 batch_size=args.batch, hotness=hotness,
-                                 seed=0)
-        ps = None
-        if args.storage == "tiered":
-            # plan the hot tier from an offline trace of this traffic, then
-            # let periodic refresh keep it pinned to the live distribution
-            trace = stream.sample_trace(2)
-            if args.auto_budget_kib:
-                # planner-driven tier sizing from the trace coverage curve
-                ps = model.ebc.build_parameter_server(
-                    params, trace=trace,
-                    device_budget_bytes=args.auto_budget_kib * 1024,
-                    prefetch_depth=2, window_batches=16,
-                    async_prefetch=args.async_mode,
-                    warm_backing=args.warm_backing)
-            else:
-                ps = model.ebc.build_parameter_server(
-                    params,
-                    PSConfig(hot_rows=args.hot_rows,
-                             warm_slots=args.warm_slots,
-                             prefetch_depth=2, window_batches=16,
-                             async_prefetch=args.async_mode,
-                             warm_backing=args.warm_backing),
-                    trace=trace)
-        jax.block_until_ready(fwd(np.asarray(wd), np.asarray(wi)))
-        if emb is not None:
-            jax.block_until_ready(emb(wi))
-        if ps is not None:
-            # warmup's all-zero batch is not traffic: drop its counters AND
-            # its footprint (warm-cache entry, refresh-window batch)
-            ps.flush()
-            ps.reset_stats()
-        srv = InferenceServer(fwd, BatcherConfig(max_batch=args.batch,
-                                                 max_wait_s=0.0), sla_ms=500,
-                              ps=ps,
-                              refresh_every_batches=args.refresh_every,
-                              async_refresh=args.async_mode)
-        # keep one batch queued ahead of the executing one so the server's
+    stream = DLRMQueryStream(num_tables=args.tables, rows=args.rows,
+                             pooling=args.pooling, batch_size=args.batch,
+                             hotness=hotness, seed=0)
+    device_resident = model.ebc.storage.capabilities().device_resident
+    if not device_resident:
+        build_storage(args, model, params, stream)
+    with ServingSession(
+            model, params,
+            batcher=BatcherConfig(max_batch=args.batch, max_wait_s=0.0),
+            sla_ms=500,
+            refresh_every_batches=(0 if device_resident
+                                   else args.refresh_every),
+            async_refresh=args.async_mode and not device_resident) as sess:
+        # keep one batch queued ahead of the executing one so the generic
         # _stage_next() sees the full next batch and prefetch overlap fires
         submitted = 0
         while submitted < args.queries:
             b = stream.next_batch()
-            for i in range(args.batch):
-                srv.submit(Query(qid=submitted + i, dense=b.dense[i],
-                                 indices=b.indices[i]))
+            sess.submit_batch(b.dense, b.indices, qid0=submitted)
             submitted += args.batch
             if submitted > args.batch:
-                srv.poll()
-        srv.drain()
+                sess.poll()
+        sess.drain()
+        sess.close()    # install any in-flight async refresh before reading
+        pct, viol = sess.percentiles(), sess.sla_violations()
+        emb_share = 0.0
+        if device_resident:
+            # embedding-stage share (paper Fig. 1)
+            emb = jax.jit(lambda i: model.embedding_only(params, i))
+            idx = jnp.asarray(stream.next_batch().indices)
+            jax.block_until_ready(emb(idx))     # compile outside timing
+            t0 = time.perf_counter()
+            jax.block_until_ready(emb(idx))
+            t_emb = time.perf_counter() - t0
+            emb_share = t_emb / max(np.mean(sess.stats.batch_latencies_s),
+                                    1e-9)
+    return pct, viol, emb_share
 
-        pct = srv.stats.percentiles()
+
+def run_legacy(args, hotness) -> tuple[dict, int, float]:
+    """The deprecated PR-2 wiring, kept exercising the shims: manual
+    warmup, build_parameter_server(), InferenceServer(ps=...)."""
+    cfg = DLRMConfig(embedding=EmbeddingStageConfig(
+        num_tables=args.tables, rows=args.rows, dim=128,
+        pooling=args.pooling, storage=args.storage))
+    model = DLRM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    stream = DLRMQueryStream(num_tables=args.tables, rows=args.rows,
+                             pooling=args.pooling, batch_size=args.batch,
+                             hotness=hotness, seed=0)
+    ps = model.ebc.build_parameter_server(
+        params,
+        PSConfig(hot_rows=args.hot_rows, warm_slots=args.warm_slots,
+                 prefetch_depth=2, window_batches=16,
+                 async_prefetch=args.async_mode,
+                 warm_backing=args.warm_backing),
+        trace=stream.sample_trace(2))
+    rest = jax.jit(lambda d, p: model.forward_from_pooled(params, d, p))
+
+    def fwd(dense, idx):
+        pooled = model.ebc.apply(params, idx)   # host PS + device pool
+        return rest(jnp.asarray(dense), pooled)
+
+    wd = np.zeros((args.batch, cfg.dense_features), np.float32)
+    wi = np.zeros((args.batch, args.tables, args.pooling), np.int32)
+    jax.block_until_ready(fwd(wd, wi))
+    ps.flush()          # warmup batch is not traffic
+    ps.reset_stats()
+    srv = InferenceServer(fwd, BatcherConfig(max_batch=args.batch,
+                                             max_wait_s=0.0), sla_ms=500,
+                          ps=ps, refresh_every_batches=args.refresh_every,
+                          async_refresh=args.async_mode)
+    submitted = 0
+    while submitted < args.queries:
+        b = stream.next_batch()
+        for i in range(args.batch):
+            srv.submit(Query(qid=submitted + i, dense=b.dense[i],
+                             indices=b.indices[i]))
+        submitted += args.batch
+        if submitted > args.batch:
+            srv.poll()
+    srv.drain()
+    srv.close()         # install any in-flight async refresh
+    pct, viol = srv.stats.percentiles(), srv.sla_violations()
+    ps.close()
+    return pct, viol, 0.0
+
+
+def main():
+    args = parse_args()
+    if args.legacy and args.storage != "tiered":
+        raise SystemExit("--legacy exercises the tiered "
+                         "build_parameter_server shim; use "
+                         "--storage tiered")
+    levels = HOTNESS if args.hotness == "all" else (args.hotness,)
+    for hotness in levels:
+        pct, viol, emb_share = (run_legacy(args, hotness) if args.legacy
+                                else run_session(args, hotness))
         line = (f"{hotness:9s} served={pct['served']:4d} "
                 f"p50={pct['p50_ms']:.1f}ms p99={pct['p99_ms']:.1f}ms "
                 f"batch={pct['mean_batch_ms']:.1f}ms "
-                f"sla_viol={srv.sla_violations()}")
-        if args.storage == "tiered":
-            srv.close()     # install any in-flight async refresh
-            pct = srv.stats.percentiles()
+                f"sla_viol={viol}")
+        if "cache_hit_rate" in pct:
             line += (f" hit={pct['cache_hit_rate']:.2f} "
                      f"(hot={pct['hot_hit_rate']:.2f} "
                      f"warm={pct['warm_hit_rate']:.2f}) "
                      f"evict={pct['evictions']} "
                      f"refresh={pct['refreshes']} "
                      f"off_crit={pct['off_critical_frac']:.2f}")
-            ps.close()
         else:
-            # embedding-stage share (paper Fig. 1)
-            idx = jnp.asarray(stream.next_batch().indices)
-            t0 = time.perf_counter()
-            jax.block_until_ready(emb(idx))
-            t_emb = time.perf_counter() - t0
-            frac = t_emb / max(np.mean(srv.stats.batch_latencies_s), 1e-9)
-            line += f" emb_share~{min(frac, 1.0):.0%}"
-        print(line)
+            line += f" emb_share~{min(emb_share, 1.0):.0%}"
+        print(line, flush=True)
 
 
 if __name__ == "__main__":

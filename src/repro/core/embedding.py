@@ -7,6 +7,14 @@ processed with a single stacked lookup (vmapped kernel / gather), matching the
 paper's "each GPU executes one or more embedding tables serially" — the grid
 dimension over tables is the serialization.
 
+Storage is pluggable: `EmbeddingStageConfig.storage` names a backend in the
+`repro.storage` registry (`device` — dense XLA/Pallas gather, seed
+behaviour; `tiered` — the repro/ps hot/warm/cold parameter server;
+`sharded` — table-wise partition of the tiered store), and `apply()`
+delegates to `self.storage.lookup(...)`. All backends are bit-exact with
+the dense gather; see docs/architecture.md for the layer map and
+docs/serving.md for the old→new migration table.
+
 Distribution: table-wise sharding over the `model` mesh axis (stack axis 0),
 batch over `data` — the classic DLRM hybrid parallelism. The all-to-all that
 moves lookup outputs from model-parallel to data-parallel layout is inserted
@@ -16,6 +24,7 @@ exercised in launch/steps.py as the optimized path).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax
@@ -23,16 +32,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hot_cache
-from repro.kernels.embedding_bag import EmbeddingBagOpts, embedding_bag
+from repro.kernels.embedding_bag import EmbeddingBagOpts
 
 
 def _pool_rows_core(rows_t: jnp.ndarray, w_t: jnp.ndarray | None,
                     combine: str, pooling: int) -> jnp.ndarray:
     """Pool gathered rows [T, B, L, D] -> [T, B, D].
 
-    The single reduction shared by the dense-XLA and tiered paths — both
-    feed it identically-valued [T, B, L, D] rows, which is what makes
-    storage='tiered' bit-identical to storage='device'.
+    The single reduction shared by every storage backend — all feed it
+    identically-valued [T, B, L, D] rows, which is what makes `tiered` and
+    `sharded` bit-identical to `device`.
     """
     if w_t is not None:
         rows_t = rows_t * w_t[..., None].astype(rows_t.dtype)
@@ -52,10 +61,12 @@ class EmbeddingStageConfig:
     combine: str = "sum"           # bag pooling mode
     # paper-mechanism knobs
     backend: str = "auto"          # 'xla' (baseline) | 'pallas' | 'auto'
-    # 'device': tables fully HBM-resident (seed behaviour). 'tiered': tables
-    # live in the repro/ps parameter server (hot/warm device tiers + host
-    # cold tier) — beyond-HBM models; bit-exact with the device path.
-    storage: str = "device"        # 'device' | 'tiered'
+    # Storage backend name, resolved in the repro.storage registry:
+    # 'device' (tables fully HBM-resident, seed behaviour), 'tiered'
+    # (repro/ps hot/warm/cold parameter server — beyond-HBM, bit-exact),
+    # 'sharded' (table-wise partition of the tiered store), or any
+    # backend registered out of tree.
+    storage: str = "device"
     prefetch_distance: int = 8
     batch_block: int = 8
     pinned_rows: int = 0           # K per table; paper: 60K rows across L2
@@ -82,22 +93,31 @@ class EmbeddingStageConfig:
 
 
 class EmbeddingBagCollection:
-    """Functional module: init(rng) -> params; apply(params, indices) -> pooled."""
+    """Functional module: init(rng) -> params; apply(params, indices) -> pooled.
+
+    `self.storage` is the bound `repro.storage.EmbeddingStorage` backend
+    (created from `cfg.storage` via the registry); host-backed backends are
+    materialized with `ebc.storage.build(params, ...)` before the first
+    `apply()`. The legacy `build_parameter_server(...)` / `ps=` surface
+    keeps working as a deprecation shim over the tiered backend.
+    """
 
     def __init__(self, cfg: EmbeddingStageConfig,
                  plans: Optional[list[hot_cache.HotPlan]] = None,
                  ps=None):
-        if cfg.storage not in ("device", "tiered"):
-            raise ValueError(f"storage must be 'device' or 'tiered', "
-                             f"got {cfg.storage!r}")
-        if cfg.storage == "tiered" and cfg.pinned_rows > 0:
-            # The parameter server owns the hot-first permutation (its hot
-            # tier); a second EBC-level remap would double-remap indices.
-            raise ValueError("storage='tiered' manages hot rows in the "
-                             "parameter server; set pinned_rows=0 and size "
-                             "the hot tier via PSConfig.hot_rows")
         self.cfg = cfg
-        self.ps = ps                   # repro.ps.ParameterServer (tiered)
+        # Resolve the backend FIRST: unknown names and invalid
+        # storage/pinned_rows combinations fail before any plan/remap
+        # allocation happens. Lazy import: storage imports core.embedding.
+        from repro import storage as storage_registry
+        self.storage = storage_registry.create(cfg.storage, self)
+        if ps is not None:
+            warnings.warn(
+                "EmbeddingBagCollection(ps=...) is deprecated; build the "
+                "backend instead: ebc.storage.build(params, ps_cfg) "
+                "(see docs/serving.md migration table)",
+                DeprecationWarning, stacklevel=2)
+            self._attach_ps(ps)
         # One plan per table; identity when pinning is off.
         if plans is None:
             plans = [hot_cache.identity_plan(cfg.rows, cfg.pinned_rows)
@@ -109,43 +129,49 @@ class EmbeddingBagCollection:
             np.stack([p.inv_perm for p in plans]).astype(np.int32)
             if cfg.pinned_rows > 0 else None)
 
+    # -- legacy parameter-server surface (deprecation shims) ----------------
+    def _attach_ps(self, ps) -> None:
+        if not hasattr(self.storage, "ps"):
+            raise TypeError(
+                f"storage backend {self.cfg.storage!r} does not wrap a "
+                f"ParameterServer; use storage='tiered'")
+        self.storage.ps = ps
+
+    @property
+    def ps(self):
+        """The wrapped `ParameterServer` (tiered backend), or None."""
+        return getattr(self.storage, "ps", None)
+
+    @ps.setter
+    def ps(self, value) -> None:
+        self._attach_ps(value)
+
     def build_parameter_server(self, params: dict, ps_cfg=None,
                                trace: Optional[np.ndarray] = None, *,
                                device_budget_bytes: Optional[int] = None,
                                **ps_cfg_overrides):
-        """Move initialized tables into a tiered ParameterServer and attach.
+        """DEPRECATED shim — use `ebc.storage.build(params, ...)`.
 
-        `params["tables"]` becomes the host cold tier (authoritative copy);
-        the hot tier is planned from `trace` when given. Returns the server.
+        Kept so PR 1–2 call sites keep working unchanged: moves the
+        initialized tables into a tiered ParameterServer (explicit
+        `ps_cfg`, or trace + `device_budget_bytes` auto-tuning) and
+        returns the server. Emits a single DeprecationWarning."""
+        warnings.warn(
+            "EmbeddingBagCollection.build_parameter_server() is "
+            "deprecated; use ebc.storage.build(params, ps_cfg, trace=...) "
+            "and the ServingSession facade (see docs/serving.md migration "
+            "table)", DeprecationWarning, stacklevel=2)
+        if not hasattr(self.storage, "build") or not hasattr(self.storage,
+                                                             "ps"):
+            raise TypeError(
+                f"storage backend {self.cfg.storage!r} has no parameter "
+                f"server to build; use storage='tiered'")
+        self.storage.build(params, ps_cfg, trace,
+                           device_budget_bytes=device_budget_bytes,
+                           **ps_cfg_overrides)
+        return self.storage.ps
 
-        Pass an explicit `ps_cfg`, or leave it None with
-        `device_budget_bytes` set to auto-tune the tier capacities from the
-        trace's coverage curve (`core.plan.plan_tier_capacities`);
-        `ps_cfg_overrides` then forward to `PSConfig.from_plan` (e.g.
-        `async_prefetch=True`, `warm_backing="device"`).
-        """
-        from repro.ps import ParameterServer, PSConfig  # lazy: ps imports core
-        if ps_cfg is None:
-            if device_budget_bytes is None or trace is None:
-                raise ValueError(
-                    "auto-tuned tiers need both trace= and "
-                    "device_budget_bytes= (or pass an explicit ps_cfg)")
-            from repro.core.plan import plan_tier_capacities
-            tier_plan = plan_tier_capacities(
-                trace, self.cfg.rows, self.cfg.dim, device_budget_bytes,
-                itemsize=self.cfg.jnp_dtype.itemsize)
-            ps_cfg = PSConfig.from_plan(tier_plan, **ps_cfg_overrides)
-        elif ps_cfg_overrides or device_budget_bytes is not None:
-            raise ValueError("device_budget_bytes and PSConfig overrides "
-                             "only apply when ps_cfg is None (auto-tuning "
-                             "path) — the explicit config would silently "
-                             "win otherwise")
-        if "tables" not in params and "embedding" in params:
-            params = params["embedding"]      # full DLRM params accepted
-        tables = np.asarray(params["tables"])[:self.cfg.num_tables]
-        self.ps = ParameterServer(tables, ps_cfg, trace=trace)
-        return self.ps
-
+    # -- params -------------------------------------------------------------
     def init(self, rng: jax.Array) -> dict:
         cfg = self.cfg
         scale = 1.0 / np.sqrt(cfg.dim)
@@ -169,71 +195,14 @@ class EmbeddingBagCollection:
         return jax.vmap(lambda r, idx: r[idx], in_axes=(0, 1), out_axes=1)(
             remap, indices)
 
-    def _apply_tiered(self, indices, weights) -> jnp.ndarray:
-        """Tiered path: rows come from the parameter server (host call — run
-        OUTSIDE jit), pooling runs on device via the same reduction as the
-        dense XLA branch, so outputs are bit-identical."""
-        if self.ps is None:
-            raise RuntimeError(
-                "storage='tiered' needs a ParameterServer: call "
-                "build_parameter_server(params, ps_cfg) or pass ps= to "
-                "EmbeddingBagCollection")
-        rows = self.ps.lookup(np.asarray(indices))      # [B, T, L, D]
-        rows_t = jnp.swapaxes(jnp.asarray(rows), 0, 1)  # [T, B, L, D]
-        w_t = (None if weights is None
-               else jnp.swapaxes(jnp.asarray(weights), 0, 1))
-        # eager on purpose: op-by-op execution matches the dense path's
-        # eager reduction bit-for-bit (a jitted wrapper re-fuses mul+sum
-        # and drifts by 1 ULP)
-        pooled = _pool_rows_core(rows_t, w_t, self.cfg.combine,
-                                 self.cfg.pooling)
-        return jnp.swapaxes(pooled, 0, 1)               # [B, T, D]
-
+    # -- data path ----------------------------------------------------------
     def apply(self, params: dict, indices: jnp.ndarray,
               weights: jnp.ndarray | None = None, *,
               pre_remapped: bool = False) -> jnp.ndarray:
-        """indices: [B, T, L] int32 -> pooled [B, T, D]."""
-        cfg = self.cfg
-        if cfg.storage == "tiered":
-            return self._apply_tiered(indices, weights)
-        if not pre_remapped:
-            indices = self.remap_indices(indices)
-        tables = params["tables"]                      # [T(+pad), R, D]
-        idx_t = jnp.swapaxes(indices, 0, 1)            # [T, B, L]
-        w_t = None if weights is None else jnp.swapaxes(weights, 0, 1)
-        if cfg.shard_pad_tables:
-            pad = jnp.zeros((cfg.shard_pad_tables, *idx_t.shape[1:]),
-                            idx_t.dtype)
-            idx_t = jnp.concatenate([idx_t, pad], axis=0)
-            if w_t is not None:
-                w_t = jnp.concatenate(
-                    [w_t, jnp.zeros((cfg.shard_pad_tables, *w_t.shape[1:]),
-                                    w_t.dtype)], axis=0)
+        """indices: [B, T, L] int32 -> pooled [B, T, D].
 
-        # Pin the table-parallel layout end to end: indices reshard to the
-        # table owners (small a2a), gathers stay local, only POOLED outputs
-        # travel back (EXPERIMENTS.md SPerf C1). Lazy import: models.dlrm
-        # imports this module (avoid the package-level cycle).
-        from repro.models import pspec
-        idx_t = pspec.constrain_tablewise(idx_t)
-        if w_t is not None:
-            w_t = pspec.constrain_tablewise(w_t)
-        if cfg.backend == "xla" or (cfg.backend == "auto"
-                                    and jax.default_backend() != "tpu"):
-            rows = jax.vmap(
-                lambda t, i: jnp.take(t, i, axis=0))(tables, idx_t)  # [T,B,L,D]
-            pooled = _pool_rows_core(rows, w_t, cfg.combine, cfg.pooling)
-        else:
-            opts = self.cfg.kernel_opts(interpret=jax.default_backend() != "tpu")
-            def one(table, idx, w):
-                return embedding_bag(table, idx, w, mode=cfg.combine,
-                                     backend="pallas", opts=opts)
-            if w_t is None:
-                pooled = jax.vmap(lambda t, i: one(t, i, None))(tables, idx_t)
-            else:
-                pooled = jax.vmap(one)(tables, idx_t, w_t)
-        pooled = pspec.constrain_tablewise(pooled)     # [T(+pad), B, D]
-        pooled = jnp.swapaxes(pooled, 0, 1)            # [B, T(+pad), D]
-        if cfg.shard_pad_tables:
-            pooled = pooled[:, :cfg.num_tables]
-        return pooled
+        Thin delegation into the bound storage backend; which code path
+        runs (jitted dense gather, host parameter-server lookup, sharded
+        fan-out) is the backend's business."""
+        return self.storage.lookup(params, indices, weights,
+                                   pre_remapped=pre_remapped)

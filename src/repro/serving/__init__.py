@@ -1,2 +1,13 @@
+"""Serving layer: the batching loop and the session facade.
+
+`ServingSession` is the front door — it owns batcher + engine + storage
+and drives prefetch/refresh through the `repro.storage` protocol.
+`InferenceServer`/`Batcher` remain the inner loop for callers that wire
+their own engines.
+"""
 from repro.serving.server import (Batcher, BatcherConfig, InferenceServer,
                                   Query, ServeStats)
+from repro.serving.session import ServingSession
+
+__all__ = ["Batcher", "BatcherConfig", "InferenceServer", "Query",
+           "ServeStats", "ServingSession"]

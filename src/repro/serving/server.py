@@ -5,17 +5,24 @@ to saturate the GPU; same logic here), the engine executes the forward pass,
 and per-query latencies are tracked against an SLA target. Percentile
 reporting mirrors how the paper reports batch latency.
 
-Tiered-storage integration (see docs/serving.md): the server drives the
-parameter server's two overlap mechanisms —
+Storage integration (see docs/serving.md): the server drives any
+`repro.storage.EmbeddingStorage` backend generically through the protocol —
+no backend-specific code in the loop, so every current and future backend
+gets the two overlap mechanisms for free:
   * prefetch: before each forward, the NEXT pending full batch's cache
-    misses are staged (`ParameterServer.stage`); with
-    `PSConfig.async_prefetch` the gathers run on the PS worker thread.
+    misses are staged (`storage.stage`, guarded by the `storage.can_stage`
+    backpressure probe); async-capable backends resolve the gathers on
+    their own worker threads.
   * refresh: every `refresh_every_batches` executed batches the hot set is
-    re-planned. With `async_refresh=True` the planning phase
-    (`ParameterServer.plan_refresh`) runs on a helper thread against a
-    window snapshot and `poll()` installs the result on a later iteration
-    (`ParameterServer.install_refresh`) — re-pinning leaves the critical
+    re-planned. With `async_refresh=True` the pure planning phase
+    (`storage.plan_refresh` over a `storage.refresh_window()` snapshot)
+    runs on a helper thread and `poll()` installs the result on a later
+    iteration (`storage.install_refresh`) — re-pinning leaves the critical
     path too.
+
+Prefer the `repro.serving.session.ServingSession` facade, which wires the
+forward engine, warmup, and storage lifecycle around this loop. Passing a
+raw `ParameterServer` as `ps=` still works as a deprecation shim.
 """
 from __future__ import annotations
 
@@ -24,6 +31,7 @@ import concurrent.futures
 import dataclasses
 import itertools
 import time
+import warnings
 from typing import Callable, Optional
 
 import numpy as np
@@ -76,10 +84,11 @@ class ServeStats:
     query_latencies_s: list = dataclasses.field(default_factory=list)
     # refreshes whose planning phase ran on the helper thread
     async_refreshes: int = 0
-    # tiered parameter-server cache counters (storage='tiered' only):
-    # hot/warm hit rates, cold misses, evictions, refreshes, and the
-    # prefetch queue/overlap counters — updated by InferenceServer.poll()
-    # after every executed batch.
+    # storage-backend cache counters (tiered / sharded / any backend whose
+    # stats() reports them): hot/warm hit rates, cold misses, evictions,
+    # refreshes, and the prefetch queue/overlap counters — updated by
+    # InferenceServer.poll() after every executed batch. Empty for
+    # stats-free backends (device).
     ps_stats: dict = dataclasses.field(default_factory=dict)
 
     _PS_KEYS = ("hot_hit_rate", "warm_hit_rate", "cache_hit_rate",
@@ -115,30 +124,56 @@ class ServeStats:
 class InferenceServer:
     """forward(dense [B,F], indices [B,T,L]) -> scores [B].
 
-    When serving a tiered-storage model, pass its `ParameterServer` as
-    `ps`: the server then (a) stages the NEXT pending batch's cache misses
-    before executing the current one (prefetch overlap), (b) re-plans the
-    hot tier every `refresh_every_batches` executed batches from the PS's
-    sliding traffic window (paper §IV-C periodic re-pinning) — on a helper
-    thread when `async_refresh=True` — and (c) mirrors cache + overlap
-    counters into `stats.percentiles()`.
+    Pass the model's storage backend as `storage` (any
+    `repro.storage.EmbeddingStorage`): the server then (a) stages the NEXT
+    pending batch's cache misses before executing the current one
+    (prefetch overlap), (b) re-plans the hot set every
+    `refresh_every_batches` executed batches from the backend's sliding
+    traffic window (paper §IV-C periodic re-pinning) — on a helper thread
+    when `async_refresh=True` — and (c) mirrors the backend's cache +
+    overlap counters into `stats.percentiles()`. All of it goes through
+    the protocol verbs, so backends that cannot stage or refresh degrade
+    to no-ops instead of needing special cases here.
+
+    `ps=` (a raw `ParameterServer`) is the deprecated PR-2 spelling; it is
+    wrapped in the tiered backend adapter and keeps working.
     """
 
     def __init__(self, forward: Callable, batcher_cfg: BatcherConfig,
-                 sla_ms: float = 50.0, ps=None,
+                 sla_ms: float = 50.0, ps=None, storage=None,
                  refresh_every_batches: int = 0,
                  async_refresh: bool = False):
+        if ps is not None and storage is not None:
+            raise ValueError("pass either storage= (preferred) or the "
+                             "deprecated ps=, not both")
+        if ps is not None:
+            warnings.warn(
+                "InferenceServer(ps=...) is deprecated; pass the storage "
+                "backend instead: InferenceServer(storage=ebc.storage) or "
+                "use ServingSession (see docs/serving.md migration table)",
+                DeprecationWarning, stacklevel=2)
+            from repro.storage import TieredStorage
+            storage = TieredStorage.adopt(ps)
         self.forward = forward
         self.batcher = Batcher(batcher_cfg)
         self.sla_s = sla_ms / 1e3
         self.stats = ServeStats()
-        self.ps = ps
+        self.storage = storage
+        if (async_refresh and storage is not None
+                and not storage.capabilities().refreshable):
+            from repro.storage import require_capability
+            require_capability(storage, "refreshable")
         self.refresh_every_batches = refresh_every_batches
         self.async_refresh = async_refresh
         self._executed_batches = 0
         self._refresh_pool: Optional[
             concurrent.futures.ThreadPoolExecutor] = None
         self._refresh_future: Optional[concurrent.futures.Future] = None
+
+    @property
+    def ps(self):
+        """Deprecated accessor: the wrapped ParameterServer, if any."""
+        return getattr(self.storage, "ps", None)
 
     def submit(self, q: Query) -> None:
         self.batcher.submit(q)
@@ -171,10 +206,10 @@ class InferenceServer:
         assembled (staging never needs the dense features)."""
         q = self.batcher.queue
         b = self.batcher.cfg.max_batch
-        if len(q) < b or not self.ps.can_stage():
+        if len(q) < b or not self.storage.can_stage():
             return
         nxt = list(itertools.islice(q, b))
-        self.ps.stage(self._assemble_indices(nxt, b))
+        self.storage.stage(self._assemble_indices(nxt, b))
 
     # -- async refresh driver -----------------------------------------------
     def _start_refresh(self) -> None:
@@ -182,16 +217,16 @@ class InferenceServer:
         async mode snapshots the traffic window on this thread and plans on
         a helper, leaving installation to a later poll()."""
         if not self.async_refresh:
-            self.ps.refresh()
+            self.storage.refresh()
             return
         if self._refresh_future is not None:    # previous plan still in
             return                              # flight: don't pile up
         if self._refresh_pool is None:
             self._refresh_pool = concurrent.futures.ThreadPoolExecutor(
                 max_workers=1, thread_name_prefix="ps-refresh")
-        window = list(self.ps.window)           # snapshot on serving thread
+        window = self.storage.refresh_window()  # snapshot on serving thread
         self._refresh_future = self._refresh_pool.submit(
-            self.ps.plan_refresh, window)
+            self.storage.plan_refresh, window)
 
     def _install_refresh_if_ready(self) -> None:
         """Install a finished helper-thread plan (serving thread only —
@@ -206,9 +241,9 @@ class InferenceServer:
         exactly like a sync refresh — count a real re-pin, and re-mirror
         PS stats. Shared by the poll() path and close()."""
         fut, self._refresh_future = self._refresh_future, None
-        if self.ps.install_refresh(fut.result())["replanned"]:
+        if self.storage.install_refresh(fut.result())["replanned"]:
             self.stats.async_refreshes += 1
-        self.stats.ps_stats = self.ps.stats()
+        self.stats.ps_stats = self.storage.stats()
 
     def poll(self, force: bool = False) -> int:
         """Execute at most one batch; returns #queries served."""
@@ -217,7 +252,7 @@ class InferenceServer:
             return 0
         n = len(batch)
         dense, idx = self._assemble(batch)
-        if self.ps is not None:
+        if self.storage is not None:
             # both run outside the timed region. Install a finished
             # refresh FIRST so staging probes the post-refresh tier state
             # (staging against the old plan would prefetch rows about to
@@ -228,7 +263,7 @@ class InferenceServer:
             self._stage_next()
             # batcher padding is not traffic — keep it out of cache stats
             # and the refresh window
-            self.ps.hint_valid(n)
+            self.storage.hint_valid(n)
         t0 = time.perf_counter()
         scores = self.forward(dense, idx)
         np.asarray(scores)  # block
@@ -237,13 +272,13 @@ class InferenceServer:
         for q in batch:
             self.stats.query_latencies_s.append(t1 - q.arrival_s)
         self.stats.served += n
-        if self.ps is not None:
+        if self.storage is not None:
             self._executed_batches += 1
             if (self.refresh_every_batches
                     and self._executed_batches
                     % self.refresh_every_batches == 0):
                 self._start_refresh()
-            self.stats.ps_stats = self.ps.stats()
+            self.stats.ps_stats = self.storage.stats()
         return n
 
     def drain(self, timeout_s: float = 10.0) -> None:

@@ -1,0 +1,145 @@
+"""ServingSession — the one-stop facade over batcher + engine + storage.
+
+PR 1–2 exposed the embedding-serving machinery through three divergent
+surfaces (`EmbeddingBagCollection(storage=...)`, the `ParameterServer`
+stack, and a hand-wired `InferenceServer` loop). A session owns all three
+and wires them from the storage backend's capability descriptor alone:
+
+  * **engine** — device-resident backends get one fully-jitted forward;
+    host-backed backends get the split engine (host `lookup()` feeding the
+    jitted post-embedding remainder), the shape every backend's lookup
+    contract guarantees is bit-exact.
+  * **loop** — an `InferenceServer` drives prefetch staging and (async)
+    hot-set refresh purely through the `EmbeddingStorage` protocol, so any
+    async-capable backend reports `off_critical_frac`/cache stats with no
+    backend-specific serving code.
+  * **lifecycle** — warmup compiles the engine then `flush()` +
+    `reset_stats()` so synthetic traffic never pollutes the caches;
+    `close()` installs in-flight refresh plans and joins every worker.
+
+Typical use (see docs/serving.md for the operator guide):
+
+    model = DLRM(cfg)                       # cfg.embedding.storage="sharded"
+    params = model.init(rng)
+    model.ebc.storage.build(params, ps_cfg, trace=trace, num_shards=4)
+    with ServingSession(model, params,
+                        batcher=BatcherConfig(max_batch=64),
+                        refresh_every_batches=8,
+                        async_refresh=True) as sess:
+        sess.submit(query); ...; sess.poll(); ...
+        print(sess.percentiles())
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.server import BatcherConfig, InferenceServer, Query
+from repro.storage import require_capability
+
+
+class ServingSession:
+    """Owns batcher + engine + storage for one model; drives overlap
+    generically through the `EmbeddingStorage` protocol."""
+
+    def __init__(self, model, params: dict, *,
+                 batcher: Optional[BatcherConfig] = None,
+                 sla_ms: float = 50.0,
+                 refresh_every_batches: int = 0,
+                 async_refresh: bool = False,
+                 warmup: bool = True):
+        self.model = model
+        self.params = params
+        self.storage = model.ebc.storage
+        caps = self.storage.capabilities()
+        if (async_refresh or refresh_every_batches) and not caps.refreshable:
+            # fail fast instead of silently never re-pinning
+            require_capability(self.storage, "refreshable")
+        batcher = batcher if batcher is not None else BatcherConfig()
+        self._forward = self._build_engine(caps)
+        self.server = InferenceServer(
+            self._forward, batcher, sla_ms=sla_ms, storage=self.storage,
+            refresh_every_batches=refresh_every_batches,
+            async_refresh=async_refresh)
+        self._closed = False
+        if warmup:
+            self._warmup(batcher.max_batch)
+
+    # -- engine -------------------------------------------------------------
+    def _build_engine(self, caps):
+        """Pick the forward shape from the capability descriptor — the only
+        place residency is ever consulted."""
+        model, params = self.model, self.params
+        if caps.device_resident:
+            return jax.jit(lambda d, i: model.forward(params, d, i))
+        rest = jax.jit(lambda d, p: model.forward_from_pooled(params, d, p))
+
+        def forward(dense, idx):
+            pooled = model.ebc.apply(params, idx)   # host lookup
+            return rest(jnp.asarray(dense), pooled)  # jitted remainder
+        return forward
+
+    def _warmup(self, batch: int) -> None:
+        """Compile the engine on a zero batch, then drop the synthetic
+        traffic's footprint (warm-cache entries, refresh-window batch) and
+        its counters so measurements start clean."""
+        cfg = self.model.cfg
+        dense = np.zeros((batch, cfg.dense_features), np.float32)
+        idx = np.zeros((batch, cfg.embedding.num_tables,
+                        cfg.embedding.pooling), np.int32)
+        jax.block_until_ready(self._forward(dense, idx))
+        self.storage.flush()
+        self.storage.reset_stats()
+
+    # -- serving loop (delegation) ------------------------------------------
+    def submit(self, query: Query) -> None:
+        self.server.submit(query)
+
+    def submit_batch(self, dense: np.ndarray, indices: np.ndarray,
+                     qid0: int = 0) -> None:
+        """Convenience: enqueue one [B, ...] batch as B queries."""
+        for i in range(len(dense)):
+            self.server.submit(Query(qid=qid0 + i, dense=dense[i],
+                                     indices=indices[i]))
+
+    def poll(self, force: bool = False) -> int:
+        return self.server.poll(force=force)
+
+    def drain(self, timeout_s: float = 10.0) -> None:
+        self.server.drain(timeout_s=timeout_s)
+
+    # -- reporting ----------------------------------------------------------
+    @property
+    def stats(self):
+        return self.server.stats
+
+    def percentiles(self) -> dict:
+        """Latency percentiles + whatever cache/overlap counters the bound
+        backend reports (`off_critical_frac` et al. for any async-capable
+        backend) — no backend-specific keys wired here."""
+        return self.server.stats.percentiles()
+
+    def sla_violations(self) -> int:
+        return self.server.sla_violations()
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self) -> None:
+        """Install any in-flight refresh plan, stop the refresh helper,
+        then close the storage backend (prefetch workers, shard pools).
+        Idempotent."""
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self.server.close()
+        finally:
+            self.storage.close()
+
+    def __enter__(self) -> "ServingSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,31 @@
+"""Pluggable embedding-storage backends behind one protocol.
+
+Public surface:
+  `EmbeddingStorage`    — the backend protocol (lookup / stage / refresh /
+                          stats verbs + `StorageCapabilities` descriptor).
+  `register` / `available` / `resolve` / `create`
+                        — the string-keyed backend registry
+                          (`EmbeddingStageConfig.storage` resolves here).
+  `DeviceStorage`       — `"device"`: dense HBM-resident XLA/Pallas gather.
+  `TieredStorage`       — `"tiered"`: hot/warm/cold `repro.ps` server.
+  `ShardedStorage`      — `"sharded"`: table-wise partition of the tiered
+                          store across shard workers, merged stats.
+  `require_capability` / `CapabilityError`
+                        — fail fast on capability mismatch.
+
+See docs/architecture.md for the layer map and docs/serving.md for the
+operator guide + old→new API migration table.
+"""
+from repro.storage.base import (CapabilityError, EmbeddingStorage,
+                                StorageCapabilities, require_capability)
+from repro.storage.registry import (UnknownBackendError, available, create,
+                                    register, resolve, unregister)
+# importing the backend modules registers them
+from repro.storage.device import DeviceStorage
+from repro.storage.tiered import TieredStorage
+from repro.storage.sharded import ShardedStorage
+
+__all__ = ["CapabilityError", "EmbeddingStorage", "StorageCapabilities",
+           "require_capability", "UnknownBackendError", "available",
+           "create", "register", "resolve", "unregister", "DeviceStorage",
+           "TieredStorage", "ShardedStorage"]

@@ -1,0 +1,193 @@
+"""The `EmbeddingStorage` protocol — one pluggable surface for every way the
+embedding stage can back its tables.
+
+The paper's techniques (software prefetching §IV-B, L2 pinning + periodic
+re-pinning §IV-C) are plug-and-play *mechanisms*; this module is the plug.
+A backend owns table placement and exposes five verbs the rest of the stack
+programs against:
+
+  lookup(params, indices, weights)      — the data path: pooled embeddings,
+                                          bit-exact across backends.
+  stage(next_indices) / can_stage()     — prefetch: pre-resolve a FUTURE
+                                          batch's misses (overlap hook).
+  plan_refresh(window) / install_refresh(plan) / refresh()
+                                        — periodic re-pinning, split into a
+                                          pure planning phase (helper-thread
+                                          safe) and a mutating install.
+  stats() / reset_stats() / flush()     — counters and cache hygiene.
+  close()                               — release workers/buffers.
+
+`capabilities()` returns a static descriptor so generic drivers (the
+`ServingSession` facade, `InferenceServer`) can decide *which* verbs are
+worth calling — and so a caller who *requires* a capability can fail fast
+with `require_capability` instead of silently losing overlap.
+
+Backends register under a string key in `repro.storage.registry`;
+`EmbeddingStageConfig.storage` is a thin lookup into that registry.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, ClassVar, Optional
+
+import numpy as np
+
+
+class CapabilityError(RuntimeError):
+    """A caller required a capability the selected backend does not offer."""
+
+
+@dataclasses.dataclass(frozen=True)
+class StorageCapabilities:
+    """What a backend instance can do, as currently configured.
+
+    Instance-level on purpose: a tiered backend built with
+    `prefetch_depth=0` is not stageable even though the class could be.
+    """
+    # lookups trace under jit end-to-end (tables live in device buffers);
+    # False means the lookup is a host call and only pooling runs on device
+    device_resident: bool = False
+    # stage()/can_stage() do real prefetch work (staged future batches)
+    stageable: bool = False
+    # staged gathers resolve on a background worker (true compute overlap);
+    # implies stageable
+    async_prefetch: bool = False
+    # plan_refresh()/install_refresh() re-pin a hot set from live traffic
+    refreshable: bool = False
+    # storage is (or can be) partitioned across shard workers
+    shardable: bool = False
+
+    def describe(self) -> str:
+        on = [f.name for f in dataclasses.fields(self)
+              if getattr(self, f.name)]
+        return "+".join(on) if on else "none"
+
+
+def require_capability(storage: "EmbeddingStorage", *names: str) -> None:
+    """Fail fast when `storage` lacks any of `names` (capability fields).
+
+    Raises `CapabilityError` naming the backend, what it does offer, and
+    the standard remedy — the error every generic driver surfaces instead
+    of silently degrading (e.g. `async_prefetch` requested on `device`).
+    """
+    caps = storage.capabilities()
+    valid = {f.name for f in dataclasses.fields(caps)}
+    for name in names:
+        if name not in valid:
+            raise ValueError(f"unknown capability {name!r}; one of "
+                             f"{sorted(valid)}")
+        if not getattr(caps, name):
+            raise CapabilityError(
+                f"backend {storage.name!r} does not support {name!r} "
+                f"(offers: {caps.describe()}); pick an async-capable "
+                f"backend or reconfigure it (e.g. tiered/sharded with "
+                f"async_prefetch=True, prefetch_depth>0)")
+
+
+class EmbeddingStorage(abc.ABC):
+    """Abstract base for embedding-storage backends.
+
+    A backend binds to one `EmbeddingBagCollection` (`self.ebc`) whose
+    `EmbeddingStageConfig` (`self.cfg`) fixes the table geometry
+    [num_tables, rows, dim] and pooling. The collection keeps owning
+    parameter init and the hot-first index remap; the backend owns
+    placement, lookup, and the overlap/refresh machinery.
+
+    Contract highlights (the tests pin these down):
+      * `lookup()` is bit-exact with a dense `table[indices]` gather +
+        the shared pooling reduction, whatever the placement.
+      * Every mutating verb (`lookup`, `stage`, `install_refresh`,
+        `flush`) is called from ONE serving thread; internal concurrency
+        (prefetch workers, shard fan-out) never escapes the backend.
+      * The default implementations below are correct no-ops, so a
+        minimal backend only implements `capabilities()` and `lookup()`
+        and generic drivers still work.
+    """
+
+    #: registry key; set by `repro.storage.registry.register`
+    name: ClassVar[str] = "?"
+
+    def __init__(self, ebc):
+        self.ebc = ebc
+        self.cfg = None if ebc is None else ebc.cfg
+
+    # -- descriptor ---------------------------------------------------------
+    @abc.abstractmethod
+    def capabilities(self) -> StorageCapabilities:
+        ...
+
+    # -- construction -------------------------------------------------------
+    def build(self, params: dict, **kwargs) -> "EmbeddingStorage":
+        """Materialize backend state from initialized parameters.
+
+        Device-resident backends need nothing (params already ARE the
+        storage); host-tiered backends move tables into their hierarchy
+        here. Returns self for chaining."""
+        if kwargs:
+            raise TypeError(f"backend {self.name!r} takes no build "
+                            f"options, got {sorted(kwargs)}")
+        return self
+
+    # -- data path ----------------------------------------------------------
+    @abc.abstractmethod
+    def lookup(self, params: dict, indices, weights=None, *,
+               pre_remapped: bool = False):
+        """indices [B, T, L] -> pooled [B, T, D], bit-exact across backends."""
+        ...
+
+    # -- prefetch (overlap) hooks -------------------------------------------
+    def can_stage(self) -> bool:
+        """Backpressure probe; False also means 'staging unsupported'."""
+        return False
+
+    def stage(self, next_indices: np.ndarray) -> bool:
+        """Pre-resolve a FUTURE batch's misses. Correctness-neutral."""
+        return False
+
+    def hint_valid(self, n: int) -> None:
+        """Only the first `n` queries of the NEXT lookup are real traffic
+        (the rest is batcher padding). No-op for stats-free backends."""
+
+    # -- refresh (re-pinning) hooks -----------------------------------------
+    def refresh_window(self) -> Any:
+        """Snapshot of the traffic window `plan_refresh` plans from — taken
+        on the serving thread so the plan phase can run on a helper."""
+        return []
+
+    def plan_refresh(self, window: Any = None) -> Any:
+        """Phase 1: pure re-planning (helper-thread safe). None = nothing
+        to plan."""
+        return None
+
+    def install_refresh(self, plan: Any) -> dict:
+        """Phase 2: swap the plan in (serving thread only). Returns at
+        least {'replanned': bool}."""
+        return {"replanned": False, "refreshes": 0}
+
+    def refresh(self) -> dict:
+        """Synchronous re-pin: plan + install in one call."""
+        return self.install_refresh(self.plan_refresh(self.refresh_window()))
+
+    # -- stats & hygiene ----------------------------------------------------
+    def stats(self) -> dict:
+        return {}
+
+    def reset_stats(self) -> None:
+        pass
+
+    def flush(self) -> None:
+        """Drop cached/staged state after synthetic traffic (warmup)."""
+
+    def close(self) -> None:
+        """Release workers and buffers. Idempotent."""
+
+    def __enter__(self) -> "EmbeddingStorage":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __repr__(self) -> str:
+        return (f"<{type(self).__name__} name={self.name!r} "
+                f"caps={self.capabilities().describe()}>")

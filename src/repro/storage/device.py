@@ -1,0 +1,77 @@
+"""`device` backend — tables fully HBM-resident, dense XLA/Pallas gather.
+
+The seed behaviour (every table fits on device), re-homed behind the
+`EmbeddingStorage` protocol. `lookup()` is the jit-traceable dense path:
+hot-first remap, optional table-stack padding for whole-table sharding,
+then either a vmapped `jnp.take` (XLA baseline) or the Pallas
+prefetch-pipelined embedding-bag kernel, and the shared pooling reduction.
+
+No staging, no refresh: with everything resident there is nothing to
+overlap or re-pin at the storage level (the paper's in-kernel prefetch and
+VMEM pinning live inside the Pallas kernel itself, selected by
+`EmbeddingStageConfig.backend`/`pinned_rows`).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag import embedding_bag
+from repro.storage.base import EmbeddingStorage, StorageCapabilities
+from repro.storage.registry import register
+
+
+@register("device")
+class DeviceStorage(EmbeddingStorage):
+    """Dense device-resident storage: params ARE the storage."""
+
+    def capabilities(self) -> StorageCapabilities:
+        return StorageCapabilities(device_resident=True)
+
+    def lookup(self, params: dict, indices, weights=None, *,
+               pre_remapped: bool = False):
+        """indices: [B, T, L] int32 -> pooled [B, T, D] (jit-traceable)."""
+        from repro.core.embedding import _pool_rows_core
+        cfg = self.cfg
+        if not pre_remapped:
+            indices = self.ebc.remap_indices(indices)
+        tables = params["tables"]                      # [T(+pad), R, D]
+        idx_t = jnp.swapaxes(indices, 0, 1)            # [T, B, L]
+        w_t = None if weights is None else jnp.swapaxes(weights, 0, 1)
+        if cfg.shard_pad_tables:
+            pad = jnp.zeros((cfg.shard_pad_tables, *idx_t.shape[1:]),
+                            idx_t.dtype)
+            idx_t = jnp.concatenate([idx_t, pad], axis=0)
+            if w_t is not None:
+                w_t = jnp.concatenate(
+                    [w_t, jnp.zeros((cfg.shard_pad_tables, *w_t.shape[1:]),
+                                    w_t.dtype)], axis=0)
+
+        # Pin the table-parallel layout end to end: indices reshard to the
+        # table owners (small a2a), gathers stay local, only POOLED outputs
+        # travel back (EXPERIMENTS.md SPerf C1). Lazy import: models.dlrm
+        # imports core.embedding (avoid the package-level cycle).
+        from repro.models import pspec
+        idx_t = pspec.constrain_tablewise(idx_t)
+        if w_t is not None:
+            w_t = pspec.constrain_tablewise(w_t)
+        if cfg.backend == "xla" or (cfg.backend == "auto"
+                                    and jax.default_backend() != "tpu"):
+            rows = jax.vmap(
+                lambda t, i: jnp.take(t, i, axis=0))(tables, idx_t)  # [T,B,L,D]
+            pooled = _pool_rows_core(rows, w_t, cfg.combine, cfg.pooling)
+        else:
+            opts = cfg.kernel_opts(interpret=jax.default_backend() != "tpu")
+
+            def one(table, idx, w):
+                return embedding_bag(table, idx, w, mode=cfg.combine,
+                                     backend="pallas", opts=opts)
+            if w_t is None:
+                pooled = jax.vmap(lambda t, i: one(t, i, None))(tables, idx_t)
+            else:
+                pooled = jax.vmap(one)(tables, idx_t, w_t)
+        pooled = pspec.constrain_tablewise(pooled)     # [T(+pad), B, D]
+        pooled = jnp.swapaxes(pooled, 0, 1)            # [B, T(+pad), D]
+        if cfg.shard_pad_tables:
+            pooled = pooled[:, :cfg.num_tables]
+        return pooled

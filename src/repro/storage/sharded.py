@@ -1,0 +1,252 @@
+"""`sharded` backend — table-wise partitioning of the tiered store.
+
+The next scaling axis after PR 1–2's single tiered parameter server
+(Gupta et al.: table-wise sharding is how production DLRM fleets spread
+embedding capacity; the ROADMAP's "multi-host sharded cold tier" item).
+The table stack [T, R, D] splits into `num_shards` contiguous groups;
+each shard owns a full `repro.ps.ParameterServer` over its tables — its
+own hot block, its own warm caches, its own prefetch queue (and, with
+`async_prefetch=True`, its own gather worker thread).
+
+Single-process multi-shard for now: `lookup()`/`stage()` fan out over a
+shard thread pool and join before returning, so each shard's PS still
+sees the strictly serialized call pattern its threading model requires
+(one outstanding call per shard; shards touch disjoint tables). The
+protocol surface is shard-count-agnostic — a later multi-host version
+replaces the pool with RPC stubs without changing any caller.
+
+Bit-exactness: every shard serves byte-identical copies of its table
+slice, and concatenating per-shard row blocks along the table axis
+reconstructs exactly the array a single tiered server would have
+produced, so the shared pooling reduction yields bit-identical output.
+
+Stats: per-shard counters merge into ONE report — counter keys sum,
+rates are recomputed from the sums, `max_queue_depth` is the per-shard
+peak, and the unmerged snapshots ride along under `"per_shard"`.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.storage.base import EmbeddingStorage, StorageCapabilities
+from repro.storage.registry import register
+from repro.storage.tiered import (_extract_tables, _reject_double_remap,
+                                  build_ps_config)
+
+# merged by summation; rates are recomputed from the summed numerators
+_SUM_KEYS = ("total_accesses", "hot_hits", "warm_hits", "cold_misses",
+             "evictions", "insertions", "warm_occupancy",
+             "cold_gathered_rows", "staged_rows", "prefetch_hits",
+             "prefetch_misses", "queue_depth", "off_critical_rows",
+             "consume_ready", "consume_waited", "consume_wait_s")
+# merged by maximum (per-shard peaks / lockstep counters)
+_MAX_KEYS = ("max_queue_depth", "refreshes")
+
+
+def merge_shard_stats(per_shard: list[dict]) -> dict:
+    """Fold per-shard counter snapshots into one report.
+
+    Invariant preserved: summed `hot_hits + warm_hits + cold_misses ==
+    total_accesses` (it holds per shard, and all three are sums).
+    """
+    out: dict = {"num_shards": len(per_shard)}
+    for k in _SUM_KEYS:
+        if any(k in s for s in per_shard):
+            out[k] = sum(s.get(k, 0) for s in per_shard)
+    for k in _MAX_KEYS:
+        if any(k in s for s in per_shard):
+            out[k] = max(s.get(k, 0) for s in per_shard)
+    total = out.get("total_accesses", 0)
+    out["hot_hit_rate"] = out.get("hot_hits", 0) / total if total else 0.0
+    out["warm_hit_rate"] = out.get("warm_hits", 0) / total if total else 0.0
+    out["cold_miss_rate"] = (out.get("cold_misses", 0) / total
+                             if total else 0.0)
+    out["cache_hit_rate"] = ((out.get("hot_hits", 0)
+                              + out.get("warm_hits", 0)) / total
+                             if total else 0.0)
+    resolved = out.get("prefetch_hits", 0) + out.get("prefetch_misses", 0)
+    out["off_critical_frac"] = (out.get("off_critical_rows", 0) / resolved
+                                if resolved else 0.0)
+    consumed = out.get("consume_ready", 0) + out.get("consume_waited", 0)
+    if consumed or any("consume_ready" in s for s in per_shard):
+        out["consume_overlap_frac"] = (out.get("consume_ready", 0) / consumed
+                                       if consumed else 0.0)
+    out["per_shard"] = per_shard
+    return out
+
+
+@register("sharded")
+class ShardedStorage(EmbeddingStorage):
+    """Table-sharded tiered storage: N parameter servers, one report."""
+
+    def __init__(self, ebc):
+        super().__init__(ebc)
+        _reject_double_remap(self.cfg, "sharded")
+        self.shards: list = []            # one ParameterServer per shard
+        self.table_slices: list[slice] = []
+        self._pool: Optional[concurrent.futures.ThreadPoolExecutor] = None
+
+    # -- descriptor ---------------------------------------------------------
+    def capabilities(self) -> StorageCapabilities:
+        # mirrors TieredStorage: closed async workers cannot stage again,
+        # so staging capabilities drop after close()
+        stageable = bool(self.shards) and all(
+            ps.cfg.prefetch_depth > 0
+            and not getattr(ps.prefetch, "closed", False)
+            for ps in self.shards)
+        return StorageCapabilities(
+            device_resident=False,
+            stageable=stageable,
+            async_prefetch=stageable and all(
+                ps.cfg.async_prefetch for ps in self.shards),
+            refreshable=True,
+            shardable=True)
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    # -- construction -------------------------------------------------------
+    def build(self, params: dict, ps_cfg=None,
+              trace: Optional[np.ndarray] = None, *,
+              num_shards: int = 2,
+              device_budget_bytes: Optional[int] = None,
+              parallel: bool = True,
+              **ps_cfg_overrides) -> "ShardedStorage":
+        """Split the table stack into `num_shards` contiguous groups and
+        build one ParameterServer per group (same `PSConfig` for all —
+        capacities are per-table, so the config is shard-size-agnostic).
+
+        `trace` [N, T, L] is sliced per shard for hot-set planning; the
+        auto-tune path (`device_budget_bytes`) plans ONCE on the full
+        trace, exactly as the single tiered backend would. `parallel=False`
+        disables the shard thread pool (serial fan-out; deterministic
+        debugging)."""
+        from repro.ps import ParameterServer
+        cfg = self.cfg
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        num_shards = min(num_shards, cfg.num_tables)
+        ps_cfg = build_ps_config(trace, cfg.rows, cfg.dim,
+                                 cfg.jnp_dtype.itemsize, ps_cfg,
+                                 device_budget_bytes, **ps_cfg_overrides)
+        tables = _extract_tables(params, cfg.num_tables)
+        self.close()                     # rebuilding: drop old workers
+        bounds = np.linspace(0, cfg.num_tables, num_shards + 1).astype(int)
+        self.table_slices = [slice(int(lo), int(hi))
+                             for lo, hi in zip(bounds[:-1], bounds[1:])]
+        self.shards = [
+            ParameterServer(tables[sl], ps_cfg,
+                            trace=None if trace is None else trace[:, sl])
+            for sl in self.table_slices]
+        if parallel and num_shards > 1:
+            self._pool = concurrent.futures.ThreadPoolExecutor(
+                max_workers=num_shards, thread_name_prefix="ps-shard")
+        return self
+
+    def _require_built(self) -> None:
+        if not self.shards:
+            raise RuntimeError(
+                "storage='sharded' needs its shard servers: call "
+                "ebc.storage.build(params, ps_cfg, num_shards=N) first")
+
+    def _map_shards(self, fn, *per_shard_args) -> list:
+        """Apply fn(shard_index, ...) across shards — via the pool when one
+        exists — and join in shard order. One in-flight call per shard, so
+        each PS keeps its single-caller contract."""
+        if self._pool is None:
+            return [fn(i, *(a[i] for a in per_shard_args))
+                    for i in range(self.num_shards)]
+        futs = [self._pool.submit(fn, i, *(a[i] for a in per_shard_args))
+                for i in range(self.num_shards)]
+        return [f.result() for f in futs]
+
+    # -- data path ----------------------------------------------------------
+    def lookup(self, params: dict, indices, weights=None, *,
+               pre_remapped: bool = False):
+        """Fan the [B, T, L] lookup out by table slice, join, concatenate
+        along the table axis, pool on device — bit-identical to the
+        single-server tiered path."""
+        from repro.core.embedding import _pool_rows_core
+        self._require_built()
+        idx = np.asarray(indices)
+        parts = self._map_shards(
+            lambda i, sl: self.shards[i].lookup(idx[:, sl]),
+            self.table_slices)
+        rows = np.concatenate(parts, axis=1)            # [B, T, L, D]
+        rows_t = jnp.swapaxes(jnp.asarray(rows), 0, 1)  # [T, B, L, D]
+        w_t = (None if weights is None
+               else jnp.swapaxes(jnp.asarray(weights), 0, 1))
+        # eager on purpose — same 1-ULP rationale as the tiered backend
+        pooled = _pool_rows_core(rows_t, w_t, self.cfg.combine,
+                                 self.cfg.pooling)
+        return jnp.swapaxes(pooled, 0, 1)               # [B, T, D]
+
+    # -- prefetch -----------------------------------------------------------
+    def can_stage(self) -> bool:
+        """All-shards backpressure: staging only fires when every shard has
+        a free queue slot, keeping the shard queues in lockstep (a staged
+        batch is either resident on all shards or on none)."""
+        return bool(self.shards) and all(ps.can_stage()
+                                         for ps in self.shards)
+
+    def stage(self, next_indices: np.ndarray) -> bool:
+        self._require_built()
+        idx = np.asarray(next_indices)
+        oks = self._map_shards(
+            lambda i, sl: self.shards[i].stage(idx[:, sl]),
+            self.table_slices)
+        return all(oks)
+
+    def hint_valid(self, n: int) -> None:
+        for ps in self.shards:
+            ps.hint_valid(n)
+
+    # -- refresh ------------------------------------------------------------
+    def refresh_window(self) -> list:
+        """Per-shard window snapshots (taken on the serving thread)."""
+        return [list(ps.window) for ps in self.shards]
+
+    def plan_refresh(self, window=None):
+        """Pure per-shard planning; helper-thread safe (each shard's
+        `plan_refresh` only reads the snapshot it is handed)."""
+        self._require_built()
+        if window is None:
+            window = self.refresh_window()
+        plans = [ps.plan_refresh(w) for ps, w in zip(self.shards, window)]
+        return None if all(p is None for p in plans) else plans
+
+    def install_refresh(self, plan) -> dict:
+        self._require_built()
+        if plan is None:
+            plan = [None] * self.num_shards
+        results = [ps.install_refresh(p)
+                   for ps, p in zip(self.shards, plan)]
+        return {"replanned": any(r["replanned"] for r in results),
+                "refreshes": max(r["refreshes"] for r in results)}
+
+    def refresh(self) -> dict:
+        return self.install_refresh(self.plan_refresh())
+
+    # -- stats & hygiene ----------------------------------------------------
+    def stats(self) -> dict:
+        return merge_shard_stats([ps.stats() for ps in self.shards])
+
+    def reset_stats(self) -> None:
+        for ps in self.shards:
+            ps.reset_stats()
+
+    def flush(self) -> None:
+        for ps in self.shards:
+            ps.flush()
+
+    def close(self) -> None:
+        for ps in self.shards:
+            ps.close()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None

@@ -1,0 +1,180 @@
+"""`tiered` backend — the hot/warm/cold parameter server behind the protocol.
+
+Wraps `repro.ps.ParameterServer` (hot L2-pin analogue, LFU/LRU warm cache,
+host cold tier with sync/async prefetch staging — see docs/architecture.md)
+and maps its surface one-to-one onto the `EmbeddingStorage` verbs, so the
+generic serving drivers get prefetch overlap and periodic re-pinning with
+no PS-specific code.
+
+`build()` carries the construction logic that used to live on
+`EmbeddingBagCollection.build_parameter_server`: either an explicit
+`PSConfig`, or trace-driven tier auto-tuning under a device byte budget
+(`core.plan.plan_tier_capacities` -> `PSConfig.from_plan`).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.storage.base import EmbeddingStorage, StorageCapabilities
+from repro.storage.registry import register
+
+
+def _reject_double_remap(cfg, name: str) -> None:
+    """Shared tiered/sharded guard: the parameter server owns the hot-first
+    permutation (its hot tier); a second EBC-level remap would double-remap
+    indices."""
+    if cfg is not None and cfg.pinned_rows > 0:
+        raise ValueError(f"storage={name!r} manages hot rows in the "
+                         f"parameter server; set pinned_rows=0 and size "
+                         f"the hot tier via PSConfig.hot_rows")
+
+
+def _extract_tables(params: dict, num_tables: int) -> np.ndarray:
+    """Accept full-DLRM or embedding-only param trees."""
+    if "tables" not in params and "embedding" in params:
+        params = params["embedding"]
+    return np.asarray(params["tables"])[:num_tables]
+
+
+def build_ps_config(trace, rows: int, dim: int, itemsize: int,
+                    ps_cfg=None, device_budget_bytes: Optional[int] = None,
+                    **overrides):
+    """Resolve an explicit `PSConfig` vs the budget-driven auto-tune path.
+
+    Exactly one of the two modes applies; mixing them raises so an explicit
+    config can never silently win over budget/override arguments."""
+    from repro.ps import PSConfig  # lazy: ps imports core
+    if ps_cfg is None:
+        if device_budget_bytes is None or trace is None:
+            raise ValueError(
+                "auto-tuned tiers need both trace= and "
+                "device_budget_bytes= (or pass an explicit ps_cfg)")
+        from repro.core.plan import plan_tier_capacities
+        tier_plan = plan_tier_capacities(trace, rows, dim,
+                                         device_budget_bytes,
+                                         itemsize=itemsize)
+        return PSConfig.from_plan(tier_plan, **overrides)
+    if overrides or device_budget_bytes is not None:
+        raise ValueError("device_budget_bytes and PSConfig overrides "
+                         "only apply when ps_cfg is None (auto-tuning "
+                         "path) — the explicit config would silently "
+                         "win otherwise")
+    return ps_cfg
+
+
+@register("tiered")
+class TieredStorage(EmbeddingStorage):
+    """Three-tier beyond-HBM storage; `lookup()` bit-exact with dense."""
+
+    def __init__(self, ebc, ps=None):
+        super().__init__(ebc)
+        _reject_double_remap(self.cfg, "tiered")
+        self.ps = ps                   # repro.ps.ParameterServer
+
+    @classmethod
+    def adopt(cls, ps) -> "TieredStorage":
+        """Wrap an already-built `ParameterServer` (no collection bound) so
+        legacy callers holding a raw PS can talk to protocol-driven code
+        (`InferenceServer(ps=...)` shim). `lookup()` through the collection
+        is unavailable on an adopted instance; the serving verbs all work."""
+        return cls(None, ps=ps)
+
+    # -- descriptor ---------------------------------------------------------
+    def capabilities(self) -> StorageCapabilities:
+        # a closed async prefetcher cannot stage again (its worker is
+        # joined), so staging capabilities drop after close() — sync
+        # lookups remain usable, matching ParameterServer.close() semantics
+        stageable = (self.ps is not None
+                     and self.ps.cfg.prefetch_depth > 0
+                     and not getattr(self.ps.prefetch, "closed", False))
+        return StorageCapabilities(
+            device_resident=False,
+            stageable=stageable,
+            async_prefetch=stageable and self.ps.cfg.async_prefetch,
+            refreshable=True,
+            shardable=False)
+
+    # -- construction -------------------------------------------------------
+    def build(self, params: dict, ps_cfg=None,
+              trace: Optional[np.ndarray] = None, *,
+              device_budget_bytes: Optional[int] = None,
+              **ps_cfg_overrides) -> "TieredStorage":
+        """Move initialized tables into a tiered ParameterServer.
+
+        `params["tables"]` becomes the host cold tier (authoritative copy);
+        the hot tier is planned from `trace` when given. Pass an explicit
+        `ps_cfg`, or leave it None with `device_budget_bytes` set to
+        auto-tune tier capacities from the trace's coverage curve
+        (`ps_cfg_overrides` then forward to `PSConfig.from_plan`, e.g.
+        `async_prefetch=True`, `warm_backing="device"`)."""
+        from repro.ps import ParameterServer
+        cfg = self.cfg
+        ps_cfg = build_ps_config(trace, cfg.rows, cfg.dim,
+                                 cfg.jnp_dtype.itemsize, ps_cfg,
+                                 device_budget_bytes, **ps_cfg_overrides)
+        tables = _extract_tables(params, cfg.num_tables)
+        self.ps = ParameterServer(tables, ps_cfg, trace=trace)
+        return self
+
+    # -- data path ----------------------------------------------------------
+    def lookup(self, params: dict, indices, weights=None, *,
+               pre_remapped: bool = False):
+        """Tiered path: rows come from the parameter server (host call —
+        run OUTSIDE jit), pooling runs on device via the same reduction as
+        the dense branch, so outputs are bit-identical."""
+        from repro.core.embedding import _pool_rows_core
+        if self.ps is None:
+            raise RuntimeError(
+                f"storage={self.name!r} needs a ParameterServer: call "
+                f"ebc.storage.build(params, ps_cfg) (or the deprecated "
+                f"build_parameter_server shim) first")
+        rows = self.ps.lookup(np.asarray(indices))      # [B, T, L, D]
+        rows_t = jnp.swapaxes(jnp.asarray(rows), 0, 1)  # [T, B, L, D]
+        w_t = (None if weights is None
+               else jnp.swapaxes(jnp.asarray(weights), 0, 1))
+        # eager on purpose: op-by-op execution matches the dense path's
+        # eager reduction bit-for-bit (a jitted wrapper re-fuses mul+sum
+        # and drifts by 1 ULP)
+        pooled = _pool_rows_core(rows_t, w_t, self.cfg.combine,
+                                 self.cfg.pooling)
+        return jnp.swapaxes(pooled, 0, 1)               # [B, T, D]
+
+    # -- protocol delegation ------------------------------------------------
+    def can_stage(self) -> bool:
+        return self.ps is not None and self.ps.can_stage()
+
+    def stage(self, next_indices: np.ndarray) -> bool:
+        return self.ps.stage(next_indices)
+
+    def hint_valid(self, n: int) -> None:
+        self.ps.hint_valid(n)
+
+    def refresh_window(self):
+        return [] if self.ps is None else list(self.ps.window)
+
+    def plan_refresh(self, window=None):
+        return self.ps.plan_refresh(window)
+
+    def install_refresh(self, plan) -> dict:
+        return self.ps.install_refresh(plan)
+
+    def refresh(self) -> dict:
+        return self.ps.refresh()
+
+    def stats(self) -> dict:
+        return {} if self.ps is None else self.ps.stats()
+
+    def reset_stats(self) -> None:
+        if self.ps is not None:
+            self.ps.reset_stats()
+
+    def flush(self) -> None:
+        if self.ps is not None:
+            self.ps.flush()
+
+    def close(self) -> None:
+        if self.ps is not None:
+            self.ps.close()

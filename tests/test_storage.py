@@ -1,0 +1,445 @@
+"""EmbeddingStorage protocol, registry, backends, ServingSession facade.
+
+Covers the PR-3 acceptance contract: all three registered backends
+(`device`, `tiered`, `sharded`) are bit-exact against the dense gather
+reference on the same trace; registry misuse (unknown name, double
+registration, capability mismatch) raises clear errors; the sharded
+backend merges per-shard stats into one report that preserves the counter
+invariant; `ServingSession` reports `off_critical_frac`/cache stats for
+any async-capable backend with no backend-specific serving code; and the
+PR 1–2 surfaces (`build_parameter_server`, `InferenceServer(ps=...)`)
+keep working behind a single DeprecationWarning.
+"""
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import storage as storage_pkg
+from repro.core import (EmbeddingBagCollection, EmbeddingStageConfig,
+                        make_pattern)
+from repro.data import DLRMQueryStream
+from repro.models.dlrm import DLRM, DLRMConfig
+from repro.ps import ParameterServer, PSConfig
+from repro.serving import (BatcherConfig, InferenceServer, Query,
+                           ServingSession)
+from repro.storage import (CapabilityError, DeviceStorage, EmbeddingStorage,
+                           ShardedStorage, StorageCapabilities,
+                           TieredStorage, UnknownBackendError,
+                           require_capability)
+from repro.storage.sharded import merge_shard_stats
+
+ROWS, TABLES, DIM, POOL = 256, 4, 32, 6
+
+
+def _pats(hotness="med_hot"):
+    return [make_pattern(hotness, ROWS, seed=t) for t in range(TABLES)]
+
+
+def _batch(pats, batch, seed):
+    return np.stack([p.sample(batch, POOL, seed=seed * 100 + t)
+                     for t, p in enumerate(pats)], axis=1).astype(np.int32)
+
+
+def _stage_cfg(storage="device", **kw):
+    return EmbeddingStageConfig(num_tables=TABLES, rows=ROWS, dim=DIM,
+                                pooling=POOL, backend="xla",
+                                storage=storage, **kw)
+
+
+@pytest.fixture(scope="module")
+def dense_ref():
+    """Dense-gather reference collection + params (the bit-exact oracle)."""
+    ebc = EmbeddingBagCollection(_stage_cfg("device"))
+    params = ebc.init(jax.random.PRNGKey(0))
+    return ebc, params
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_in_tree_backends():
+    names = storage_pkg.available()
+    assert {"device", "tiered", "sharded"} <= set(names)
+    assert storage_pkg.resolve("sharded") is ShardedStorage
+
+
+def test_unknown_backend_name_raises_with_available_list():
+    with pytest.raises(UnknownBackendError, match="floppy"):
+        storage_pkg.resolve("floppy")
+    # surfaced through the collection constructor too, listing what exists
+    with pytest.raises(ValueError, match="available.*device"):
+        EmbeddingBagCollection(_stage_cfg("floppy"))
+
+
+def test_double_registration_raises():
+    with pytest.raises(ValueError, match="already registered"):
+        @storage_pkg.register("device")
+        class Impostor(DeviceStorage):
+            pass
+    # the original registration is untouched
+    assert storage_pkg.resolve("device") is DeviceStorage
+
+
+def test_out_of_tree_backend_registers_and_resolves():
+    @storage_pkg.register("null_probe")
+    class NullStorage(EmbeddingStorage):
+        def capabilities(self):
+            return StorageCapabilities()
+
+        def lookup(self, params, indices, weights=None, *,
+                   pre_remapped=False):
+            b, t, _ = np.asarray(indices).shape
+            return jnp.zeros((b, t, self.cfg.dim), self.cfg.jnp_dtype)
+
+    try:
+        ebc = EmbeddingBagCollection(_stage_cfg("null_probe"))
+        assert ebc.storage.name == "null_probe"
+        out = ebc.apply({}, jnp.zeros((2, TABLES, POOL), jnp.int32))
+        assert out.shape == (2, TABLES, DIM)
+        # protocol defaults: a minimal backend still satisfies the drivers
+        assert ebc.storage.can_stage() is False
+        assert ebc.storage.stage(np.zeros((1, TABLES, POOL))) is False
+        assert ebc.storage.refresh() == {"replanned": False, "refreshes": 0}
+        assert ebc.storage.stats() == {}
+    finally:
+        storage_pkg.unregister("null_probe")
+    with pytest.raises(UnknownBackendError):
+        storage_pkg.resolve("null_probe")
+
+
+def test_capability_mismatch_raises_clear_error(dense_ref):
+    ebc, _ = dense_ref
+    with pytest.raises(CapabilityError, match="device.*async_prefetch"):
+        require_capability(ebc.storage, "async_prefetch")
+    with pytest.raises(ValueError, match="unknown capability"):
+        require_capability(ebc.storage, "time_travel")
+    # tiered built WITHOUT async prefetch: stageable but not async-capable
+    tb = EmbeddingBagCollection(_stage_cfg("tiered"))
+    tb.storage.build({"tables": np.zeros((TABLES, ROWS, DIM), np.float32)},
+                     PSConfig(hot_rows=8, warm_slots=8))
+    assert tb.storage.capabilities().stageable
+    with pytest.raises(CapabilityError, match="async_prefetch"):
+        require_capability(tb.storage, "async_prefetch")
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness: every backend vs the dense gather reference, same trace
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend,build_kw", [
+    ("device", None),
+    ("tiered", {}),
+    ("sharded", {"num_shards": 2}),
+    ("sharded", {"num_shards": 3}),     # uneven 4-table split: [2, 1, 1]
+])
+def test_backends_bit_exact_vs_dense(dense_ref, backend, build_kw):
+    ebc0, params = dense_ref
+    pats = _pats()
+    trace = _batch(pats, 8, seed=99)
+    ebc = EmbeddingBagCollection(_stage_cfg(backend))
+    if build_kw is not None:
+        ebc.storage.build(params,
+                          PSConfig(hot_rows=32, warm_slots=32,
+                                   async_prefetch=True, window_batches=4),
+                          trace=trace, **build_kw)
+    with ebc.storage:
+        for seed in range(5):
+            idx = _batch(pats, 8, seed=seed)
+            if seed == 1:       # staged payloads must not change values
+                ebc.storage.stage(_batch(pats, 8, seed=2))
+            if seed == 3:       # neither must a mid-stream re-pin
+                ebc.storage.refresh()
+            got = np.asarray(ebc.apply(params, jnp.asarray(idx)))
+            want = np.asarray(ebc0.apply(params, jnp.asarray(idx)))
+            assert np.array_equal(got, want), (backend, seed)
+
+
+def test_sharded_weighted_mean_bit_exact(dense_ref):
+    _, params = dense_ref
+    ebc0 = EmbeddingBagCollection(_stage_cfg("device", combine="mean"))
+    ebc = EmbeddingBagCollection(_stage_cfg("sharded", combine="mean"))
+    ebc.storage.build(params, PSConfig(hot_rows=16, warm_slots=16),
+                      num_shards=2)
+    idx = _batch(_pats(), 8, seed=0)
+    w = np.random.default_rng(3).random((8, TABLES, POOL)).astype(np.float32)
+    got = np.asarray(ebc.apply(params, jnp.asarray(idx), jnp.asarray(w)))
+    want = np.asarray(ebc0.apply(params, jnp.asarray(idx), jnp.asarray(w)))
+    assert np.array_equal(got, want)
+    ebc.storage.close()
+
+
+# ---------------------------------------------------------------------------
+# sharded backend: partitioning, merged stats, capabilities
+# ---------------------------------------------------------------------------
+
+def test_sharded_partitions_cover_all_tables(dense_ref):
+    _, params = dense_ref
+    ebc = EmbeddingBagCollection(_stage_cfg("sharded"))
+    ebc.storage.build(params, PSConfig(hot_rows=8, warm_slots=8),
+                      num_shards=3)
+    sls = ebc.storage.table_slices
+    assert sls[0].start == 0 and sls[-1].stop == TABLES
+    assert all(a.stop == b.start for a, b in zip(sls, sls[1:]))
+    # shard count clamps to the table count
+    ebc2 = EmbeddingBagCollection(_stage_cfg("sharded"))
+    ebc2.storage.build(params, PSConfig(hot_rows=8), num_shards=64)
+    assert ebc2.storage.num_shards == TABLES
+    with pytest.raises(ValueError, match="num_shards"):
+        ebc2.storage.build(params, PSConfig(hot_rows=8), num_shards=0)
+    ebc.storage.close()
+    ebc2.storage.close()
+
+
+def test_sharded_merged_stats_preserve_invariant(dense_ref):
+    _, params = dense_ref
+    pats = _pats()
+    ebc = EmbeddingBagCollection(_stage_cfg("sharded"))
+    ebc.storage.build(params,
+                      PSConfig(hot_rows=16, warm_slots=16,
+                               window_batches=4),
+                      trace=_batch(pats, 8, seed=99), num_shards=2)
+    for seed in range(4):
+        ebc.storage.stage(_batch(pats, 8, seed=seed + 1))
+        ebc.apply(params, jnp.asarray(_batch(pats, 8, seed=seed)))
+    st = ebc.storage.stats()
+    assert st["num_shards"] == 2
+    assert st["total_accesses"] == 4 * 8 * TABLES * POOL
+    assert (st["hot_hits"] + st["warm_hits"] + st["cold_misses"]
+            == st["total_accesses"])
+    assert 0.0 <= st["cache_hit_rate"] <= 1.0
+    assert len(st["per_shard"]) == 2
+    # merged counters really are the per-shard sums
+    for key in ("total_accesses", "hot_hits", "prefetch_hits"):
+        assert st[key] == sum(s[key] for s in st["per_shard"])
+    # sharded refresh re-plans every shard in lockstep
+    assert ebc.storage.refresh()["replanned"]
+    assert all(ps.refreshes == 1 for ps in ebc.storage.shards)
+    assert ebc.storage.stats()["refreshes"] == 1
+    ebc.storage.close()
+
+
+def test_merge_shard_stats_unit():
+    a = {"total_accesses": 10, "hot_hits": 4, "warm_hits": 2,
+         "cold_misses": 4, "prefetch_hits": 3, "prefetch_misses": 1,
+         "off_critical_rows": 3, "max_queue_depth": 2, "refreshes": 1}
+    b = {"total_accesses": 10, "hot_hits": 8, "warm_hits": 0,
+         "cold_misses": 2, "prefetch_hits": 1, "prefetch_misses": 1,
+         "off_critical_rows": 0, "max_queue_depth": 1, "refreshes": 1}
+    m = merge_shard_stats([a, b])
+    assert m["num_shards"] == 2
+    assert m["total_accesses"] == 20 and m["hot_hits"] == 12
+    assert m["cache_hit_rate"] == pytest.approx(14 / 20)
+    assert m["off_critical_frac"] == pytest.approx(3 / 6)
+    assert m["max_queue_depth"] == 2 and m["refreshes"] == 1
+
+
+def test_sharded_serial_fanout_matches_parallel(dense_ref):
+    """parallel=False (no shard pool) is an observable no-op."""
+    _, params = dense_ref
+    pats = _pats()
+    outs = {}
+    for parallel in (True, False):
+        ebc = EmbeddingBagCollection(_stage_cfg("sharded"))
+        ebc.storage.build(params, PSConfig(hot_rows=16, warm_slots=16),
+                          num_shards=2, parallel=parallel)
+        assert (ebc.storage._pool is not None) == parallel
+        outs[parallel] = np.asarray(
+            ebc.apply(params, jnp.asarray(_batch(pats, 8, seed=0))))
+        ebc.storage.close()
+    assert np.array_equal(outs[True], outs[False])
+
+
+@pytest.mark.parametrize("backend,build_kw", [
+    ("tiered", {}), ("sharded", {"num_shards": 2})])
+def test_staging_capabilities_drop_after_close(dense_ref, backend, build_kw):
+    """A closed backend must not advertise staging it can no longer do
+    (its async workers are joined); refresh/lookup capability semantics
+    follow ParameterServer.close()."""
+    _, params = dense_ref
+    ebc = EmbeddingBagCollection(_stage_cfg(backend))
+    ebc.storage.build(params, PSConfig(hot_rows=8, warm_slots=8,
+                                       async_prefetch=True), **build_kw)
+    assert ebc.storage.capabilities().async_prefetch
+    ebc.storage.close()
+    caps = ebc.storage.capabilities()
+    assert not caps.stageable and not caps.async_prefetch
+    assert ebc.storage.can_stage() is False
+
+
+def test_sharded_requires_build_and_rejects_double_remap():
+    ebc = EmbeddingBagCollection(_stage_cfg("sharded"))
+    with pytest.raises(RuntimeError, match="build"):
+        ebc.apply({}, jnp.zeros((2, TABLES, POOL), jnp.int32))
+    with pytest.raises(ValueError, match="pinned_rows"):
+        EmbeddingBagCollection(_stage_cfg("sharded", pinned_rows=8))
+
+
+# ---------------------------------------------------------------------------
+# ServingSession: generic overlap reporting, no backend-specific code
+# ---------------------------------------------------------------------------
+
+def _session_model(storage):
+    emb = _stage_cfg(storage)
+    model = DLRM(DLRMConfig(embedding=emb, bottom_mlp=(64, DIM),
+                            top_mlp=(32, 1)))
+    params = model.init(jax.random.PRNGKey(0))
+    stream = DLRMQueryStream(num_tables=TABLES, rows=ROWS, pooling=POOL,
+                             batch_size=8, hotness="med_hot", seed=1)
+    return model, params, stream
+
+
+@pytest.mark.parametrize("backend,build_kw", [
+    ("tiered", {}),
+    ("sharded", {"num_shards": 2}),
+])
+def test_session_reports_overlap_stats_for_async_backends(backend, build_kw):
+    model, params, stream = _session_model(backend)
+    model.ebc.storage.build(
+        params, PSConfig(hot_rows=32, warm_slots=32, window_batches=4,
+                         async_prefetch=True),
+        trace=stream.sample_trace(2), **build_kw)
+    with ServingSession(model, params,
+                        batcher=BatcherConfig(max_batch=8, max_wait_s=0.0),
+                        sla_ms=1e6, refresh_every_batches=2,
+                        async_refresh=True) as sess:
+        for b in range(6):
+            batch = stream.next_batch()
+            sess.submit_batch(batch.dense, batch.indices, qid0=b * 8)
+            if b >= 1:
+                sess.poll()
+        sess.drain()
+        pct = sess.percentiles()
+    assert pct["served"] == 48
+    assert pct["refreshes"] >= 1
+    # the acceptance contract: overlap + cache stats surface through the
+    # generic loop for ANY async-capable backend
+    for key in ("off_critical_frac", "cache_hit_rate", "hot_hit_rate",
+                "max_queue_depth", "consume_overlap_frac"):
+        assert key in pct, (backend, key, sorted(pct))
+    assert pct["max_queue_depth"] >= 1       # staging actually queued
+
+
+def test_session_device_backend_serves_without_storage_keys():
+    model, params, stream = _session_model("device")
+    with ServingSession(model, params,
+                        batcher=BatcherConfig(max_batch=8, max_wait_s=0.0),
+                        sla_ms=1e6) as sess:
+        batch = stream.next_batch()
+        sess.submit_batch(batch.dense, batch.indices)
+        sess.drain()
+        pct = sess.percentiles()
+    assert pct["served"] == 8
+    assert "cache_hit_rate" not in pct and "off_critical_frac" not in pct
+
+
+def test_session_rejects_async_refresh_on_device_backend():
+    model, params, _ = _session_model("device")
+    with pytest.raises(CapabilityError, match="refreshable"):
+        ServingSession(model, params, batcher=BatcherConfig(max_batch=8),
+                       async_refresh=True, warmup=False)
+    with pytest.raises(CapabilityError, match="refreshable"):
+        ServingSession(model, params, batcher=BatcherConfig(max_batch=8),
+                       refresh_every_batches=4, warmup=False)
+
+
+def test_session_matches_dense_scores_tiered():
+    """Session-served scores equal the raw dense forward on the same
+    queries (embedding stage bit-exact; MLP halves to float32 noise)."""
+    model, params, stream = _session_model("tiered")
+    model.ebc.storage.build(params, PSConfig(hot_rows=32, warm_slots=32),
+                            trace=stream.sample_trace(2))
+    captured = {}
+    with ServingSession(model, params,
+                        batcher=BatcherConfig(max_batch=8, max_wait_s=0.0),
+                        sla_ms=1e6) as sess:
+        stream0 = DLRMQueryStream(num_tables=TABLES, rows=ROWS, pooling=POOL,
+                                  batch_size=8, hotness="med_hot", seed=1)
+        b = stream0.next_batch()
+        captured["scores"] = np.asarray(sess._forward(b.dense, b.indices))
+    emb0 = _stage_cfg("device")
+    model0 = DLRM(DLRMConfig(embedding=emb0, bottom_mlp=(64, DIM),
+                             top_mlp=(32, 1)))
+    want = model0.forward(params, jnp.asarray(b.dense),
+                          jnp.asarray(b.indices))
+    np.testing.assert_allclose(captured["scores"], np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims (regression: PR 1-2 surfaces keep working)
+# ---------------------------------------------------------------------------
+
+def test_build_parameter_server_shim_warns_once_and_matches(dense_ref):
+    ebc0, params = dense_ref
+    pats = _pats()
+    idx = _batch(pats, 8, seed=0)
+    ebc = EmbeddingBagCollection(_stage_cfg("tiered"))   # no warning here
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        ps = ebc.build_parameter_server(
+            params, PSConfig(hot_rows=32, warm_slots=32), trace=idx)
+    dep = [w for w in caught if w.category is DeprecationWarning]
+    assert len(dep) == 1                     # a single DeprecationWarning
+    assert "storage.build" in str(dep[0].message)
+    assert ps is ebc.ps is ebc.storage.ps    # legacy accessor still wired
+    got = np.asarray(ebc.apply(params, jnp.asarray(idx)))
+    want = np.asarray(ebc0.apply(params, jnp.asarray(idx)))
+    assert np.array_equal(got, want)
+    # legacy error contracts preserved (auto-tune misuse)
+    with pytest.raises(ValueError, match="device_budget_bytes"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            ebc.build_parameter_server(params)
+    with pytest.raises(TypeError, match="parameter server"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            EmbeddingBagCollection(_stage_cfg("device")) \
+                .build_parameter_server(params)
+
+
+def test_inference_server_ps_shim_warns_and_serves():
+    pats = _pats()
+    rng = np.random.default_rng(0)
+    tables = rng.normal(size=(TABLES, ROWS, DIM)).astype(np.float32)
+    ps = ParameterServer(tables, PSConfig(hot_rows=16, warm_slots=16,
+                                          window_batches=4))
+
+    def fwd(dense, idx):
+        ps.lookup(idx)
+        return np.zeros(len(dense), np.float32)
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        srv = InferenceServer(fwd, BatcherConfig(max_batch=4,
+                                                 max_wait_s=0.0),
+                              sla_ms=1e6, ps=ps, refresh_every_batches=1)
+    assert any(w.category is DeprecationWarning for w in caught)
+    assert srv.ps is ps                      # legacy accessor
+    assert isinstance(srv.storage, TieredStorage)
+    idx = _batch(pats, 4, seed=0)
+    for q in range(4):
+        srv.submit(Query(qid=q, dense=np.zeros(2, np.float32),
+                         indices=idx[q]))
+    srv.drain(timeout_s=1.0)
+    assert srv.stats.served == 4
+    assert ps.refreshes == 1                 # generic driver still re-pins
+    assert srv.stats.ps_stats["cache_hit_rate"] >= 0.0
+    with pytest.raises(ValueError, match="not both"):
+        InferenceServer(fwd, BatcherConfig(), ps=ps,
+                        storage=TieredStorage.adopt(ps))
+
+
+def test_ebc_ps_ctor_shim_warns_and_attaches():
+    rng = np.random.default_rng(0)
+    tables = rng.normal(size=(TABLES, ROWS, DIM)).astype(np.float32)
+    ps = ParameterServer(tables, PSConfig(hot_rows=8, warm_slots=8))
+    with pytest.warns(DeprecationWarning, match="storage.build"):
+        ebc = EmbeddingBagCollection(_stage_cfg("tiered"), ps=ps)
+    assert ebc.ps is ps
+    out = ebc.apply({"tables": tables},
+                    jnp.asarray(_batch(_pats(), 4, seed=0)))
+    assert out.shape == (4, TABLES, DIM)
