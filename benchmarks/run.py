@@ -12,11 +12,16 @@ Scaled-down workload (CPU-feasible) unless noted; the full paper config
 CLI: ``--sweep NAME`` (repeatable) runs a subset; ``--backend
 {device,tiered,sharded,...}`` routes the `storage_backends` sweep through
 the `repro.storage` registry for that backend only (default: every
-registered backend). Existing sweep names are unchanged.
+registered backend). ``--json PATH`` additionally writes every emitted
+value as a structured record ``{sweep, name, metric, value, units}``
+(schema_version 1) — the stable surface `tools/check_bench.py` guards in
+CI and future BENCH_*.json trajectory tracking consumes. The human CSV
+lines are unchanged. Existing sweep names are unchanged.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
@@ -45,12 +50,55 @@ ROWS, DIM, BATCH, POOL, TABLES = 50_000, 128, 2048, 20, 8
 HOTNESS = ("one_item", "high_hot", "med_hot", "low_hot", "random")
 PIN_K = 6000   # VMEM budget analogue of the paper's 60K-rows-in-30MB L2
 ROWS_CSV: list[str] = []
+# structured records for --json (schema_version 1); emit() appends one
+# record per metric it can parse out of a row
+JSON_RECORDS: list[dict] = []
+_CURRENT_SWEEP: str = ""
+
+
+def _coerce(v: str):
+    if v in ("True", "False"):
+        return v == "True"
+    try:
+        return float(v)
+    except ValueError:
+        return v
+
+
+def _units_for(metric: str) -> str:
+    if metric == "us_per_call" or metric.endswith("_us"):
+        return "us"
+    if metric.endswith("_ms"):
+        return "ms"
+    if metric.endswith("_s"):
+        return "s"
+    return ""
+
+
+def _record(name: str, metric: str, value) -> None:
+    JSON_RECORDS.append({"sweep": _CURRENT_SWEEP, "name": name,
+                         "metric": metric, "value": value,
+                         "units": _units_for(metric)})
 
 
 def emit(name: str, us_per_call: float | str, derived: float | str):
+    """Print one human CSV row (unchanged format) and mirror it into the
+    structured JSON records: `us_per_call` becomes one record, a numeric
+    `derived` one `derived` record, and a ``k=v k=v ...`` string one
+    record per pair."""
     row = f"{name},{us_per_call},{derived}"
     ROWS_CSV.append(row)
     print(row, flush=True)
+    if us_per_call != "":
+        _record(name, "us_per_call", float(us_per_call))
+    if isinstance(derived, str):
+        pairs = [p.split("=", 1) for p in derived.split() if "=" in p]
+        for k, v in pairs:
+            _record(name, k, _coerce(v))
+        if derived != "" and not pairs:
+            _record(name, "derived", _coerce(derived))
+    elif derived != "":
+        _record(name, "derived", float(derived))
 
 
 def _dlrm(backend="xla", pinned=0, plans=None) -> tuple[DLRM, dict]:
@@ -501,15 +549,88 @@ def storage_backends(backends: list[str] | None = None):
             emit(f"storage_backend/{backend}/{h}", "", line)
 
 
+def sharded_balance():
+    """Frequency-aware table-to-shard placement on a skewed table mix:
+    contiguous split vs the LPT-balanced planner (`plan_shard_placement`).
+    Reports the cost-model imbalance ratio (max shard load / mean shard
+    load — deterministic from the trace), bit-exactness vs the dense
+    pooled reference, and session p99 latency. The heavy tables are
+    deliberately stacked at one end of the table range so the contiguous
+    split is maximally lopsided. Tiny shapes: CI-guard speed, not a
+    throughput measurement.
+    """
+    from repro.ps import PSConfig
+    from repro.serving import BatcherConfig, ServingSession
+    from repro.storage import (ShardPlacement, estimate_table_loads,
+                               plan_shard_placement)
+    rows, dim, batch, pool = 2000, 16, 32, 10
+    hotness = ("one_item", "one_item", "high_hot", "high_hot",
+               "med_hot", "low_hot", "random", "random")
+    t_count = len(hotness)
+    pats = [make_pattern(h, rows, seed=t) for t, h in enumerate(hotness)]
+
+    def mk(seed):
+        return np.stack([p.sample(batch, pool, seed=seed * 100 + t)
+                         for t, p in enumerate(pats)],
+                        axis=1).astype(np.int32)
+
+    trace = np.concatenate([mk(s) for s in range(2)], axis=0)
+    row_bytes = dim * 4
+    loads = estimate_table_loads(trace, row_bytes)
+    placements = {
+        "contiguous": ShardPlacement.contiguous(t_count, 2, loads=loads),
+        "balanced": plan_shard_placement(trace, 2, row_bytes=row_bytes),
+    }
+
+    def mk_model(backend):
+        cfg = DLRMConfig(embedding=EmbeddingStageConfig(
+            num_tables=t_count, rows=rows, dim=dim, pooling=pool,
+            backend="xla", storage=backend),
+            bottom_mlp=(32, dim), top_mlp=(16, 1))
+        return DLRM(cfg)
+
+    ref_model = mk_model("device")
+    params = ref_model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    for pname, plc in placements.items():
+        model = mk_model("sharded")
+        model.ebc.storage.build(
+            params,
+            PSConfig(hot_rows=rows // 10, warm_slots=rows // 10,
+                     window_batches=8, async_prefetch=True),
+            trace=trace, placement=plc)
+        idx = jnp.asarray(mk(7))
+        exact = bool(np.array_equal(
+            np.asarray(model.embedding_only(params, idx)),
+            np.asarray(ref_model.embedding_only(params, idx))))
+        sess = ServingSession(
+            model, params,
+            batcher=BatcherConfig(max_batch=batch, max_wait_s=0.0),
+            sla_ms=1e6)
+        for b in range(4):
+            dense = rng.standard_normal(
+                (batch, model.cfg.dense_features)).astype(np.float32)
+            sess.submit_batch(dense, mk(b + 10), qid0=b * batch)
+            if b >= 1:
+                sess.poll()
+        sess.drain()
+        sess.close()
+        pct = sess.percentiles()
+        emit(f"sharded_balance/{pname}", "",
+             f"imbalance={plc.imbalance_ratio():.4f} bit_exact={exact} "
+             f"served={pct['served']} p99_ms={pct['p99_ms']:.2f}")
+
+
 ALL = [tab3_unique_access, fig5_coverage, fig1_embedding_contribution,
        fig6_pipeline_sweep, fig9_prefetch_distance, fig11_l2p_pooling,
        fig12_embedding_speedup, fig12_measured_cpu, fig13_e2e_speedup,
        fig14_gap, fig15_buffer_schemes, fig16_no_optmt, fig17_heterogeneous,
        tab45_microarch, tiered_ps_capacity_sweep, tiered_ps_sync_vs_async,
-       tiered_ps_autotune, storage_backends]
+       tiered_ps_autotune, storage_backends, sharded_balance]
 
 
 def main(argv: list[str] | None = None) -> None:
+    global _CURRENT_SWEEP
     from repro import storage as storage_registry
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--sweep", action="append", default=None,
@@ -520,15 +641,26 @@ def main(argv: list[str] | None = None) -> None:
                     help="storage backend(s) for the storage_backends "
                          "sweep, resolved through the repro.storage "
                          "registry (repeatable; default: all registered)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write structured records (schema_version 1: "
+                         "sweep/name/metric/value/units per record) for "
+                         "tools/check_bench.py")
     args = ap.parse_args(argv)
     selected = (ALL if args.sweep is None
                 else [fn for fn in ALL if fn.__name__ in args.sweep])
     print("name,us_per_call,derived")
     for fn in selected:
+        _CURRENT_SWEEP = fn.__name__
         if fn is storage_backends:
             fn(args.backend)
         else:
             fn()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema_version": 1, "records": JSON_RECORDS},
+                      f, indent=1)
+        print(f"wrote {len(JSON_RECORDS)} records to {args.json}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -53,6 +53,12 @@ def parse_args():
                     help="storage backend (repro.storage registry)")
     ap.add_argument("--shards", type=int, default=2,
                     help="sharded: table-wise shard workers")
+    ap.add_argument("--placement", choices=("contiguous", "balanced"),
+                    default="contiguous",
+                    help="sharded: table-to-shard assignment — legacy "
+                         "contiguous split or frequency-aware LPT "
+                         "balancing from the trace (prints the shard "
+                         "load table)")
     ap.add_argument("--hot-rows", type=int, default=2500,
                     help="tiered/sharded: device-pinned rows per table")
     ap.add_argument("--warm-slots", type=int, default=2500,
@@ -62,6 +68,10 @@ def parse_args():
     ap.add_argument("--async", dest="async_mode", action="store_true",
                     help="threaded prefetch (double buffer) + "
                          "helper-thread hot-set re-planning")
+    ap.add_argument("--auto-tune", action="store_true",
+                    help="runtime queue-depth auto-tuning from observed "
+                         "consume_overlap_frac (tiered/sharded; inert on "
+                         "device)")
     ap.add_argument("--warm-backing", choices=("host", "device"),
                     default="host",
                     help="tiered/sharded: warm-cache payload backing")
@@ -83,6 +93,7 @@ def build_storage(args, model, params, stream):
     kw = dict(trace=trace)
     if model.ebc.storage.capabilities().shardable:
         kw["num_shards"] = args.shards
+        kw["placement"] = args.placement
     if args.auto_budget_kib:
         # planner-driven tier sizing from the trace coverage curve
         return model.ebc.storage.build(
@@ -111,13 +122,18 @@ def run_session(args, hotness) -> tuple[dict, int, float]:
     device_resident = model.ebc.storage.capabilities().device_resident
     if not device_resident:
         build_storage(args, model, params, stream)
+        placement = getattr(model.ebc.storage, "placement", None)
+        if placement is not None:
+            # the planner's shard load table (estimated from the trace)
+            print(placement.describe(), flush=True)
     with ServingSession(
             model, params,
             batcher=BatcherConfig(max_batch=args.batch, max_wait_s=0.0),
             sla_ms=500,
             refresh_every_batches=(0 if device_resident
                                    else args.refresh_every),
-            async_refresh=args.async_mode and not device_resident) as sess:
+            async_refresh=args.async_mode and not device_resident,
+            auto_tune=args.auto_tune) as sess:
         # keep one batch queued ahead of the executing one so the generic
         # _stage_next() sees the full next batch and prefetch overlap fires
         submitted = 0
@@ -214,6 +230,9 @@ def main():
                      f"evict={pct['evictions']} "
                      f"refresh={pct['refreshes']} "
                      f"off_crit={pct['off_critical_frac']:.2f}")
+            if "prefetch_depth" in pct:
+                line += (f" depth={pct['prefetch_depth']} "
+                         f"(retunes={pct['depth_retunes']})")
         else:
             line += f" emb_share~{min(emb_share, 1.0):.0%}"
         print(line, flush=True)

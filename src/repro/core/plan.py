@@ -171,3 +171,44 @@ def plan_tier_capacities(trace: np.ndarray, num_rows: int, dim: int,
         total_coverage=total_cov, budget_bytes=int(budget_bytes),
         used_bytes=T * capacity * row_bytes, budget_rows=budget_rows,
         notes=tuple(notes))
+
+
+def estimate_device_budget(fraction: float = 0.5,
+                           fallback_bytes: int | None = None,
+                           device=None) -> int | None:
+    """LIVE device-byte budget for tier planning: free accelerator memory
+    (bytes_limit - bytes_in_use from the runtime's memory stats) scaled by
+    `fraction` headroom. Backends without memory stats (CPU) fall back to
+    `fallback_bytes` — None there means "no estimate", and callers (the
+    serving auto-tuner) skip the capacity step rather than guessing.
+    """
+    try:
+        import jax
+        dev = device if device is not None else jax.local_devices()[0]
+        stats = dev.memory_stats()
+        if stats and "bytes_limit" in stats:
+            free = int(stats["bytes_limit"]) - int(
+                stats.get("bytes_in_use", 0))
+            return int(max(0, free) * fraction)
+    except Exception:
+        pass
+    return fallback_bytes
+
+
+# ---------------------------------------------------------------------------
+# Table-to-shard placement planning (frequency-aware load balancing)
+# ---------------------------------------------------------------------------
+
+def plan_shard_placement(trace: np.ndarray, num_shards: int, **kwargs):
+    """Planner-API entry for frequency-aware table-to-shard balancing:
+    per-table load = unique-access rate x row bytes, assigned by greedy LPT
+    with an optional hot-table replication escape hatch. Returns a
+    `repro.storage.placement.ShardPlacement` for
+    `ShardedStorage.build(placement=...)`; see that module for the model.
+
+    Thin delegation (lazy import: `repro.storage` imports back into core)
+    so every planning entry point — kernel knobs, tier capacities, shard
+    placement — lives on one surface.
+    """
+    from repro.storage.placement import plan_shard_placement as _plan
+    return _plan(trace, num_shards, **kwargs)

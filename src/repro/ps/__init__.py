@@ -9,12 +9,17 @@ Public surface:
                       `repro.core.plan.plan_tier_capacities` result.
   `WarmCache` / `DeviceWarmCache` — host- and device-backed warm tiers.
   `PrefetchQueue` / `AsyncPrefetcher` — the two staging engines.
+  `QueueDepthController` / `AutoTuneConfig` / `AutoTuner`
+                    — runtime auto-tuning of prefetch depth and tier
+                      capacities (driven by `serving.ServingSession`).
 """
 from repro.ps.cold_store import ColdStore
 from repro.ps.config import PSConfig
 from repro.ps.prefetch import AsyncPrefetcher, PrefetchQueue, StagedBatch
 from repro.ps.server import ParameterServer
+from repro.ps.tuning import AutoTuneConfig, AutoTuner, QueueDepthController
 from repro.ps.warm_cache import DeviceWarmCache, WarmCache
 
 __all__ = ["ColdStore", "PSConfig", "AsyncPrefetcher", "PrefetchQueue",
-           "StagedBatch", "ParameterServer", "DeviceWarmCache", "WarmCache"]
+           "StagedBatch", "ParameterServer", "DeviceWarmCache", "WarmCache",
+           "AutoTuneConfig", "AutoTuner", "QueueDepthController"]

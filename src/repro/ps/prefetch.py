@@ -87,6 +87,7 @@ class _PrefetchBase:
         self.off_critical_rows = 0   # staged hits whose gather never touched
         #                              the consumer's critical path
         self.max_queue_depth = 0
+        self._win_peak = 0           # peak since take_window_peak()
 
     # -- subclass contract --------------------------------------------------
     def __len__(self) -> int:                            # staged batches
@@ -99,6 +100,21 @@ class _PrefetchBase:
 
     def stage(self, batch: StagedBatch) -> bool:
         raise NotImplementedError
+
+    def set_depth(self, depth: int) -> None:
+        """Move the bounded-buffer depth at runtime (the queue-depth
+        auto-tuner's knob). Shrinking below the current queue length never
+        drops staged batches — `can_stage()` simply stays False until the
+        queue drains under the new bound. Depth 0 disables staging."""
+        self.depth = max(0, int(depth))
+
+    def take_window_peak(self) -> int:
+        """Peak queue occupancy since the previous call — the auto-tuner's
+        per-window observation (cumulative `max_queue_depth` never resets,
+        so it cannot tell whether the CURRENT bound was recently needed).
+        Resets the window to the present occupancy."""
+        peak, self._win_peak = self._win_peak, len(self)
+        return peak
 
     def consume(self, indices: np.ndarray) -> StagedBatch | None:
         raise NotImplementedError
@@ -152,6 +168,7 @@ class _PrefetchBase:
         self.prefetch_misses = 0
         self.off_critical_rows = 0
         self.max_queue_depth = len(self)
+        self._win_peak = len(self)
 
 
 class PrefetchQueue(_PrefetchBase):
@@ -183,6 +200,7 @@ class PrefetchQueue(_PrefetchBase):
         self.staged_rows += sum(int(r.size) for r in batch.rows.values())
         self.queue.append(batch)
         self.max_queue_depth = max(self.max_queue_depth, len(self.queue))
+        self._win_peak = max(self._win_peak, len(self.queue))
         return True
 
     def consume(self, indices: np.ndarray) -> StagedBatch | None:
@@ -277,6 +295,13 @@ class AsyncPrefetcher(_PrefetchBase):
         instead of raising after a torn-down parameter server."""
         return not self._closed and super().can_stage()
 
+    def set_depth(self, depth: int) -> None:
+        """Runtime depth change, taken under the queue lock (the worker
+        reads `depth` only through `stage()`/`can_stage()` on the caller
+        thread, but the lock keeps the bound coherent with the queue)."""
+        with self._cv:
+            self.depth = max(0, int(depth))
+
     def stage(self, batch: StagedBatch) -> bool:
         """Enqueue miss rows for background resolution; False when full."""
         self._raise_pending_error()
@@ -292,6 +317,7 @@ class AsyncPrefetcher(_PrefetchBase):
                                     for r in batch.rows.values())
             self.max_queue_depth = max(self.max_queue_depth,
                                        len(self._jobs))
+            self._win_peak = max(self._win_peak, len(self._jobs))
             self._cv.notify()
         return True
 

@@ -33,6 +33,7 @@ helper thread against a snapshot of the traffic window.
 from __future__ import annotations
 
 import collections
+import dataclasses
 
 import numpy as np
 
@@ -191,10 +192,15 @@ class ParameterServer:
         assert T == self.cold.num_tables
         valid, self._valid_hint = self._valid_hint, None
         if valid is not None and valid < B:
-            real = self.lookup(indices[:valid])
-            # padding rows: serve values directly (uncounted, not cached)
+            # padding rows: serve values directly (uncounted, not cached).
+            # An all-padding batch (valid=0 — e.g. a replica's batch slice
+            # lying entirely past the valid rows) takes this path alone:
+            # no zero-size recursion, no window/counter pollution.
             pad = self.cold.tables[np.arange(T)[None, :, None],
                                    indices[valid:]]
+            if valid == 0:
+                return pad
+            real = self.lookup(indices[:valid])
             return np.concatenate([real, pad], axis=0)
         staged = self.prefetch.consume(indices)
         self.window.append(indices)
@@ -252,6 +258,72 @@ class ParameterServer:
             w.clear()
         self.window.clear()
         self.prefetch.flush()
+
+    # -- runtime tuning -----------------------------------------------------
+    def set_prefetch_depth(self, depth: int) -> None:
+        """Move the prefetch engine's bounded-buffer depth (see
+        `prefetch.set_depth`). The staging ENGINE never changes — an
+        async-built server keeps its worker thread, a sync-built one stays
+        sync — only the backpressure bound moves."""
+        self.prefetch.set_depth(depth)
+        self.cfg = dataclasses.replace(self.cfg,
+                                       prefetch_depth=self.prefetch.depth)
+
+    def resize_tiers(self, hot_rows: int, warm_slots: int) -> None:
+        """Re-size the hot and warm tiers in place (serving thread only).
+
+        The hot plans are full permutations, so a new `hot_rows` is just a
+        new cut point — `_install_hot_tier` rebuilds the pinned block from
+        the existing plans (re-plan from the window separately via
+        `refresh()` if wanted). Warm caches are only rebuilt when their
+        capacity actually changes; a rebuild drops cached entries (they
+        re-admit from traffic) but keeps cumulative counters.
+        """
+        hot_rows = max(0, int(hot_rows))
+        warm_slots = max(0, int(warm_slots))
+        if warm_slots != self.cfg.warm_slots:
+            warm_cls = type(self.warm[0])
+            D = self.cold.dim
+            old = self.warm
+            self.warm = [warm_cls(warm_slots, D, self.cfg.eviction,
+                                  self.cold.tables.dtype)
+                         for _ in range(self.cold.num_tables)]
+            for w_new, w_old in zip(self.warm, old):
+                w_new.hits, w_new.misses = w_old.hits, w_old.misses
+                w_new.evictions = w_old.evictions
+                w_new.insertions = w_old.insertions
+        self.cfg = dataclasses.replace(self.cfg, hot_rows=hot_rows,
+                                       warm_slots=warm_slots)
+        self._install_hot_tier()
+        for t, w in enumerate(self.warm):
+            # a row lives in at most one device tier (install_refresh law)
+            w.invalidate(self.plans[t].perm[:self.num_hot])
+        # staged payloads are keyed by raw row id and re-checked against
+        # the tiers at consume time, so the queue stays valid
+
+    def retune(self, budget_bytes: int) -> dict | None:
+        """Planner-fed capacity retune: size hot/warm from the LIVE sliding
+        window under `budget_bytes` (`core.plan.plan_tier_capacities` with
+        a headroom estimate instead of a static byte count). Returns the
+        applied sizes, or None when the window is empty (nothing to plan
+        from) — tier state is then left untouched.
+        """
+        if not self.window:
+            return None
+        from repro.core.plan import plan_tier_capacities
+        trace = np.concatenate(
+            [w.reshape(w.shape[0], w.shape[1], -1) for w in self.window],
+            axis=0)
+        plan = plan_tier_capacities(trace, self.cold.num_rows,
+                                    self.cold.dim, budget_bytes,
+                                    itemsize=self.cold.tables.dtype.itemsize)
+        if (plan.hot_rows, plan.warm_slots) != (self.cfg.hot_rows,
+                                                self.cfg.warm_slots):
+            self.resize_tiers(plan.hot_rows, plan.warm_slots)
+        return {"hot_rows": self.cfg.hot_rows,
+                "warm_slots": self.cfg.warm_slots,
+                "budget_bytes": int(budget_bytes),
+                "plan_coverage": plan.total_coverage}
 
     # -- periodic re-pinning ------------------------------------------------
     def plan_refresh(self, window: list[np.ndarray] | None = None

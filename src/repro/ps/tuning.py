@@ -1,0 +1,181 @@
+"""Runtime auto-tuners for the serving loop (the §VII recipe, made live).
+
+Static planning (`core.plan`) picks knobs from an OFFLINE trace; serving
+traffic drifts. Two controllers close the loop at runtime, both driven
+purely through `EmbeddingStorage` protocol verbs so any tunable backend
+(`tiered`, `sharded`) participates and `device` stays inert:
+
+  queue depth    — `QueueDepthController` watches the async prefetcher's
+                   `consume_overlap_frac` (how often the consumer found its
+                   double buffer already resolved) over a sliding window
+                   and widens the bounded buffer when the consumer keeps
+                   waiting, narrows it when the extra slots sit unused.
+                   Bounded by [min_depth, max_depth] and hysteretic
+                   (a dead band between the two thresholds), so it
+                   converges instead of oscillating.
+  tier capacity  — every `capacity_every_batches` executed batches the
+                   session feeds `plan_tier_capacities` a LIVE device-
+                   budget estimate (`core.plan.estimate_device_budget`:
+                   free HBM x fraction, with a static fallback when the
+                   runtime exposes no memory stats) and the backend
+                   re-sizes hot/warm tiers from its sliding traffic window
+                   (`storage.retune_capacities`).
+
+`ServingSession(auto_tune=AutoTuneConfig(...))` drives both; see
+docs/serving.md for the operator guide (what the signals mean, how to pin
+a depth manually).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass
+class QueueDepthController:
+    """Hysteresis controller for the prefetch bounded-buffer depth.
+
+    `propose()` is a pure function of one observation window:
+
+      overlap_frac   — consume_ready / (consume_ready + consume_waited)
+                       over the window (None when nothing was consumed).
+      peak_depth     — max queue occupancy seen in the window.
+      depth          — the currently configured bound.
+
+    Policy: overlap below `widen_below` means the consumer kept reaching a
+    buffer the worker had not finished — give the worker more lead time
+    (+`step`). Overlap at/above `narrow_above` while the queue never even
+    filled the current bound means slots are dead weight — reclaim one.
+    Anything in between (or an idle window) holds. The proposal is always
+    clamped to [min_depth, max_depth], so the depth can NEVER leave the
+    bound, and the dead band guarantees convergence: once inside it, the
+    depth is a fixed point.
+    """
+
+    min_depth: int = 1
+    max_depth: int = 8
+    widen_below: float = 0.5
+    narrow_above: float = 0.95
+    step: int = 1
+
+    def __post_init__(self):
+        if not (1 <= self.min_depth <= self.max_depth):
+            raise ValueError("need 1 <= min_depth <= max_depth")
+        if not (0.0 <= self.widen_below <= self.narrow_above <= 1.0):
+            raise ValueError("need 0 <= widen_below <= narrow_above <= 1")
+
+    def clamp(self, depth: int) -> int:
+        return max(self.min_depth, min(self.max_depth, int(depth)))
+
+    def propose(self, depth: int, overlap_frac: Optional[float],
+                peak_depth: int) -> int:
+        if overlap_frac is None:        # idle window: nothing to learn,
+            return depth                # nothing to change (no clamping)
+        depth = self.clamp(depth)
+        if overlap_frac < self.widen_below:
+            return self.clamp(depth + self.step)
+        if overlap_frac >= self.narrow_above and peak_depth < depth:
+            return self.clamp(depth - 1)
+        return depth
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoTuneConfig:
+    """What the `ServingSession` auto-tune loop does and how often.
+
+    Either interval set to 0 disables that controller; the default tunes
+    queue depth every 8 executed batches and leaves capacity retuning off
+    (it drops warm-cache contents when capacities move, so opt in).
+    """
+
+    # re-evaluate the prefetch queue depth every N executed batches
+    depth_every_batches: int = 8
+    controller: QueueDepthController = dataclasses.field(
+        default_factory=QueueDepthController)
+    # feed plan_tier_capacities a live budget every N executed batches
+    # (0 = off)
+    capacity_every_batches: int = 0
+    # fraction of the estimated free device bytes handed to the planner
+    budget_fraction: float = 0.5
+    # used when the runtime exposes no memory stats (CPU backends); None
+    # skips the capacity step entirely in that case
+    budget_fallback_bytes: Optional[int] = None
+
+
+class AutoTuner:
+    """Per-session tuning state: windowed counter deltas + action log.
+
+    `step(storage)` is called by the session after every executed batch;
+    it reads `storage.stats()` at each interval boundary, computes the
+    window's overlap observation from counter deltas, and applies the
+    controller's proposal through the protocol verbs. All decisions are
+    recorded in `self.events` (benchmarks/tests introspect them).
+    """
+
+    def __init__(self, cfg: AutoTuneConfig, storage):
+        self.cfg = cfg
+        self.storage = storage
+        self.enabled = storage.capabilities().tunable
+        self.batches = 0
+        self.events: list[dict] = []
+        self._last = self._snapshot() if self.enabled else {}
+
+    def _snapshot(self) -> dict:
+        s = self.storage.stats()
+        return {k: s.get(k, 0)
+                for k in ("consume_ready", "consume_waited")}
+
+    def step(self) -> None:
+        if not self.enabled:
+            return                      # device et al.: inert by design
+        self.batches += 1
+        c = self.cfg
+        if c.depth_every_batches and \
+                self.batches % c.depth_every_batches == 0:
+            self._depth_step()
+        if c.capacity_every_batches and \
+                self.batches % c.capacity_every_batches == 0:
+            self._capacity_step()
+
+    def _depth_step(self) -> None:
+        now = self._snapshot()
+        ready = now["consume_ready"] - self._last["consume_ready"]
+        waited = now["consume_waited"] - self._last["consume_waited"]
+        self._last = now
+        window_peak = self.storage.take_prefetch_window_peak()
+        depth = self.storage.prefetch_depth()
+        if depth == 0:
+            return      # staging deliberately off: never re-enable it
+        consumed = ready + waited
+        # <= 0 also covers a stats reset mid-window (negative deltas):
+        # treat it as an idle window rather than inventing an overlap
+        overlap = ready / consumed if consumed > 0 else None
+        want = self.cfg.controller.propose(depth, overlap, window_peak)
+        if want != depth and self.storage.set_prefetch_depth(want):
+            self.events.append({"kind": "depth", "batch": self.batches,
+                                "from": depth, "to": want,
+                                "overlap_frac": overlap})
+
+    def _capacity_step(self) -> None:
+        from repro.core.plan import estimate_device_budget
+        budget = estimate_device_budget(
+            fraction=self.cfg.budget_fraction,
+            fallback_bytes=self.cfg.budget_fallback_bytes)
+        if budget is None:
+            return
+        result = self.storage.retune_capacities(budget)
+        if result is not None:
+            self.events.append({"kind": "capacity", "batch": self.batches,
+                                **result})
+
+    def summary(self) -> dict:
+        """Merged into `ServingSession.percentiles()` when tuning ran."""
+        if not self.enabled:
+            return {}
+        out = {"prefetch_depth": self.storage.prefetch_depth(),
+               "depth_retunes": sum(e["kind"] == "depth"
+                                    for e in self.events)}
+        cap = [e for e in self.events if e["kind"] == "capacity"]
+        if self.cfg.capacity_every_batches:
+            out["capacity_retunes"] = len(cap)
+        return out

@@ -3,11 +3,14 @@
 `ServingSession` is the front door — it owns batcher + engine + storage
 and drives prefetch/refresh through the `repro.storage` protocol.
 `InferenceServer`/`Batcher` remain the inner loop for callers that wire
-their own engines.
+their own engines. Runtime auto-tuning (`AutoTuneConfig`, re-exported from
+`repro.ps.tuning`) hangs off `ServingSession(auto_tune=...)`.
 """
+from repro.ps.tuning import AutoTuneConfig, QueueDepthController
 from repro.serving.server import (Batcher, BatcherConfig, InferenceServer,
                                   Query, ServeStats)
 from repro.serving.session import ServingSession
 
 __all__ = ["Batcher", "BatcherConfig", "InferenceServer", "Query",
-           "ServeStats", "ServingSession"]
+           "ServeStats", "ServingSession", "AutoTuneConfig",
+           "QueueDepthController"]

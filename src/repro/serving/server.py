@@ -281,18 +281,21 @@ class InferenceServer:
             self.stats.ps_stats = self.storage.stats()
         return n
 
-    def drain(self, timeout_s: float = 10.0) -> None:
+    def drain(self, timeout_s: float = 10.0, poll=None) -> None:
         """Serve until the queue empties. Honours the batching window while
         it is open, but force-flushes the partial batch once the head
         query's deadline — or this call's own timeout — is reached, so a
-        sub-`max_batch` remainder can never starve (busy-spin bug)."""
+        sub-`max_batch` remainder can never starve (busy-spin bug).
+        `poll` substitutes a wrapped poll (the session passes its
+        auto-tuner-aware one) so the force-flush law lives only here."""
+        poll = self.poll if poll is None else poll
         t0 = time.perf_counter()
         while self.batcher.queue:
             now = time.perf_counter()
             head_deadline = (self.batcher.queue[0].arrival_s
                              + self.batcher.cfg.max_wait_s)
             force = now >= head_deadline or now - t0 >= timeout_s
-            self.poll(force=force)
+            poll(force=force)
 
     def close(self) -> None:
         """Finish any in-flight async refresh — wait for the planner

@@ -31,12 +31,13 @@ Typical use (see docs/serving.md for the operator guide):
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ps.tuning import AutoTuneConfig, AutoTuner
 from repro.serving.server import BatcherConfig, InferenceServer, Query
 from repro.storage import require_capability
 
@@ -50,6 +51,7 @@ class ServingSession:
                  sla_ms: float = 50.0,
                  refresh_every_batches: int = 0,
                  async_refresh: bool = False,
+                 auto_tune: Union[AutoTuneConfig, bool, None] = None,
                  warmup: bool = True):
         self.model = model
         self.params = params
@@ -67,6 +69,16 @@ class ServingSession:
         self._closed = False
         if warmup:
             self._warmup(batcher.max_batch)
+        # runtime auto-tuning (queue depth / tier capacity): driven from
+        # poll() through protocol verbs only. Backends that do not report
+        # `tunable` (device) leave the tuner permanently inert — asking for
+        # tuning on them is a no-op by design, not an error. Created AFTER
+        # warmup: the tuner's first counter snapshot must postdate the
+        # warmup stats reset or the first window sees negative deltas.
+        if auto_tune is True:
+            auto_tune = AutoTuneConfig()
+        self.tuner: Optional[AutoTuner] = (
+            AutoTuner(auto_tune, self.storage) if auto_tune else None)
 
     # -- engine -------------------------------------------------------------
     def _build_engine(self, caps):
@@ -106,10 +118,15 @@ class ServingSession:
                                      indices=indices[i]))
 
     def poll(self, force: bool = False) -> int:
-        return self.server.poll(force=force)
+        served = self.server.poll(force=force)
+        if served and self.tuner is not None:
+            self.tuner.step()       # one executed batch per serving poll
+        return served
 
     def drain(self, timeout_s: float = 10.0) -> None:
-        self.server.drain(timeout_s=timeout_s)
+        """`InferenceServer.drain` routed through `self.poll` so the
+        auto-tuner sees drain-phase batches too (same force-flush law)."""
+        self.server.drain(timeout_s=timeout_s, poll=self.poll)
 
     # -- reporting ----------------------------------------------------------
     @property
@@ -119,8 +136,13 @@ class ServingSession:
     def percentiles(self) -> dict:
         """Latency percentiles + whatever cache/overlap counters the bound
         backend reports (`off_critical_frac` et al. for any async-capable
-        backend) — no backend-specific keys wired here."""
-        return self.server.stats.percentiles()
+        backend) — no backend-specific keys wired here. When auto-tuning
+        ran, the tuner's summary (`prefetch_depth`, `depth_retunes`, ...)
+        rides along."""
+        out = self.server.stats.percentiles()
+        if self.tuner is not None and out:
+            out.update(self.tuner.summary())
+        return out
 
     def sla_violations(self) -> int:
         return self.server.sla_violations()

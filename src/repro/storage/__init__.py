@@ -10,6 +10,9 @@ Public surface:
   `TieredStorage`       — `"tiered"`: hot/warm/cold `repro.ps` server.
   `ShardedStorage`      — `"sharded"`: table-wise partition of the tiered
                           store across shard workers, merged stats.
+  `ShardPlacement` / `plan_shard_placement` / `estimate_table_loads`
+                        — frequency-aware table-to-shard assignment (LPT
+                          balancing + replication escape hatch).
   `require_capability` / `CapabilityError`
                         — fail fast on capability mismatch.
 
@@ -18,6 +21,8 @@ operator guide + old→new API migration table.
 """
 from repro.storage.base import (CapabilityError, EmbeddingStorage,
                                 StorageCapabilities, require_capability)
+from repro.storage.placement import (ShardPlacement, estimate_table_loads,
+                                     plan_shard_placement)
 from repro.storage.registry import (UnknownBackendError, available, create,
                                     register, resolve, unregister)
 # importing the backend modules registers them
@@ -28,4 +33,5 @@ from repro.storage.sharded import ShardedStorage
 __all__ = ["CapabilityError", "EmbeddingStorage", "StorageCapabilities",
            "require_capability", "UnknownBackendError", "available",
            "create", "register", "resolve", "unregister", "DeviceStorage",
-           "TieredStorage", "ShardedStorage"]
+           "TieredStorage", "ShardedStorage", "ShardPlacement",
+           "estimate_table_loads", "plan_shard_placement"]

@@ -57,6 +57,11 @@ class StorageCapabilities:
     refreshable: bool = False
     # storage is (or can be) partitioned across shard workers
     shardable: bool = False
+    # runtime auto-tuning hooks are live: set_prefetch_depth() moves the
+    # bounded prefetch buffer, retune_capacities() re-splits a device-byte
+    # budget into tier capacities. False (the default) means the hooks are
+    # inert no-ops — the auto-tuner skips the backend entirely.
+    tunable: bool = False
 
     def describe(self) -> str:
         on = [f.name for f in dataclasses.fields(self)
@@ -168,6 +173,30 @@ class EmbeddingStorage(abc.ABC):
     def refresh(self) -> dict:
         """Synchronous re-pin: plan + install in one call."""
         return self.install_refresh(self.plan_refresh(self.refresh_window()))
+
+    # -- runtime tuning hooks -----------------------------------------------
+    def prefetch_depth(self) -> int:
+        """Current bounded-buffer depth of the prefetch engine (0 = staging
+        off / unsupported)."""
+        return 0
+
+    def set_prefetch_depth(self, depth: int) -> bool:
+        """Runtime queue-depth control: move the prefetch buffer bound.
+        Returns False when the backend has no prefetch engine to tune (the
+        inert default — `device` stays a no-op by design)."""
+        return False
+
+    def take_prefetch_window_peak(self) -> int:
+        """Peak prefetch-queue occupancy since the previous call (the
+        auto-tuner's per-window observation; resets the window)."""
+        return 0
+
+    def retune_capacities(self, budget_bytes: int) -> Optional[dict]:
+        """Re-split a LIVE device-byte budget into tier capacities from the
+        backend's recent traffic window (`core.plan.plan_tier_capacities`
+        fed a headroom estimate instead of a static byte count). None =
+        nothing to retune (the inert default)."""
+        return None
 
     # -- stats & hygiene ----------------------------------------------------
     def stats(self) -> dict:

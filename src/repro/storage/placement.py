@@ -1,0 +1,210 @@
+"""Frequency-aware table-to-shard placement (the cost-model-driven planner).
+
+`ShardedStorage` used to split the table stack into contiguous groups —
+fine when every table carries the same traffic, badly imbalanced under the
+skew the paper is all about (§III-B: unique-access rates span 0.0002% to
+63% across hotness classes; Gupta et al. observe the same spread across
+production tables). A shard's serving cost is dominated by the rows it must
+actually move per batch, so the planner models each table's load as
+
+    load(t) = unique-access rate(t) x row bytes
+
+(`estimate_table_loads`, reusing the coverage machinery of `core.plan`:
+per-batch distinct-row counts from the same [N, T, L] offline trace every
+other planner entry consumes) and assigns tables to shards with greedy
+longest-processing-time (LPT) balancing — sort by descending load, place
+each table on the currently lightest shard. LPT is the classic 4/3-optimal
+makespan heuristic; for the handful-of-tables-per-shard shapes here it is
+within a few percent of optimal and fully deterministic.
+
+Replication escape hatch: when one table's load alone exceeds the mean
+shard load (`replicate_factor`), no assignment can balance it — the paper's
+`one_item`-style tables in reverse. The planner may then split that table
+into R replicas (each `load/R`), placed on DISTINCT shards; at serve time
+`ShardedStorage` routes an equal slice of the batch to each replica. Every
+replica holds byte-identical rows, so placement — like every other
+placement — never changes served values.
+
+The result is a `ShardPlacement`: a pure, picklable description consumed by
+`ShardedStorage.build(placement=...)` and exposed through the planner API
+as `repro.core.plan.plan_shard_placement`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def estimate_table_loads(trace: np.ndarray, row_bytes: int = 1
+                         ) -> np.ndarray:
+    """Per-table load estimate from an offline trace: mean distinct rows
+    per batch x `row_bytes`.
+
+    trace: [N, T, L] raw row ids (or [N, L] for one table). The distinct
+    count is per batch — the unit of gather traffic a shard actually
+    serves (duplicates within a batch coalesce into one row fetch, the
+    same coalescing `ParameterServer._lookup_table` performs).
+    Returns float64 [T].
+    """
+    trace = np.asarray(trace)
+    if trace.ndim == 2:
+        trace = trace[:, None, :]
+    assert trace.ndim == 3, "expected trace [N, T, L]"
+    N, T, _ = trace.shape
+    loads = np.empty(T, np.float64)
+    for t in range(T):
+        loads[t] = sum(len(np.unique(trace[n, t])) for n in range(N)) / N
+    return loads * float(row_bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlacement:
+    """Table-to-shard assignment with per-table load estimates.
+
+    `replicas[t]` lists the shards holding a copy of table `t` (length 1
+    for a normal placement; >1 only through the replication escape hatch).
+    A replicated table contributes `loads[t] / len(replicas[t])` to each
+    owning shard — the serving layer splits the batch evenly across
+    replicas, so the load really does divide.
+    """
+
+    num_tables: int
+    num_shards: int
+    replicas: tuple[tuple[int, ...], ...]   # table -> owning shard ids
+    loads: tuple[float, ...]                # table -> estimated load
+    strategy: str = "balanced"              # 'contiguous' | 'balanced' | ...
+
+    def __post_init__(self):
+        if len(self.replicas) != self.num_tables or \
+                len(self.loads) != self.num_tables:
+            raise ValueError("replicas/loads must have one entry per table")
+        for t, owners in enumerate(self.replicas):
+            if not owners:
+                raise ValueError(f"table {t} is assigned to no shard")
+            if len(set(owners)) != len(owners):
+                raise ValueError(f"table {t} replicated twice on one shard")
+            if not all(0 <= s < self.num_shards for s in owners):
+                raise ValueError(f"table {t} assigned to unknown shard")
+
+    # -- derived views -------------------------------------------------------
+    @property
+    def shard_tables(self) -> tuple[tuple[int, ...], ...]:
+        """Per-shard ascending table ids (replicated tables appear on each
+        owner) — the order `ShardedStorage` stacks each shard's tables in."""
+        out: list[list[int]] = [[] for _ in range(self.num_shards)]
+        for t, owners in enumerate(self.replicas):
+            for s in owners:
+                out[s].append(t)
+        return tuple(tuple(ts) for ts in out)
+
+    @property
+    def shard_loads(self) -> np.ndarray:
+        """Estimated load per shard (replicas split their table's load)."""
+        loads = np.zeros(self.num_shards, np.float64)
+        for t, owners in enumerate(self.replicas):
+            for s in owners:
+                loads[s] += self.loads[t] / len(owners)
+        return loads
+
+    def imbalance_ratio(self) -> float:
+        """max shard load / mean shard load (1.0 = perfectly balanced)."""
+        loads = self.shard_loads
+        mean = loads.mean()
+        return float(loads.max() / mean) if mean > 0 else 1.0
+
+    @property
+    def replicated_tables(self) -> tuple[int, ...]:
+        return tuple(t for t, o in enumerate(self.replicas) if len(o) > 1)
+
+    def describe(self) -> str:
+        """Human-readable shard load table (the example's --placement
+        printout)."""
+        loads = self.shard_loads
+        lines = [f"placement={self.strategy} shards={self.num_shards} "
+                 f"imbalance={self.imbalance_ratio():.3f}"]
+        for s, tabs in enumerate(self.shard_tables):
+            marks = [f"{t}{'*' if len(self.replicas[t]) > 1 else ''}"
+                     for t in tabs]
+            lines.append(f"  shard {s}: load={loads[s]:10.1f}  "
+                         f"tables=[{', '.join(marks)}]")
+        if self.replicated_tables:
+            lines.append(f"  (* = replicated: "
+                         f"{list(self.replicated_tables)})")
+        return "\n".join(lines)
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def contiguous(cls, num_tables: int, num_shards: int,
+                   loads: np.ndarray | None = None) -> "ShardPlacement":
+        """The legacy split: `num_shards` contiguous groups. `loads` (when
+        known) ride along so the imbalance of the old scheme is reportable."""
+        num_shards = max(1, min(num_shards, num_tables))
+        bounds = np.linspace(0, num_tables, num_shards + 1).astype(int)
+        replicas = []
+        for s, (lo, hi) in enumerate(zip(bounds[:-1], bounds[1:])):
+            replicas += [(s,)] * (hi - lo)
+        if loads is None:
+            loads = np.ones(num_tables, np.float64)
+        return cls(num_tables=num_tables, num_shards=num_shards,
+                   replicas=tuple(replicas),
+                   loads=tuple(float(x) for x in np.asarray(loads)),
+                   strategy="contiguous")
+
+
+def plan_shard_placement(trace: np.ndarray, num_shards: int, *,
+                         row_bytes: int = 1,
+                         loads: np.ndarray | None = None,
+                         replicate_factor: float = 0.0,
+                         max_replicas: int | None = None) -> ShardPlacement:
+    """Greedy LPT table-to-shard balancing from a traffic trace.
+
+    trace: [N, T, L] raw row ids (ignored when explicit `loads` are given).
+    row_bytes: per-row gather cost (dim x itemsize); a common scale factor
+        cancels in the balance, so the default 1 only matters for absolute
+        load readouts.
+    replicate_factor: 0 disables replication. Otherwise a table whose load
+        exceeds `replicate_factor x (total load / num_shards)` is split
+        into enough replicas to bring each below that bound (capped at
+        `max_replicas`, default `num_shards`).
+
+    Deterministic: ties in the LPT sort break by table id, ties in the
+    least-loaded-shard choice break by shard id.
+    """
+    if loads is None:
+        loads = estimate_table_loads(trace, row_bytes)
+    loads = np.asarray(loads, np.float64)
+    T = len(loads)
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    num_shards = min(num_shards, T)
+    max_replicas = num_shards if max_replicas is None else \
+        max(1, min(max_replicas, num_shards))
+
+    # replication escape hatch: split dominant tables into r copies
+    n_rep = np.ones(T, np.int64)
+    if replicate_factor > 0 and num_shards > 1:
+        fair = loads.sum() / num_shards
+        if fair > 0:
+            over = loads > replicate_factor * fair
+            n_rep[over] = np.minimum(
+                np.ceil(loads[over] / (replicate_factor * fair)
+                        ).astype(np.int64),
+                max_replicas)
+
+    # LPT over (table, replica) items with per-replica load
+    items = [(t, loads[t] / n_rep[t]) for t in range(T)
+             for _ in range(n_rep[t])]
+    items.sort(key=lambda it: (-it[1], it[0]))
+    shard_load = np.zeros(num_shards, np.float64)
+    owners: list[list[int]] = [[] for _ in range(T)]
+    for t, load in items:
+        # lightest shard not already holding a replica of t
+        order = np.lexsort((np.arange(num_shards), shard_load))
+        s = next(int(s) for s in order if int(s) not in owners[t])
+        owners[t].append(s)
+        shard_load[s] += load
+    return ShardPlacement(
+        num_tables=T, num_shards=num_shards,
+        replicas=tuple(tuple(sorted(o)) for o in owners),
+        loads=tuple(float(x) for x in loads), strategy="balanced")

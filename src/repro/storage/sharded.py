@@ -3,36 +3,48 @@
 The next scaling axis after PR 1–2's single tiered parameter server
 (Gupta et al.: table-wise sharding is how production DLRM fleets spread
 embedding capacity; the ROADMAP's "multi-host sharded cold tier" item).
-The table stack [T, R, D] splits into `num_shards` contiguous groups;
-each shard owns a full `repro.ps.ParameterServer` over its tables — its
+Each shard owns a full `repro.ps.ParameterServer` over its tables — its
 own hot block, its own warm caches, its own prefetch queue (and, with
 `async_prefetch=True`, its own gather worker thread).
 
+Which tables a shard owns comes from a `ShardPlacement`
+(`repro.storage.placement`): the legacy contiguous split, or the
+frequency-aware planner (`plan_shard_placement`) that LPT-balances
+per-table load estimates — and may replicate a dominant table across
+several shards, in which case each replica serves an equal slice of the
+batch. Internally every (shard, table-group) pair is a *unit* holding one
+ParameterServer: a shard has one unit for its non-replicated tables plus
+one per replica it hosts, executed serially on that shard's worker.
+
 Single-process multi-shard for now: `lookup()`/`stage()` fan out over a
-shard thread pool and join before returning, so each shard's PS still
-sees the strictly serialized call pattern its threading model requires
-(one outstanding call per shard; shards touch disjoint tables). The
-protocol surface is shard-count-agnostic — a later multi-host version
-replaces the pool with RPC stubs without changing any caller.
+shard thread pool and join before returning, so each unit's PS still sees
+the strictly serialized call pattern its threading model requires (one
+outstanding call per PS; units touch disjoint (table, batch-slice)
+regions). The protocol surface is shard-count-agnostic — a later
+multi-host version replaces the pool with RPC stubs without changing any
+caller.
 
-Bit-exactness: every shard serves byte-identical copies of its table
-slice, and concatenating per-shard row blocks along the table axis
-reconstructs exactly the array a single tiered server would have
-produced, so the shared pooling reduction yields bit-identical output.
+Bit-exactness: every unit serves byte-identical copies of its table slice,
+and scattering per-unit row blocks back into the [B, T, L, D] buffer
+reconstructs exactly the array a single tiered server would have produced,
+so the shared pooling reduction yields bit-identical output — for ANY
+placement, replicated or not.
 
-Stats: per-shard counters merge into ONE report — counter keys sum,
-rates are recomputed from the sums, `max_queue_depth` is the per-shard
-peak, and the unmerged snapshots ride along under `"per_shard"`.
+Stats: per-shard counters merge into ONE report — counter keys sum, rates
+are recomputed from the sums, `max_queue_depth` is the per-shard peak, and
+the unmerged snapshots ride along under `"per_shard"`.
 """
 from __future__ import annotations
 
 import concurrent.futures
-from typing import Optional
+import dataclasses
+from typing import Optional, Union
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.storage.base import EmbeddingStorage, StorageCapabilities
+from repro.storage.placement import ShardPlacement, plan_shard_placement
 from repro.storage.registry import register
 from repro.storage.tiered import (_extract_tables, _reject_double_remap,
                                   build_ps_config)
@@ -79,6 +91,23 @@ def merge_shard_stats(per_shard: list[dict]) -> dict:
     return out
 
 
+def _chunk_bounds(batch: int, num_chunks: int, k: int) -> tuple[int, int]:
+    """Equal batch split for replica k of num_chunks (np.array_split law)."""
+    bounds = np.linspace(0, batch, num_chunks + 1).astype(int)
+    return int(bounds[k]), int(bounds[k + 1])
+
+
+@dataclasses.dataclass
+class _Unit:
+    """One ParameterServer worth of placement: a shard's non-replicated
+    table group (`chunk is None`, full batch) or a single replicated
+    table's copy (`chunk=(k, r)`: batch slice k of r)."""
+    shard: int
+    table_ids: np.ndarray                 # global table ids, ascending
+    ps: object                            # repro.ps.ParameterServer
+    chunk: Optional[tuple[int, int]] = None
+
+
 @register("sharded")
 class ShardedStorage(EmbeddingStorage):
     """Table-sharded tiered storage: N parameter servers, one report."""
@@ -86,16 +115,22 @@ class ShardedStorage(EmbeddingStorage):
     def __init__(self, ebc):
         super().__init__(ebc)
         _reject_double_remap(self.cfg, "sharded")
-        self.shards: list = []            # one ParameterServer per shard
-        self.table_slices: list[slice] = []
+        self.shards: list = []            # flat list: every unit's PS
+        self.placement: Optional[ShardPlacement] = None
+        self.table_slices: list[slice] = []   # contiguous placements only
+        self._units: list[_Unit] = []
+        self._shard_units: list[list[_Unit]] = []
+        self._valid_hint: Optional[int] = None
         self._pool: Optional[concurrent.futures.ThreadPoolExecutor] = None
 
     # -- descriptor ---------------------------------------------------------
     def capabilities(self) -> StorageCapabilities:
         # mirrors TieredStorage: closed async workers cannot stage again,
-        # so staging capabilities drop after close()
+        # so staging capabilities drop after close(). Live prefetch depth
+        # (not the built config) decides stageability — the queue-depth
+        # auto-tuner may have moved it.
         stageable = bool(self.shards) and all(
-            ps.cfg.prefetch_depth > 0
+            ps.prefetch.depth > 0
             and not getattr(ps.prefetch, "closed", False)
             for ps in self.shards)
         return StorageCapabilities(
@@ -104,24 +139,56 @@ class ShardedStorage(EmbeddingStorage):
             async_prefetch=stageable and all(
                 ps.cfg.async_prefetch for ps in self.shards),
             refreshable=True,
-            shardable=True)
+            shardable=True,
+            tunable=bool(self.shards))
 
     @property
     def num_shards(self) -> int:
-        return len(self.shards)
+        return 0 if self.placement is None else self.placement.num_shards
 
     # -- construction -------------------------------------------------------
+    def _resolve_placement(self, placement, num_shards: int,
+                           trace: Optional[np.ndarray]) -> ShardPlacement:
+        cfg = self.cfg
+        row_bytes = cfg.dim * cfg.jnp_dtype.itemsize
+        if placement is None or placement == "contiguous":
+            from repro.storage.placement import estimate_table_loads
+            loads = (None if trace is None
+                     else estimate_table_loads(trace, row_bytes))
+            return ShardPlacement.contiguous(cfg.num_tables, num_shards,
+                                             loads=loads)
+        if placement == "balanced":
+            if trace is None:
+                raise ValueError("placement='balanced' needs a trace= to "
+                                 "estimate per-table loads from (or pass a "
+                                 "pre-planned ShardPlacement)")
+            return plan_shard_placement(trace, num_shards,
+                                        row_bytes=row_bytes)
+        if isinstance(placement, ShardPlacement):
+            if placement.num_tables != cfg.num_tables:
+                raise ValueError(
+                    f"placement plans {placement.num_tables} tables but the "
+                    f"collection has {cfg.num_tables}")
+            return placement
+        raise ValueError(f"placement must be 'contiguous', 'balanced', or a "
+                         f"ShardPlacement, got {placement!r}")
+
     def build(self, params: dict, ps_cfg=None,
               trace: Optional[np.ndarray] = None, *,
               num_shards: int = 2,
+              placement: Union[str, ShardPlacement, None] = None,
               device_budget_bytes: Optional[int] = None,
               parallel: bool = True,
               **ps_cfg_overrides) -> "ShardedStorage":
-        """Split the table stack into `num_shards` contiguous groups and
-        build one ParameterServer per group (same `PSConfig` for all —
+        """Assign tables to `num_shards` shard workers and build one
+        ParameterServer per placement unit (same `PSConfig` for all —
         capacities are per-table, so the config is shard-size-agnostic).
 
-        `trace` [N, T, L] is sliced per shard for hot-set planning; the
+        `placement` selects the table-to-shard assignment: `'contiguous'`
+        (default; the legacy equal split), `'balanced'` (frequency-aware
+        LPT from `trace` — see `repro.storage.placement`), or an explicit
+        `ShardPlacement` (arbitrary assignment, replication included).
+        `trace` [N, T, L] is sliced per unit for hot-set planning; the
         auto-tune path (`device_budget_bytes`) plans ONCE on the full
         trace, exactly as the single tiered backend would. `parallel=False`
         disables the shard thread pool (serial fan-out; deterministic
@@ -135,17 +202,55 @@ class ShardedStorage(EmbeddingStorage):
                                  cfg.jnp_dtype.itemsize, ps_cfg,
                                  device_budget_bytes, **ps_cfg_overrides)
         tables = _extract_tables(params, cfg.num_tables)
+        # validate everything that can raise BEFORE tearing down a live
+        # backend — a rejected rebuild must leave the old shards serving
+        plc = self._resolve_placement(placement, num_shards, trace)
         self.close()                     # rebuilding: drop old workers
-        bounds = np.linspace(0, cfg.num_tables, num_shards + 1).astype(int)
-        self.table_slices = [slice(int(lo), int(hi))
-                             for lo, hi in zip(bounds[:-1], bounds[1:])]
-        self.shards = [
-            ParameterServer(tables[sl], ps_cfg,
-                            trace=None if trace is None else trace[:, sl])
-            for sl in self.table_slices]
-        if parallel and num_shards > 1:
+        self.placement = plc
+
+        # units: per shard, one PS over its solely-owned tables, plus one
+        # single-table PS per replica copy it hosts (batch-sliced at serve)
+        self._units, self._shard_units = [], [[] for _ in
+                                             range(plc.num_shards)]
+
+        def add_unit(shard, ids, chunk):
+            ids = np.asarray(ids, np.int64)
+            ps = ParameterServer(
+                tables[ids], ps_cfg,
+                trace=None if trace is None else trace[:, ids])
+            unit = _Unit(shard=shard, table_ids=ids, ps=ps, chunk=chunk)
+            self._units.append(unit)
+            self._shard_units[shard].append(unit)
+
+        for s, tabs in enumerate(plc.shard_tables):
+            solo = [t for t in tabs if len(plc.replicas[t]) == 1]
+            if solo:
+                add_unit(s, solo, None)
+        for t in plc.replicated_tables:
+            owners = plc.replicas[t]
+            for k, s in enumerate(owners):
+                add_unit(s, [t], (k, len(owners)))
+        self.shards = [u.ps for u in self._units]
+
+        # legacy view: table_slices only describes replication-free
+        # placements where every shard owns one ascending contiguous run
+        self.table_slices = []
+        if not plc.replicated_tables:
+            runs = []
+            for tabs in plc.shard_tables:
+                if tabs and list(tabs) == list(range(tabs[0],
+                                                     tabs[-1] + 1)):
+                    runs.append(slice(tabs[0], tabs[-1] + 1))
+            if (len(runs) == plc.num_shards
+                    and all(a.stop == b.start
+                            for a, b in zip(runs, runs[1:]))
+                    and runs[0].start == 0
+                    and runs[-1].stop == cfg.num_tables):
+                self.table_slices = runs
+
+        if parallel and plc.num_shards > 1:
             self._pool = concurrent.futures.ThreadPoolExecutor(
-                max_workers=num_shards, thread_name_prefix="ps-shard")
+                max_workers=plc.num_shards, thread_name_prefix="ps-shard")
         return self
 
     def _require_built(self) -> None:
@@ -154,31 +259,44 @@ class ShardedStorage(EmbeddingStorage):
                 "storage='sharded' needs its shard servers: call "
                 "ebc.storage.build(params, ps_cfg, num_shards=N) first")
 
-    def _map_shards(self, fn, *per_shard_args) -> list:
-        """Apply fn(shard_index, ...) across shards — via the pool when one
-        exists — and join in shard order. One in-flight call per shard, so
-        each PS keeps its single-caller contract."""
+    def _map_shards(self, fn) -> list:
+        """Apply fn(shard_index) across shards — via the pool when one
+        exists — and join in shard order. One in-flight call per shard (a
+        shard runs its units serially), so each PS keeps its single-caller
+        contract."""
+        n = len(self._shard_units)
         if self._pool is None:
-            return [fn(i, *(a[i] for a in per_shard_args))
-                    for i in range(self.num_shards)]
-        futs = [self._pool.submit(fn, i, *(a[i] for a in per_shard_args))
-                for i in range(self.num_shards)]
+            return [fn(s) for s in range(n)]
+        futs = [self._pool.submit(fn, s) for s in range(n)]
         return [f.result() for f in futs]
 
     # -- data path ----------------------------------------------------------
     def lookup(self, params: dict, indices, weights=None, *,
                pre_remapped: bool = False):
-        """Fan the [B, T, L] lookup out by table slice, join, concatenate
-        along the table axis, pool on device — bit-identical to the
-        single-server tiered path."""
+        """Fan the [B, T, L] lookup out by placement unit, join, scatter
+        the per-unit row blocks into one [B, T, L, D] buffer, pool on
+        device — bit-identical to the single-server tiered path."""
         from repro.core.embedding import _pool_rows_core
         self._require_built()
         idx = np.asarray(indices)
-        parts = self._map_shards(
-            lambda i, sl: self.shards[i].lookup(idx[:, sl]),
-            self.table_slices)
-        rows = np.concatenate(parts, axis=1)            # [B, T, L, D]
-        rows_t = jnp.swapaxes(jnp.asarray(rows), 0, 1)  # [T, B, L, D]
+        B, T, L = idx.shape
+        dtype = self.shards[0].cold.tables.dtype
+        out = np.empty((B, T, L, self.shards[0].cold.dim), dtype)
+        valid, self._valid_hint = self._valid_hint, None
+
+        def run_shard(s):
+            for u in self._shard_units[s]:
+                lo, hi = (0, B) if u.chunk is None else \
+                    _chunk_bounds(B, u.chunk[1], u.chunk[0])
+                if lo == hi:
+                    continue
+                if valid is not None:
+                    u.ps.hint_valid(int(np.clip(valid - lo, 0, hi - lo)))
+                rows = u.ps.lookup(idx[lo:hi, u.table_ids])
+                out[lo:hi, u.table_ids] = rows
+
+        self._map_shards(run_shard)
+        rows_t = jnp.swapaxes(jnp.asarray(out), 0, 1)   # [T, B, L, D]
         w_t = (None if weights is None
                else jnp.swapaxes(jnp.asarray(weights), 0, 1))
         # eager on purpose — same 1-ULP rationale as the tiered backend
@@ -188,7 +306,7 @@ class ShardedStorage(EmbeddingStorage):
 
     # -- prefetch -----------------------------------------------------------
     def can_stage(self) -> bool:
-        """All-shards backpressure: staging only fires when every shard has
+        """All-shards backpressure: staging only fires when every unit has
         a free queue slot, keeping the shard queues in lockstep (a staged
         batch is either resident on all shards or on none)."""
         return bool(self.shards) and all(ps.can_stage()
@@ -197,22 +315,32 @@ class ShardedStorage(EmbeddingStorage):
     def stage(self, next_indices: np.ndarray) -> bool:
         self._require_built()
         idx = np.asarray(next_indices)
-        oks = self._map_shards(
-            lambda i, sl: self.shards[i].stage(idx[:, sl]),
-            self.table_slices)
-        return all(oks)
+        B = idx.shape[0]
+
+        def run_shard(s):
+            ok = True
+            for u in self._shard_units[s]:
+                lo, hi = (0, B) if u.chunk is None else \
+                    _chunk_bounds(B, u.chunk[1], u.chunk[0])
+                if lo == hi:
+                    continue
+                ok &= u.ps.stage(idx[lo:hi, u.table_ids])
+            return ok
+
+        return all(self._map_shards(run_shard))
 
     def hint_valid(self, n: int) -> None:
-        for ps in self.shards:
-            ps.hint_valid(n)
+        """Recorded here and applied per unit at the next lookup (replica
+        units see the hint clipped to their batch slice)."""
+        self._valid_hint = int(n)
 
     # -- refresh ------------------------------------------------------------
     def refresh_window(self) -> list:
-        """Per-shard window snapshots (taken on the serving thread)."""
+        """Per-unit window snapshots (taken on the serving thread)."""
         return [list(ps.window) for ps in self.shards]
 
     def plan_refresh(self, window=None):
-        """Pure per-shard planning; helper-thread safe (each shard's
+        """Pure per-unit planning; helper-thread safe (each PS's
         `plan_refresh` only reads the snapshot it is handed)."""
         self._require_built()
         if window is None:
@@ -223,7 +351,7 @@ class ShardedStorage(EmbeddingStorage):
     def install_refresh(self, plan) -> dict:
         self._require_built()
         if plan is None:
-            plan = [None] * self.num_shards
+            plan = [None] * len(self.shards)
         results = [ps.install_refresh(p)
                    for ps, p in zip(self.shards, plan)]
         return {"replanned": any(r["replanned"] for r in results),
@@ -232,9 +360,56 @@ class ShardedStorage(EmbeddingStorage):
     def refresh(self) -> dict:
         return self.install_refresh(self.plan_refresh())
 
+    # -- runtime tuning ------------------------------------------------------
+    def prefetch_depth(self) -> int:
+        return max((ps.prefetch.depth for ps in self.shards), default=0)
+
+    def set_prefetch_depth(self, depth: int) -> bool:
+        """Move every unit's bounded prefetch buffer to `depth` (lockstep,
+        matching the all-shards staging backpressure)."""
+        if not self.shards:
+            return False
+        for ps in self.shards:
+            ps.set_prefetch_depth(depth)
+        return True
+
+    def take_prefetch_window_peak(self) -> int:
+        return max((ps.prefetch.take_window_peak() for ps in self.shards),
+                   default=0)
+
+    def retune_capacities(self, budget_bytes: int) -> Optional[dict]:
+        """Re-split a LIVE device-byte budget into per-unit hot/warm
+        capacities from each unit's traffic window. The budget divides
+        across units by table count (capacities are per-table), so the
+        whole backend stays within it."""
+        self._require_built()
+        total_tables = sum(len(u.table_ids) for u in self._units)
+        results = []
+        for u in self._units:
+            share = int(budget_bytes * len(u.table_ids) / total_tables)
+            results.append(u.ps.retune(share))
+        done = [r for r in results if r is not None]
+        if not done:
+            return None
+        return {"retuned_units": len(done),
+                "hot_rows": max(r["hot_rows"] for r in done),
+                "warm_slots": max(r["warm_slots"] for r in done),
+                "budget_bytes": int(budget_bytes)}
+
     # -- stats & hygiene ----------------------------------------------------
     def stats(self) -> dict:
-        return merge_shard_stats([ps.stats() for ps in self.shards])
+        """One merged report; `per_shard` holds one entry per SHARD (a
+        multi-unit shard's units are pre-merged into its entry)."""
+        per_shard = []
+        for units in self._shard_units:
+            if len(units) == 1:
+                per_shard.append(units[0].ps.stats())
+            else:
+                merged = merge_shard_stats([u.ps.stats() for u in units])
+                merged.pop("per_shard", None)
+                merged.pop("num_shards", None)
+                per_shard.append(merged)
+        return merge_shard_stats(per_shard)
 
     def reset_stats(self) -> None:
         for ps in self.shards:

@@ -87,15 +87,18 @@ class TieredStorage(EmbeddingStorage):
         # a closed async prefetcher cannot stage again (its worker is
         # joined), so staging capabilities drop after close() — sync
         # lookups remain usable, matching ParameterServer.close() semantics
+        # live prefetch depth (not the built config) decides stageability —
+        # the queue-depth auto-tuner may have moved it since build()
         stageable = (self.ps is not None
-                     and self.ps.cfg.prefetch_depth > 0
+                     and self.ps.prefetch.depth > 0
                      and not getattr(self.ps.prefetch, "closed", False))
         return StorageCapabilities(
             device_resident=False,
             stageable=stageable,
             async_prefetch=stageable and self.ps.cfg.async_prefetch,
             refreshable=True,
-            shardable=False)
+            shardable=False,
+            tunable=self.ps is not None)
 
     # -- construction -------------------------------------------------------
     def build(self, params: dict, ps_cfg=None,
@@ -163,6 +166,24 @@ class TieredStorage(EmbeddingStorage):
 
     def refresh(self) -> dict:
         return self.ps.refresh()
+
+    # -- runtime tuning ------------------------------------------------------
+    def prefetch_depth(self) -> int:
+        return 0 if self.ps is None else self.ps.prefetch.depth
+
+    def set_prefetch_depth(self, depth: int) -> bool:
+        if self.ps is None:
+            return False
+        self.ps.set_prefetch_depth(depth)
+        return True
+
+    def take_prefetch_window_peak(self) -> int:
+        return 0 if self.ps is None else self.ps.prefetch.take_window_peak()
+
+    def retune_capacities(self, budget_bytes: int):
+        """Re-size hot/warm tiers under a live budget from the sliding
+        traffic window (None when the window is empty)."""
+        return None if self.ps is None else self.ps.retune(budget_bytes)
 
     def stats(self) -> dict:
         return {} if self.ps is None else self.ps.stats()

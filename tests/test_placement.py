@@ -1,0 +1,690 @@
+"""Frequency-aware shard placement + runtime auto-tuners (PR 4).
+
+Pins the acceptance contract: on a skewed synthetic trace the LPT-balanced
+placement beats the contiguous split's imbalance ratio; sharded lookups
+stay bit-exact under arbitrary AND replicated placements; the queue-depth
+controller converges and can never leave its bound; the `device` backend
+ignores every tuning hook; and the `tools/check_bench.py` CI gate
+hard-fails on schema drift while only warning on timing drift.
+"""
+import importlib.util
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (EmbeddingBagCollection, EmbeddingStageConfig,
+                        make_pattern)
+from repro.core import plan_shard_placement as core_plan_shard_placement
+from repro.core.plan import estimate_device_budget
+from repro.models.dlrm import DLRM, DLRMConfig
+from repro.ps import (AutoTuneConfig, ParameterServer, PSConfig,
+                      QueueDepthController)
+from repro.serving import BatcherConfig, ServingSession
+from repro.storage import (ShardPlacement, estimate_table_loads,
+                           plan_shard_placement)
+
+ROWS, TABLES, DIM, POOL = 256, 6, 16, 6
+# heavy tables stacked at one end => contiguous split is maximally lopsided
+SKEWED = ("one_item", "one_item", "high_hot", "med_hot", "random", "random")
+
+
+def _pats(hotness=SKEWED):
+    return [make_pattern(h, ROWS, seed=t) for t, h in enumerate(hotness)]
+
+
+def _batch(pats, batch, seed):
+    return np.stack([p.sample(batch, POOL, seed=seed * 100 + t)
+                     for t, p in enumerate(pats)], axis=1).astype(np.int32)
+
+
+def _trace(pats, batches=3, batch=8, seed0=50):
+    return np.concatenate([_batch(pats, batch, seed0 + s)
+                           for s in range(batches)], axis=0)
+
+
+def _stage_cfg(storage="device", tables=TABLES):
+    return EmbeddingStageConfig(num_tables=tables, rows=ROWS, dim=DIM,
+                                pooling=POOL, backend="xla",
+                                storage=storage)
+
+
+@pytest.fixture(scope="module")
+def dense_ref():
+    ebc = EmbeddingBagCollection(_stage_cfg("device"))
+    params = ebc.init(jax.random.PRNGKey(0))
+    return ebc, params
+
+
+# ---------------------------------------------------------------------------
+# load estimation + the planner
+# ---------------------------------------------------------------------------
+
+def test_estimate_table_loads_counts_batch_distinct_rows():
+    # table 0: same row everywhere -> 1 distinct/batch; table 1: all rows
+    # distinct -> L distinct/batch
+    trace = np.stack([np.zeros((4, POOL), np.int64),
+                      np.arange(4 * POOL).reshape(4, POOL)], axis=1)
+    loads = estimate_table_loads(trace, row_bytes=8)
+    assert loads[0] == pytest.approx(1 * 8)
+    assert loads[1] == pytest.approx(POOL * 8)
+
+
+def test_balanced_beats_contiguous_on_skewed_trace():
+    """The acceptance assertion: LPT reduces max/mean shard load."""
+    pats = _pats()
+    trace = _trace(pats)
+    loads = estimate_table_loads(trace, row_bytes=DIM * 4)
+    cont = ShardPlacement.contiguous(TABLES, 2, loads=loads)
+    bal = plan_shard_placement(trace, 2, row_bytes=DIM * 4)
+    assert bal.imbalance_ratio() < cont.imbalance_ratio()
+    assert cont.imbalance_ratio() > 1.1      # the mix really is skewed
+    assert bal.imbalance_ratio() < 1.1       # and LPT really fixes it
+    # every table assigned exactly once, to a real shard
+    assert sorted(t for ts in bal.shard_tables for t in ts) \
+        == list(range(TABLES))
+
+
+def test_plan_shard_placement_deterministic_and_clamped():
+    pats = _pats()
+    trace = _trace(pats)
+    a = plan_shard_placement(trace, 3)
+    b = plan_shard_placement(trace, 3)
+    assert a == b                             # fully deterministic
+    # shard count clamps to the table count
+    assert plan_shard_placement(trace, 64).num_shards == TABLES
+    with pytest.raises(ValueError, match="num_shards"):
+        plan_shard_placement(trace, 0)
+
+
+def test_replication_splits_dominant_table_across_distinct_shards():
+    loads = np.array([100.0, 5.0, 5.0, 5.0])
+    trace = _trace(_pats(("random",) * 4), batch=4)[:, :4]
+    plc = plan_shard_placement(trace, 3, loads=loads, replicate_factor=1.0)
+    assert plc.replicated_tables == (0,)
+    owners = plc.replicas[0]
+    assert len(owners) == len(set(owners)) >= 2   # distinct shards
+    # replication restores near-perfect balance despite the 20x outlier
+    assert plc.imbalance_ratio() < 1.1
+    # without the escape hatch the dominant table pins the imbalance
+    no_rep = plan_shard_placement(trace, 3, loads=loads)
+    assert plc.imbalance_ratio() < no_rep.imbalance_ratio()
+
+
+def test_shard_placement_validation():
+    with pytest.raises(ValueError, match="no shard"):
+        ShardPlacement(num_tables=2, num_shards=2,
+                       replicas=((0,), ()), loads=(1.0, 1.0))
+    with pytest.raises(ValueError, match="twice"):
+        ShardPlacement(num_tables=1, num_shards=2,
+                       replicas=((0, 0),), loads=(1.0,))
+    with pytest.raises(ValueError, match="unknown shard"):
+        ShardPlacement(num_tables=1, num_shards=2,
+                       replicas=((5,),), loads=(1.0,))
+    with pytest.raises(ValueError, match="one entry per table"):
+        ShardPlacement(num_tables=2, num_shards=1,
+                       replicas=((0,),), loads=(1.0,))
+
+
+def test_core_plan_exposes_planner_entry():
+    """`plan_shard_placement` is reachable from the planner API surface."""
+    trace = _trace(_pats())
+    plc = core_plan_shard_placement(trace, 2, row_bytes=DIM * 4)
+    assert isinstance(plc, ShardPlacement)
+    assert plc.num_shards == 2
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness under arbitrary / replicated placements
+# ---------------------------------------------------------------------------
+
+def _scrambled_placement(loads):
+    """An adversarial non-contiguous hand placement."""
+    return ShardPlacement(num_tables=TABLES, num_shards=3,
+                          replicas=((2,), (0,), (2,), (1,), (0,), (1,)),
+                          loads=tuple(float(x) for x in loads),
+                          strategy="scrambled")
+
+
+def _replicated_placement(loads):
+    """Tables 4 and 5 (the heavy `random` ones) replicated across shards."""
+    return ShardPlacement(num_tables=TABLES, num_shards=3,
+                          replicas=((0,), (1,), (2,), (0,),
+                                    (0, 1, 2), (1, 2)),
+                          loads=tuple(float(x) for x in loads),
+                          strategy="replicated")
+
+
+@pytest.mark.parametrize("mk_placement,batch", [
+    ("balanced", 8),
+    (_scrambled_placement, 8),
+    (_replicated_placement, 8),
+    (_replicated_placement, 7),    # odd batch: uneven replica chunks
+])
+def test_sharded_bit_exact_under_placements(dense_ref, mk_placement, batch):
+    ebc0, params = dense_ref
+    pats = _pats()
+    trace = _trace(pats)
+    if callable(mk_placement):
+        placement = mk_placement(estimate_table_loads(trace, DIM * 4))
+    else:
+        placement = mk_placement
+    ebc = EmbeddingBagCollection(_stage_cfg("sharded"))
+    ebc.storage.build(params,
+                      PSConfig(hot_rows=32, warm_slots=32,
+                               async_prefetch=True, window_batches=4),
+                      trace=trace, num_shards=3, placement=placement)
+    with ebc.storage:
+        for seed in range(5):
+            idx = _batch(pats, batch, seed=seed)
+            if seed == 1:       # staged payloads must not change values
+                ebc.storage.stage(_batch(pats, batch, seed=2))
+            if seed == 3:       # neither must a mid-stream re-pin
+                ebc.storage.refresh()
+            got = np.asarray(ebc.apply(params, jnp.asarray(idx)))
+            want = np.asarray(ebc0.apply(params, jnp.asarray(idx)))
+            assert np.array_equal(got, want), seed
+        st = ebc.storage.stats()
+        assert (st["hot_hits"] + st["warm_hits"] + st["cold_misses"]
+                == st["total_accesses"])
+        assert len(st["per_shard"]) == 3     # one entry per SHARD
+
+
+def test_replicated_placement_partial_batch_bit_exact(dense_ref):
+    """Regression: a partial (force-flushed) batch whose valid rows end
+    BEFORE a replica's batch slice must serve bit-exactly — the all-padding
+    chunk takes the direct cold path instead of a zero-size recursion."""
+    ebc0, params = dense_ref
+    pats = _pats()
+    trace = _trace(pats)
+    plc = _replicated_placement(estimate_table_loads(trace, DIM * 4))
+    ebc = EmbeddingBagCollection(_stage_cfg("sharded"))
+    ebc.storage.build(params, PSConfig(hot_rows=8, warm_slots=8),
+                      trace=trace, placement=plc)
+    with ebc.storage:
+        idx = _batch(pats, 9, seed=0)
+        # table 4 has 3 replicas -> chunks [0,3), [3,6), [6,9); valid=2
+        # leaves the 2nd and 3rd replica chunks entirely padding
+        ebc.storage.hint_valid(2)
+        got = np.asarray(ebc.apply(params, jnp.asarray(idx)))
+        want = np.asarray(ebc0.apply(params, jnp.asarray(idx)))
+        assert np.array_equal(got, want)
+        assert ebc.storage.stats()["total_accesses"] == 2 * TABLES * POOL
+
+
+def test_replicated_placement_splits_traffic(dense_ref):
+    """Each replica of a replicated table serves a batch slice: per-unit
+    access counts stay consistent with the hint-valid clipping."""
+    _, params = dense_ref
+    pats = _pats()
+    trace = _trace(pats)
+    plc = _replicated_placement(estimate_table_loads(trace, DIM * 4))
+    ebc = EmbeddingBagCollection(_stage_cfg("sharded"))
+    ebc.storage.build(params, PSConfig(hot_rows=8, warm_slots=8),
+                      trace=trace, placement=plc)
+    with ebc.storage:
+        ebc.storage.hint_valid(6)     # 2 padding rows out of 8
+        ebc.apply(params, jnp.asarray(_batch(pats, 8, seed=0)))
+        st = ebc.storage.stats()
+        # 6 valid queries x 6 tables x POOL accesses, replicas or not
+        assert st["total_accesses"] == 6 * TABLES * POOL
+
+
+def test_balanced_placement_requires_trace(dense_ref):
+    _, params = dense_ref
+    ebc = EmbeddingBagCollection(_stage_cfg("sharded"))
+    with pytest.raises(ValueError, match="balanced.*trace"):
+        ebc.storage.build(params, PSConfig(hot_rows=8),
+                          placement="balanced")
+    with pytest.raises(ValueError, match="placement"):
+        ebc.storage.build(params, PSConfig(hot_rows=8),
+                          placement="diagonal")
+    # table-count mismatch is rejected
+    bad = ShardPlacement.contiguous(TABLES + 1, 2)
+    with pytest.raises(ValueError, match="tables"):
+        ebc.storage.build(params, PSConfig(hot_rows=8), placement=bad)
+
+
+def test_rejected_rebuild_leaves_live_backend_serving(dense_ref):
+    """Regression: build() validates the placement BEFORE tearing down the
+    old shards, so a rejected rebuild cannot silently kill prefetch."""
+    ebc0, params = dense_ref
+    pats = _pats()
+    ebc = EmbeddingBagCollection(_stage_cfg("sharded"))
+    ebc.storage.build(params, PSConfig(hot_rows=8, warm_slots=8,
+                                       async_prefetch=True),
+                      trace=_trace(pats), num_shards=2)
+    with ebc.storage:
+        with pytest.raises(ValueError, match="balanced.*trace"):
+            ebc.storage.build(params, PSConfig(hot_rows=8),
+                              placement="balanced")   # forgot trace=
+        caps = ebc.storage.capabilities()
+        assert caps.stageable and caps.async_prefetch   # workers alive
+        idx = _batch(pats, 8, seed=0)
+        got = np.asarray(ebc.apply(params, jnp.asarray(idx)))
+        want = np.asarray(ebc0.apply(params, jnp.asarray(idx)))
+        assert np.array_equal(got, want)
+
+
+def test_contiguous_placement_keeps_table_slices(dense_ref):
+    """The legacy view survives for the legacy placement; balanced
+    placements (generally non-contiguous) leave it empty."""
+    _, params = dense_ref
+    pats = _pats()
+    ebc = EmbeddingBagCollection(_stage_cfg("sharded"))
+    ebc.storage.build(params, PSConfig(hot_rows=8), num_shards=3)
+    assert ebc.storage.table_slices[0].start == 0
+    assert ebc.storage.table_slices[-1].stop == TABLES
+    ebc.storage.build(params, PSConfig(hot_rows=8), num_shards=3,
+                      trace=_trace(pats), placement="balanced")
+    assert ebc.storage.placement.strategy == "balanced"
+    ebc.storage.close()
+
+
+# ---------------------------------------------------------------------------
+# queue-depth controller
+# ---------------------------------------------------------------------------
+
+def test_controller_never_leaves_bound_and_converges():
+    ctl = QueueDepthController(min_depth=1, max_depth=6)
+
+    # synthetic plant: overlap improves with depth, saturating at depth 4
+    def plant(depth):
+        return min(1.0, 0.25 * depth)
+
+    depth = 1
+    seen = []
+    for _ in range(20):
+        depth = ctl.propose(depth, plant(depth), peak_depth=depth)
+        seen.append(depth)
+        assert ctl.min_depth <= depth <= ctl.max_depth
+    # converged: the last proposals are a fixed point inside the dead band
+    assert len(set(seen[-5:])) == 1
+    final = seen[-1]
+    assert ctl.widen_below <= plant(final)
+
+
+def test_controller_widen_narrow_hold():
+    ctl = QueueDepthController(min_depth=1, max_depth=4,
+                               widen_below=0.5, narrow_above=0.95)
+    assert ctl.propose(2, 0.1, peak_depth=2) == 3        # widen
+    assert ctl.propose(4, 0.1, peak_depth=4) == 4        # clamped at max
+    assert ctl.propose(3, 1.0, peak_depth=1) == 2        # narrow: unused
+    assert ctl.propose(3, 1.0, peak_depth=3) == 3        # full queue: hold
+    assert ctl.propose(2, 0.7, peak_depth=2) == 2        # dead band: hold
+    assert ctl.propose(1, 1.0, peak_depth=0) == 1        # clamped at min
+    assert ctl.propose(2, None, peak_depth=0) == 2       # idle: hold
+    assert ctl.propose(99, 0.7, peak_depth=0) == 4       # clamp on entry
+    with pytest.raises(ValueError):
+        QueueDepthController(min_depth=0)
+    with pytest.raises(ValueError):
+        QueueDepthController(widen_below=0.9, narrow_above=0.5)
+
+
+def test_prefetcher_set_depth_runtime():
+    """Depth moves never drop staged work; zero disables staging."""
+    from repro.ps.prefetch import PrefetchQueue, StagedBatch
+    q = PrefetchQueue(depth=2, resolver=lambda t, rows: np.zeros(
+        (len(rows), 2), np.float32))
+
+    def mk(seed):
+        idx = np.full((1, 1, 2), seed, np.int64)
+        return StagedBatch(idx, {0: np.arange(2, dtype=np.int64)}, {})
+
+    assert q.stage(mk(0)) and q.stage(mk(1))
+    assert not q.can_stage()
+    q.set_depth(1)                       # shrink below current occupancy
+    assert len(q) == 2                   # nothing dropped
+    assert not q.can_stage()
+    assert q.consume(np.full((1, 1, 2), 0, np.int64)) is not None
+    assert q.consume(np.full((1, 1, 2), 1, np.int64)) is not None
+    assert q.can_stage()
+    q.set_depth(0)
+    assert not q.can_stage()
+
+
+# ---------------------------------------------------------------------------
+# ParameterServer tier resize / retune
+# ---------------------------------------------------------------------------
+
+def test_resize_tiers_stays_bit_exact():
+    pats = _pats()
+    rng = np.random.default_rng(0)
+    tables = rng.normal(size=(TABLES, ROWS, DIM)).astype(np.float32)
+    ps = ParameterServer(tables, PSConfig(hot_rows=16, warm_slots=16,
+                                          window_batches=4),
+                         trace=_trace(pats))
+    idx = _batch(pats, 8, seed=0)
+    want = tables[np.arange(TABLES)[None, :, None], idx]
+    assert np.array_equal(ps.lookup(idx), want)
+    ps.resize_tiers(48, 8)               # grow hot, shrink warm
+    assert ps.cfg.hot_rows == 48 and ps.num_hot == 48
+    assert np.array_equal(ps.lookup(idx), want)
+    ps.resize_tiers(0, 64)               # hot off entirely
+    assert ps.num_hot == 0
+    assert np.array_equal(ps.lookup(idx), want)
+
+
+def test_retune_plans_from_window_and_respects_budget():
+    pats = _pats()
+    ps = ParameterServer(np.zeros((TABLES, ROWS, DIM), np.float32),
+                         PSConfig(hot_rows=4, warm_slots=4,
+                                  window_batches=8))
+    assert ps.retune(1 << 20) is None    # empty window: nothing to plan
+    for s in range(4):
+        ps.lookup(_batch(pats, 8, seed=s))
+    budget = 64 * 1024
+    result = ps.retune(budget)
+    assert result is not None
+    cap = ps.cfg.capacity_rows()
+    assert TABLES * cap * DIM * 4 <= budget
+    assert cap > 8                       # the budget allows growth
+
+
+# ---------------------------------------------------------------------------
+# session auto-tuning loop (and the device backend staying inert)
+# ---------------------------------------------------------------------------
+
+def _session_model(storage):
+    model = DLRM(DLRMConfig(embedding=_stage_cfg(storage),
+                            bottom_mlp=(32, DIM), top_mlp=(16, 1)))
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+@pytest.mark.parametrize("backend,build_kw", [
+    ("tiered", {}), ("sharded", {"num_shards": 2})])
+def test_session_auto_tunes_depth_within_bounds(backend, build_kw):
+    model, params = _session_model(backend)
+    pats = _pats()
+    model.ebc.storage.build(
+        params, PSConfig(hot_rows=8, warm_slots=8, prefetch_depth=2,
+                         async_prefetch=True, window_batches=4),
+        trace=_trace(pats), **build_kw)
+    assert model.ebc.storage.capabilities().tunable
+    ctl = QueueDepthController(min_depth=1, max_depth=4)
+    with ServingSession(model, params,
+                        batcher=BatcherConfig(max_batch=8, max_wait_s=0.0),
+                        sla_ms=1e6,
+                        auto_tune=AutoTuneConfig(depth_every_batches=2,
+                                                 controller=ctl)) as sess:
+        for b in range(10):
+            dense = np.zeros((8, model.cfg.dense_features), np.float32)
+            sess.submit_batch(dense, _batch(pats, 8, seed=b), qid0=b * 8)
+            if b >= 1:
+                sess.poll()
+        sess.drain()
+        pct = sess.percentiles()
+    assert "prefetch_depth" in pct
+    assert ctl.min_depth <= pct["prefetch_depth"] <= ctl.max_depth
+    assert pct["depth_retunes"] == len(sess.tuner.events)
+    for e in sess.tuner.events:          # every move stayed inside bounds
+        assert ctl.min_depth <= e["to"] <= ctl.max_depth
+
+
+def test_auto_tuner_never_reenables_disabled_staging():
+    """Regression: prefetch_depth=0 is an operator decision; the tuner
+    must not clamp it up to min_depth."""
+    model, params = _session_model("tiered")
+    pats = _pats()
+    model.ebc.storage.build(
+        params, PSConfig(hot_rows=8, warm_slots=8, prefetch_depth=0,
+                         window_batches=4),
+        trace=_trace(pats))
+    assert model.ebc.storage.capabilities().tunable
+    with ServingSession(model, params,
+                        batcher=BatcherConfig(max_batch=8, max_wait_s=0.0),
+                        sla_ms=1e6,
+                        auto_tune=AutoTuneConfig(depth_every_batches=2)
+                        ) as sess:
+        for b in range(6):
+            dense = np.zeros((8, model.cfg.dense_features), np.float32)
+            sess.submit_batch(dense, _batch(pats, 8, seed=b), qid0=b * 8)
+            if b >= 1:
+                sess.poll()
+        sess.drain()
+    assert sess.tuner.events == []
+    assert model.ebc.storage.prefetch_depth() == 0
+
+
+def test_auto_tuner_narrows_from_window_peak_not_lifetime_max():
+    """Regression: narrowing must use the per-window queue peak — the
+    lifetime max_queue_depth would block reclaiming dead slots forever
+    after one burst."""
+    from repro.ps.tuning import AutoTuner
+
+    class FakeStorage:
+        """Minimal tunable storage: full overlap, queue busy only in the
+        first window."""
+
+        def __init__(self):
+            self.depth = 4
+            self.ready = 0
+            self.window_peaks = [4, 1, 1, 1]   # burst, then idle queue
+
+        def capabilities(self):
+            from repro.storage import StorageCapabilities
+            return StorageCapabilities(tunable=True)
+
+        def stats(self):
+            self.ready += 10                   # all consumed buffers ready
+            return {"consume_ready": self.ready, "consume_waited": 0}
+
+        def prefetch_depth(self):
+            return self.depth
+
+        def set_prefetch_depth(self, d):
+            self.depth = d
+            return True
+
+        def take_prefetch_window_peak(self):
+            return self.window_peaks.pop(0) if self.window_peaks else 0
+
+    store = FakeStorage()
+    tuner = AutoTuner(AutoTuneConfig(
+        depth_every_batches=1,
+        controller=QueueDepthController(min_depth=1, max_depth=4)), store)
+    tuner.step()                    # window peak 4 == depth: hold
+    assert store.depth == 4
+    tuner.step()                    # window peak 1 < depth: narrow
+    assert store.depth == 3
+    tuner.step()
+    assert store.depth == 2
+
+
+def test_auto_tuner_snapshot_postdates_warmup_reset():
+    """Regression: a second session on a pre-used storage must not see the
+    pre-warmup counters — negative deltas would fabricate an overlap."""
+    model, params = _session_model("tiered")
+    pats = _pats()
+    model.ebc.storage.build(
+        params, PSConfig(hot_rows=8, warm_slots=8, prefetch_depth=2,
+                         async_prefetch=True, window_batches=4),
+        trace=_trace(pats))
+    # pre-use the storage so its consume counters are non-zero
+    with ServingSession(model, params,
+                        batcher=BatcherConfig(max_batch=8, max_wait_s=0.0),
+                        sla_ms=1e6) as s1:
+        for b in range(4):
+            dense = np.zeros((8, model.cfg.dense_features), np.float32)
+            s1.submit_batch(dense, _batch(pats, 8, seed=b), qid0=b * 8)
+            if b >= 1:
+                s1.poll()
+        s1.drain()
+    model.ebc.storage.build(        # rebuild workers for the next session
+        params, PSConfig(hot_rows=8, warm_slots=8, prefetch_depth=2,
+                         async_prefetch=True, window_batches=4),
+        trace=_trace(pats))
+    sess = ServingSession(model, params,
+                          batcher=BatcherConfig(max_batch=8,
+                                                max_wait_s=0.0),
+                          sla_ms=1e6,
+                          auto_tune=AutoTuneConfig(depth_every_batches=2))
+    try:
+        # the tuner's baseline snapshot postdates the warmup stats reset
+        assert sess.tuner._last == {"consume_ready": 0,
+                                    "consume_waited": 0}
+    finally:
+        sess.close()
+
+
+def test_auto_tuner_treats_nonpositive_delta_as_idle():
+    from repro.ps.tuning import AutoTuner
+    from repro.storage import StorageCapabilities
+
+    class ResettingStorage:
+        """consume counters that go DOWN mid-window (external reset)."""
+
+        def __init__(self):
+            self.depth = 2
+            self.readings = [{"consume_ready": 50, "consume_waited": 0},
+                             {"consume_ready": 0, "consume_waited": 0}]
+
+        def capabilities(self):
+            return StorageCapabilities(tunable=True)
+
+        def stats(self):
+            return self.readings.pop(0) if len(self.readings) > 1 \
+                else self.readings[0]
+
+        def prefetch_depth(self):
+            return self.depth
+
+        def set_prefetch_depth(self, d):
+            self.depth = d
+            return True
+
+        def take_prefetch_window_peak(self):
+            return 0
+
+    store = ResettingStorage()
+    tuner = AutoTuner(AutoTuneConfig(depth_every_batches=1), store)
+    tuner.step()                 # delta = -50: idle window, no action
+    assert tuner.events == [] and store.depth == 2
+
+
+def test_take_window_peak_resets_between_windows():
+    from repro.ps.prefetch import PrefetchQueue, StagedBatch
+    q = PrefetchQueue(depth=4, resolver=lambda t, rows: np.zeros(
+        (len(rows), 2), np.float32))
+
+    def mk(seed):
+        idx = np.full((1, 1, 2), seed, np.int64)
+        return StagedBatch(idx, {0: np.arange(2, dtype=np.int64)}, {})
+
+    q.stage(mk(0)); q.stage(mk(1))
+    assert q.take_window_peak() == 2
+    q.consume(np.full((1, 1, 2), 0, np.int64))
+    q.consume(np.full((1, 1, 2), 1, np.int64))
+    # new window starts from the occupancy at the last take (2), but the
+    # reset baseline is the occupancy at call time
+    assert q.take_window_peak() == 2   # baseline was len(q)==2 at reset
+    assert q.take_window_peak() == 0   # queue empty since
+    assert q.max_queue_depth == 2      # lifetime max untouched
+
+
+def test_device_backend_ignores_tuning_hooks():
+    """Regression: tuning on `device` is inert — hooks are no-ops, the
+    session loop never errors, and no tuning keys leak into the report."""
+    model, params = _session_model("device")
+    store = model.ebc.storage
+    assert not store.capabilities().tunable
+    assert store.prefetch_depth() == 0
+    assert store.set_prefetch_depth(7) is False
+    assert store.prefetch_depth() == 0
+    assert store.retune_capacities(1 << 30) is None
+    with ServingSession(model, params,
+                        batcher=BatcherConfig(max_batch=8, max_wait_s=0.0),
+                        sla_ms=1e6, auto_tune=True) as sess:
+        assert sess.tuner is not None and not sess.tuner.enabled
+        dense = np.zeros((8, model.cfg.dense_features), np.float32)
+        sess.submit_batch(dense, _batch(_pats(), 8, seed=0))
+        sess.drain()
+        pct = sess.percentiles()
+    assert sess.tuner.events == []
+    assert "prefetch_depth" not in pct and "depth_retunes" not in pct
+
+
+def test_capacity_retune_through_session():
+    model, params = _session_model("tiered")
+    pats = _pats()
+    model.ebc.storage.build(
+        params, PSConfig(hot_rows=4, warm_slots=4, window_batches=8),
+        trace=_trace(pats))
+    cfg = AutoTuneConfig(depth_every_batches=0, capacity_every_batches=3,
+                         budget_fallback_bytes=64 * 1024 * TABLES,
+                         budget_fraction=1.0)
+    with ServingSession(model, params,
+                        batcher=BatcherConfig(max_batch=8, max_wait_s=0.0),
+                        sla_ms=1e6, auto_tune=cfg) as sess:
+        for b in range(8):
+            dense = np.zeros((8, model.cfg.dense_features), np.float32)
+            sess.submit_batch(dense, _batch(pats, 8, seed=b), qid0=b * 8)
+            if b >= 1:
+                sess.poll()
+        sess.drain()
+        pct = sess.percentiles()
+    caps = [e for e in sess.tuner.events if e["kind"] == "capacity"]
+    assert caps and pct["capacity_retunes"] == len(caps)
+    # capacities actually moved toward the (much larger) budget
+    assert model.ebc.storage.ps.cfg.capacity_rows() > 8
+
+
+def test_estimate_device_budget_fallback_and_stats():
+    class FakeDev:
+        def memory_stats(self):
+            return {"bytes_limit": 1000, "bytes_in_use": 200}
+
+    assert estimate_device_budget(fraction=0.5, device=FakeDev()) == 400
+
+    class NoStats:
+        def memory_stats(self):
+            return None
+
+    assert estimate_device_budget(fallback_bytes=123,
+                                  device=NoStats()) == 123
+    assert estimate_device_budget(device=NoStats()) is None
+
+
+# ---------------------------------------------------------------------------
+# the CI gate itself (tools/check_bench.py)
+# ---------------------------------------------------------------------------
+
+def _load_check_bench():
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "tools", "check_bench.py")
+    spec = importlib.util.spec_from_file_location("check_bench", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_check_bench_schema_vs_drift():
+    cb = _load_check_bench()
+    base = {("s", "a", "bit_exact"): True,
+            ("s", "a", "p99_ms"): 10.0,
+            ("s", "a", "hit"): 0.8,
+            ("s", "a", "caps"): "stageable"}
+    # identical -> clean
+    errors, warnings = cb.compare(base, dict(base), 4.0, 0.5)
+    assert errors == [] and warnings == []
+    # timing drift -> warning only; bool flip / missing / type -> errors
+    new = dict(base)
+    new[("s", "a", "p99_ms")] = 100.0
+    errors, warnings = cb.compare(base, new, 4.0, 0.5)
+    assert not errors and len(warnings) == 1
+    new = dict(base)
+    new[("s", "a", "bit_exact")] = False
+    del new[("s", "a", "caps")]
+    new[("s", "a", "hit")] = "high"
+    errors, _ = cb.compare(base, new, 4.0, 0.5)
+    assert len(errors) == 3
+    # the semantic placement invariant
+    good = {("sharded_balance", "sharded_balance/balanced",
+             "imbalance"): 1.4,
+            ("sharded_balance", "sharded_balance/contiguous",
+             "imbalance"): 1.0}
+    errors, _ = cb.compare({}, good, 4.0, 0.5)
+    assert any("not below contiguous" in e for e in errors)

@@ -1,0 +1,139 @@
+#!/usr/bin/env python3
+"""Benchmark regression gate for CI (`bench-guard` job).
+
+Compares a fresh `benchmarks/run.py --json` output against the checked-in
+`benchmarks/baseline.json`:
+
+  hard failures (exit 1) — schema drift: wrong schema_version, a baseline
+      record (sweep, name, metric) missing from the new output, a value
+      changing type, or a deterministic value changing at all (booleans
+      like `bit_exact`, strings like the capability descriptor, and the
+      exact-count metric `served`). Also the one semantic invariant the
+      placement work exists for: in the `sharded_balance` sweep, the
+      balanced placement's imbalance ratio must stay below contiguous.
+  warnings (exit 0)      — numeric drift: timing metrics (units us/ms/s)
+      outside a generous x`--timing-factor` band, other numerics (hit
+      rates, overlap fractions — thread-race dependent) moving more than
+      `--value-tol` relative / 0.25 absolute. Emitted as `::warning::`
+      lines so they annotate the PR without blocking it.
+
+New records absent from the baseline are reported as info — refresh the
+baseline (`benchmarks/run.py --sweep storage_backends --sweep
+sharded_balance --json benchmarks/baseline.json`) when adding sweeps.
+
+Stdlib only (runs before `pip install` in CI if need be).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+SCHEMA_VERSION = 1
+# metrics whose values are deterministic by construction: any change is a
+# regression, not noise
+EXACT_METRICS = {"bit_exact", "served"}
+
+
+def _load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        sys.exit(f"::error::cannot read {path}: {e}")
+    if data.get("schema_version") != SCHEMA_VERSION:
+        sys.exit(f"::error::{path}: schema_version "
+                 f"{data.get('schema_version')!r} != {SCHEMA_VERSION}")
+    out = {}
+    for r in data.get("records", []):
+        try:
+            out[(r["sweep"], r["name"], r["metric"])] = r["value"]
+        except (KeyError, TypeError):
+            sys.exit(f"::error::{path}: malformed record {r!r}")
+    if not out:
+        sys.exit(f"::error::{path}: no records")
+    return out
+
+
+def _kind(v) -> str:
+    if isinstance(v, bool):
+        return "bool"
+    if isinstance(v, (int, float)):
+        return "number"
+    return "string"
+
+
+def _is_timing(metric: str) -> bool:
+    return (metric == "us_per_call" or metric.endswith("_us")
+            or metric.endswith("_ms") or metric.endswith("_s"))
+
+
+def compare(base: dict, new: dict, timing_factor: float,
+            value_tol: float) -> tuple[list[str], list[str]]:
+    """Returns (errors, warnings)."""
+    errors, warnings = [], []
+    for key, bval in sorted(base.items()):
+        label = f"{key[1]} [{key[2]}]"
+        if key not in new:
+            errors.append(f"missing record: sweep={key[0]} name={key[1]} "
+                          f"metric={key[2]} (schema drift)")
+            continue
+        nval = new[key]
+        if _kind(bval) != _kind(nval):
+            errors.append(f"{label}: type changed "
+                          f"{_kind(bval)} -> {_kind(nval)}")
+            continue
+        if _kind(bval) != "number" or key[2] in EXACT_METRICS:
+            if bval != nval:
+                errors.append(f"{label}: {bval!r} -> {nval!r} "
+                              f"(deterministic value changed)")
+            continue
+        if _is_timing(key[2]):
+            lo, hi = bval / timing_factor, bval * timing_factor
+            if not (lo <= nval <= hi) and abs(nval - bval) > 1e-9:
+                warnings.append(f"{label}: timing {bval:g} -> {nval:g} "
+                                f"(outside x{timing_factor:g} band)")
+        else:
+            if abs(nval - bval) > max(0.25, value_tol * abs(bval)):
+                warnings.append(f"{label}: {bval:g} -> {nval:g} "
+                                f"(drift > {value_tol:.0%} rel / 0.25 abs)")
+    extra = sorted(set(new) - set(base))
+    for key in extra:
+        print(f"info: new record not in baseline: {key}")
+
+    # semantic invariant: balanced placement must beat contiguous
+    def imb(records, placement):
+        return records.get(("sharded_balance",
+                            f"sharded_balance/{placement}", "imbalance"))
+    b, c = imb(new, "balanced"), imb(new, "contiguous")
+    if b is not None and c is not None and not b < c:
+        errors.append(f"sharded_balance: balanced imbalance {b:g} is not "
+                      f"below contiguous {c:g} — the placement planner "
+                      f"regressed")
+    return errors, warnings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("new", help="fresh benchmarks/run.py --json output")
+    ap.add_argument("--baseline", default="benchmarks/baseline.json")
+    ap.add_argument("--timing-factor", type=float, default=4.0,
+                    help="allowed timing ratio band (default: 4x either "
+                         "way — CI runners are noisy)")
+    ap.add_argument("--value-tol", type=float, default=0.5,
+                    help="relative drift tolerance for non-timing numerics")
+    args = ap.parse_args(argv)
+    base, new = _load(args.baseline), _load(args.new)
+    errors, warnings = compare(base, new, args.timing_factor,
+                               args.value_tol)
+    for w in warnings:
+        print(f"::warning::bench drift: {w}")
+    for e in errors:
+        print(f"::error::bench guard: {e}")
+    print(f"check_bench: {len(base)} baseline records, {len(new)} new, "
+          f"{len(warnings)} warning(s), {len(errors)} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
