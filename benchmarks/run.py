@@ -24,6 +24,7 @@ import argparse
 import json
 import os
 import sys
+import time
 
 import numpy as np
 import jax
@@ -621,12 +622,143 @@ def sharded_balance():
              f"served={pct['served']} p99_ms={pct['p99_ms']:.2f}")
 
 
+def sharded_migration():
+    """Live placement: load-aware replica routing + mid-serving migration.
+
+    Routing half — a replicated table with one synthetically slow replica
+    (a per-row sleep models a contended shard). `route_equal` serves the
+    legacy equal slices; `route_aware` lets the session auto-tuner fold
+    observed per-replica service cost into the `ReplicaRouter` every 2
+    batches, shifting the batch split off the slow copy. The bench-guard
+    invariant: routed p99 below equal p99, and the slow replica's final
+    batch share (`slow_frac`, deterministic up to EWMA of a ~100x injected
+    cost gap) below the equal 0.5.
+
+    Migration half — the skewed table mix from `sharded_balance` served on
+    a contiguous placement with a migration threshold armed; the live
+    window crosses it, `plan_migration`/`install_migration` swap the
+    placement build-before-teardown mid-stream, and every batch before,
+    during, and after the swap is checked bit-exact vs the dense gather
+    (`bit_exact` is the hard CI record).
+    """
+    from repro.ps import AutoTuneConfig, PSConfig
+    from repro.serving import BatcherConfig, ServingSession
+    from repro.storage import ShardPlacement, estimate_table_loads
+    rows, dim, batch, pool = 2000, 16, 32, 10
+
+    def mk_model(backend, t_count):
+        cfg = DLRMConfig(embedding=EmbeddingStageConfig(
+            num_tables=t_count, rows=rows, dim=dim, pooling=pool,
+            backend="xla", storage=backend),
+            bottom_mlp=(32, dim), top_mlp=(16, 1))
+        return DLRM(cfg)
+
+    # -- routing: slow replica sheds load ---------------------------------
+    hotness = ("random", "high_hot", "med_hot", "low_hot")
+    t_count = len(hotness)
+    pats = [make_pattern(h, rows, seed=t) for t, h in enumerate(hotness)]
+
+    def mk(seed):
+        return np.stack([p.sample(batch, pool, seed=seed * 100 + t)
+                         for t, p in enumerate(pats)],
+                        axis=1).astype(np.int32)
+
+    trace = np.concatenate([mk(s) for s in range(2)], axis=0)
+    loads = estimate_table_loads(trace, dim * 4)
+    plc = ShardPlacement(num_tables=t_count, num_shards=2,
+                         replicas=((0, 1), (0,), (1,), (1,)),
+                         loads=tuple(float(x) for x in loads),
+                         strategy="replicated")
+    ref_model = mk_model("device", t_count)
+    params = ref_model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    for mode in ("equal", "aware"):
+        model = mk_model("sharded", t_count)
+        store = model.ebc.storage
+        store.build(params,
+                    PSConfig(hot_rows=rows // 10, warm_slots=rows // 10,
+                             window_batches=8, async_prefetch=True),
+                    trace=trace, placement=plc)
+        # replica k=1 of the replicated table pays a per-row penalty
+        slow = next(u for u in store._units
+                    if u.chunk is not None and u.chunk[0] == 1)
+        real_lookup = slow.ps.lookup
+        slow.ps.lookup = lambda idx: (time.sleep(idx.shape[0] * 2e-3),
+                                      real_lookup(idx))[1]
+        t_rep = int(slow.table_ids[0])
+        # converge the router BEFORE the measured window (in `aware` mode):
+        # the p99 comparison is steady-state routing vs steady-state equal
+        # slicing, not the one-window learning transient
+        for step in range(6):
+            model.embedding_only(params, jnp.asarray(mk(step + 30)))
+            if mode == "aware" and step % 2 == 1:
+                store.update_routing()
+        tune = (AutoTuneConfig(depth_every_batches=0, route_every_batches=2)
+                if mode == "aware" else None)
+        sess = ServingSession(
+            model, params,
+            batcher=BatcherConfig(max_batch=batch, max_wait_s=0.0),
+            sla_ms=1e6, auto_tune=tune)
+        for b in range(8):
+            dense = rng.standard_normal(
+                (batch, model.cfg.dense_features)).astype(np.float32)
+            sess.submit_batch(dense, mk(b + 10))
+            if b >= 1:
+                sess.poll()
+        sess.drain()
+        idx = jnp.asarray(mk(7))
+        exact = bool(np.array_equal(
+            np.asarray(model.embedding_only(params, idx)),
+            np.asarray(ref_model.embedding_only(params, idx))))
+        pct = sess.percentiles()
+        slow_frac = float(store._routers[t_rep].fractions()[1])
+        sess.close()
+        emit(f"sharded_migration/route_{mode}", "",
+             f"bit_exact={exact} served={pct['served']} "
+             f"slow_frac={slow_frac:.4f} p99_ms={pct['p99_ms']:.2f} "
+             f"mean_batch_ms={pct['mean_batch_ms']:.2f}")
+
+    # -- migration: placement follows traffic drift, bit-exact ------------
+    hotness = ("one_item", "one_item", "high_hot", "high_hot",
+               "med_hot", "low_hot", "random", "random")
+    t_count = len(hotness)
+    pats = [make_pattern(h, rows, seed=t) for t, h in enumerate(hotness)]
+    trace = np.concatenate([mk(s) for s in range(2)], axis=0)
+    ref_model = mk_model("device", t_count)
+    params = ref_model.init(jax.random.PRNGKey(0))
+    model = mk_model("sharded", t_count)
+    store = model.ebc.storage
+    store.build(params,
+                PSConfig(hot_rows=rows // 10, warm_slots=rows // 10,
+                         window_batches=8, async_prefetch=True),
+                trace=trace, num_shards=2, placement="contiguous",
+                migration_threshold=1.1)
+
+    def check(seed):
+        idx = jnp.asarray(mk(seed))
+        return bool(np.array_equal(
+            np.asarray(model.embedding_only(params, idx)),
+            np.asarray(ref_model.embedding_only(params, idx))))
+
+    exact = all(check(s) for s in range(4))           # before (fills window)
+    plan = store.plan_migration()
+    exact &= check(4)                                 # during (plan pending)
+    res = store.install_migration(plan) if plan else {"migrated": False}
+    exact &= all(check(s) for s in range(5, 9))       # after the swap
+    store.close()
+    emit("sharded_migration/live_migration", "",
+         f"bit_exact={exact} migrated={res.get('migrated', False)} "
+         f"imb_before={res.get('imbalance_before', 0.0):.4f} "
+         f"imb_after={res.get('imbalance_after', 0.0):.4f}")
+
+
 ALL = [tab3_unique_access, fig5_coverage, fig1_embedding_contribution,
        fig6_pipeline_sweep, fig9_prefetch_distance, fig11_l2p_pooling,
        fig12_embedding_speedup, fig12_measured_cpu, fig13_e2e_speedup,
        fig14_gap, fig15_buffer_schemes, fig16_no_optmt, fig17_heterogeneous,
        tab45_microarch, tiered_ps_capacity_sweep, tiered_ps_sync_vs_async,
-       tiered_ps_autotune, storage_backends, sharded_balance]
+       tiered_ps_autotune, storage_backends, sharded_balance,
+       sharded_migration]
 
 
 def main(argv: list[str] | None = None) -> None:

@@ -34,7 +34,7 @@ from repro import storage as storage_registry
 from repro.core import EmbeddingStageConfig
 from repro.data import DLRMQueryStream
 from repro.models.dlrm import DLRM, DLRMConfig
-from repro.ps import PSConfig
+from repro.ps import AutoTuneConfig, PSConfig
 from repro.serving import (BatcherConfig, InferenceServer, Query,
                            ServingSession)
 
@@ -72,6 +72,17 @@ def parse_args():
                     help="runtime queue-depth auto-tuning from observed "
                          "consume_overlap_frac (tiered/sharded; inert on "
                          "device)")
+    ap.add_argument("--route-every", type=int, default=0,
+                    help="sharded: re-split replicated tables' batch "
+                         "slices from observed per-replica service cost "
+                         "every N batches (0 = equal slices)")
+    ap.add_argument("--migrate-every", type=int, default=0,
+                    help="sharded: re-plan table placement from the live "
+                         "traffic window every N batches and swap it in "
+                         "past --migrate-threshold (0 = off)")
+    ap.add_argument("--migrate-threshold", type=float, default=1.25,
+                    help="live imbalance ratio that justifies a "
+                         "mid-serving placement migration")
     ap.add_argument("--warm-backing", choices=("host", "device"),
                     default="host",
                     help="tiered/sharded: warm-cache payload backing")
@@ -126,6 +137,13 @@ def run_session(args, hotness) -> tuple[dict, int, float]:
         if placement is not None:
             # the planner's shard load table (estimated from the trace)
             print(placement.describe(), flush=True)
+    auto_tune = (AutoTuneConfig(
+        depth_every_batches=8 if args.auto_tune else 0,
+        route_every_batches=args.route_every,
+        migrate_every_batches=args.migrate_every,
+        migrate_threshold=args.migrate_threshold)
+        if (args.auto_tune or args.route_every or args.migrate_every)
+        else None)
     with ServingSession(
             model, params,
             batcher=BatcherConfig(max_batch=args.batch, max_wait_s=0.0),
@@ -133,7 +151,7 @@ def run_session(args, hotness) -> tuple[dict, int, float]:
             refresh_every_batches=(0 if device_resident
                                    else args.refresh_every),
             async_refresh=args.async_mode and not device_resident,
-            auto_tune=args.auto_tune) as sess:
+            auto_tune=auto_tune) as sess:
         # keep one batch queued ahead of the executing one so the generic
         # _stage_next() sees the full next batch and prefetch overlap fires
         submitted = 0
@@ -233,6 +251,10 @@ def main():
             if "prefetch_depth" in pct:
                 line += (f" depth={pct['prefetch_depth']} "
                          f"(retunes={pct['depth_retunes']})")
+            if "migrations" in pct:
+                line += f" migrations={pct['migrations']}"
+            if "routing_updates" in pct:
+                line += f" reroutes={pct['routing_updates']}"
         else:
             line += f" emb_share~{min(emb_share, 1.0):.0%}"
         print(line, flush=True)

@@ -7,4 +7,5 @@ from repro.core.hot_cache import (HotPlan, build_plan, identity_plan,
                                   plan_from_trace, profile_counts)
 from repro.core.plan import (EmbeddingPlanReport, TierCapacityPlan,
                              estimate_device_budget, plan_embedding_stage,
-                             plan_shard_placement, plan_tier_capacities)
+                             plan_shard_migration, plan_shard_placement,
+                             plan_tier_capacities)

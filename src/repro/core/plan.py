@@ -212,3 +212,17 @@ def plan_shard_placement(trace: np.ndarray, num_shards: int, **kwargs):
     """
     from repro.storage.placement import plan_shard_placement as _plan
     return _plan(trace, num_shards, **kwargs)
+
+
+def plan_shard_migration(old_placement, trace: np.ndarray, **kwargs):
+    """Planner-API entry for OFFLINE migration what-if analysis: re-cost a
+    serving `ShardPlacement` under a fresh traffic trace and return a
+    `repro.storage.placement.MigrationPlan` (which tables move, imbalance
+    before/after) — or None when the placement still holds up. The live
+    path is `ShardedStorage.plan_migration()`/`install_migration()`
+    (driven by `ServingSession(auto_tune=...)`); this entry lets capacity
+    planning ask the same question from a recorded trace without a built
+    backend. Same thin-delegation rationale as `plan_shard_placement`.
+    """
+    from repro.storage.placement import plan_migration as _plan
+    return _plan(old_placement, trace, **kwargs)

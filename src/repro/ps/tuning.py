@@ -21,7 +21,25 @@ purely through `EmbeddingStorage` protocol verbs so any tunable backend
                    re-sizes hot/warm tiers from its sliding traffic window
                    (`storage.retune_capacities`).
 
-`ServingSession(auto_tune=AutoTuneConfig(...))` drives both; see
+Two more controllers make the PLACEMENT itself live, for backends that
+report the `migratable` capability (`sharded`; everything else stays
+inert):
+
+  replica routing — every `route_every_batches` executed batches
+                   `storage.update_routing()` folds the window's observed
+                   per-replica service costs into each replicated table's
+                   `ReplicaRouter`, shifting batch slices away from slow
+                   or contended replicas (equal slices until the first
+                   observation).
+  live migration — every `migrate_every_batches` executed batches
+                   `storage.plan_migration()` re-plans table placement
+                   from the live traffic window; past the imbalance
+                   threshold, `storage.install_migration()` swaps the new
+                   placement in build-before-teardown (a failed or
+                   rejected migration always leaves the old units
+                   serving).
+
+`ServingSession(auto_tune=AutoTuneConfig(...))` drives all four; see
 docs/serving.md for the operator guide (what the signals mean, how to pin
 a depth manually).
 """
@@ -100,6 +118,18 @@ class AutoTuneConfig:
     # used when the runtime exposes no memory stats (CPU backends); None
     # skips the capacity step entirely in that case
     budget_fallback_bytes: Optional[int] = None
+    # re-split replicated tables' batch slices from observed per-replica
+    # service cost every N executed batches (0 = off; `migratable`
+    # backends only — a routing move flushes staged prefetch batches)
+    route_every_batches: int = 0
+    # re-plan table placement from the live traffic window every N
+    # executed batches and swap it in when the imbalance threshold is
+    # crossed (0 = off; the swap drops the old units' warm caches, so
+    # opt in like capacity retuning)
+    migrate_every_batches: int = 0
+    # live imbalance ratio that triggers a migration; None defers to the
+    # backend's build-time `migration_threshold` (or its default)
+    migrate_threshold: Optional[float] = None
 
 
 class AutoTuner:
@@ -115,10 +145,15 @@ class AutoTuner:
     def __init__(self, cfg: AutoTuneConfig, storage):
         self.cfg = cfg
         self.storage = storage
-        self.enabled = storage.capabilities().tunable
+        caps = storage.capabilities()
+        self.enabled = caps.tunable
+        # routing/migration additionally need the migratable capability
+        # (device AND a closed backend both stay inert)
+        self.migratable = caps.migratable
         self.batches = 0
         self.events: list[dict] = []
         self._last = self._snapshot() if self.enabled else {}
+        self._last_depth = storage.prefetch_depth() if self.enabled else 0
 
     def _snapshot(self) -> dict:
         s = self.storage.stats()
@@ -129,6 +164,7 @@ class AutoTuner:
         if not self.enabled:
             return                      # device et al.: inert by design
         self.batches += 1
+        self._last_depth = self.storage.prefetch_depth()
         c = self.cfg
         if c.depth_every_batches and \
                 self.batches % c.depth_every_batches == 0:
@@ -136,6 +172,12 @@ class AutoTuner:
         if c.capacity_every_batches and \
                 self.batches % c.capacity_every_batches == 0:
             self._capacity_step()
+        if self.migratable and c.route_every_batches and \
+                self.batches % c.route_every_batches == 0:
+            self._route_step()
+        if self.migratable and c.migrate_every_batches and \
+                self.batches % c.migrate_every_batches == 0:
+            self._migrate_step()
 
     def _depth_step(self) -> None:
         now = self._snapshot()
@@ -168,14 +210,47 @@ class AutoTuner:
             self.events.append({"kind": "capacity", "batch": self.batches,
                                 **result})
 
+    def _route_step(self) -> None:
+        """Fold the window's per-replica service costs into the backend's
+        replica routers (serving thread — a routing move flushes staged
+        batches, which must not race an in-flight fan-out)."""
+        result = self.storage.update_routing()
+        if result is not None and result.get("changed"):
+            self.events.append({"kind": "routing", "batch": self.batches,
+                                "fractions": result["fractions"]})
+
+    def _migrate_step(self) -> None:
+        """Re-plan placement from the live window; install only past the
+        threshold. A None plan (balanced enough / empty window) is the
+        normal case and logs nothing."""
+        plan = self.storage.plan_migration(
+            threshold=self.cfg.migrate_threshold)
+        if plan is None:
+            return
+        result = self.storage.install_migration(plan)
+        if result.get("migrated"):
+            self.events.append({"kind": "migration",
+                                "batch": self.batches, **result})
+
     def summary(self) -> dict:
         """Merged into `ServingSession.percentiles()` when tuning ran."""
         if not self.enabled:
             return {}
-        out = {"prefetch_depth": self.storage.prefetch_depth(),
+        # a backend closed since the last step legitimately reports depth
+        # 0; the summary wants the depth the loop actually served at
+        depth = (self.storage.prefetch_depth()
+                 if self.storage.capabilities().tunable
+                 else self._last_depth)
+        out = {"prefetch_depth": depth,
                "depth_retunes": sum(e["kind"] == "depth"
                                     for e in self.events)}
         cap = [e for e in self.events if e["kind"] == "capacity"]
         if self.cfg.capacity_every_batches:
             out["capacity_retunes"] = len(cap)
+        if self.migratable and self.cfg.migrate_every_batches:
+            out["migrations"] = sum(e["kind"] == "migration"
+                                    for e in self.events)
+        if self.migratable and self.cfg.route_every_batches:
+            out["routing_updates"] = sum(e["kind"] == "routing"
+                                         for e in self.events)
         return out

@@ -67,6 +67,7 @@ class ServingSession:
             refresh_every_batches=refresh_every_batches,
             async_refresh=async_refresh)
         self._closed = False
+        self._next_qid = 0
         if warmup:
             self._warmup(batcher.max_batch)
         # runtime auto-tuning (queue depth / tier capacity): driven from
@@ -109,13 +110,24 @@ class ServingSession:
     # -- serving loop (delegation) ------------------------------------------
     def submit(self, query: Query) -> None:
         self.server.submit(query)
+        # keep the auto-advancing submit_batch counter ahead of manually
+        # assigned qids so mixing the two surfaces never reuses an id
+        self._next_qid = max(self._next_qid, query.qid + 1)
 
     def submit_batch(self, dense: np.ndarray, indices: np.ndarray,
-                     qid0: int = 0) -> None:
-        """Convenience: enqueue one [B, ...] batch as B queries."""
+                     qid0: Optional[int] = None) -> None:
+        """Convenience: enqueue one [B, ...] batch as B queries.
+
+        Query ids auto-advance from the last issued one, so consecutive
+        calls never emit duplicate qids into latency accounting (the old
+        `qid0=0` default made every batch reuse ids 0..B-1). Passing an
+        explicit `qid0` re-bases the counter."""
+        if qid0 is None:
+            qid0 = self._next_qid
         for i in range(len(dense)):
             self.server.submit(Query(qid=qid0 + i, dense=dense[i],
                                      indices=indices[i]))
+        self._next_qid = qid0 + len(dense)
 
     def poll(self, force: bool = False) -> int:
         served = self.server.poll(force=force)

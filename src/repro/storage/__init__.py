@@ -13,6 +13,10 @@ Public surface:
   `ShardPlacement` / `plan_shard_placement` / `estimate_table_loads`
                         — frequency-aware table-to-shard assignment (LPT
                           balancing + replication escape hatch).
+  `MigrationPlan` / `plan_migration` / `ReplicaRouter`
+                        — live placement: traffic-drift migration planning
+                          (applied build-before-teardown by the sharded
+                          backend) and cost-proportional replica routing.
   `require_capability` / `CapabilityError`
                         — fail fast on capability mismatch.
 
@@ -21,8 +25,9 @@ operator guide + old→new API migration table.
 """
 from repro.storage.base import (CapabilityError, EmbeddingStorage,
                                 StorageCapabilities, require_capability)
-from repro.storage.placement import (ShardPlacement, estimate_table_loads,
-                                     plan_shard_placement)
+from repro.storage.placement import (MigrationPlan, ReplicaRouter,
+                                     ShardPlacement, estimate_table_loads,
+                                     plan_migration, plan_shard_placement)
 from repro.storage.registry import (UnknownBackendError, available, create,
                                     register, resolve, unregister)
 # importing the backend modules registers them
@@ -34,4 +39,5 @@ __all__ = ["CapabilityError", "EmbeddingStorage", "StorageCapabilities",
            "require_capability", "UnknownBackendError", "available",
            "create", "register", "resolve", "unregister", "DeviceStorage",
            "TieredStorage", "ShardedStorage", "ShardPlacement",
-           "estimate_table_loads", "plan_shard_placement"]
+           "estimate_table_loads", "plan_shard_placement",
+           "MigrationPlan", "ReplicaRouter", "plan_migration"]

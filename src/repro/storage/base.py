@@ -62,6 +62,12 @@ class StorageCapabilities:
     # budget into tier capacities. False (the default) means the hooks are
     # inert no-ops — the auto-tuner skips the backend entirely.
     tunable: bool = False
+    # live placement hooks: plan_migration()/install_migration() can
+    # re-plan table placement from the traffic window and swap it in
+    # build-before-teardown, and update_routing() re-splits replicated
+    # tables' batch slices by observed replica cost. False (the default)
+    # means all three are inert no-ops.
+    migratable: bool = False
 
     def describe(self) -> str:
         on = [f.name for f in dataclasses.fields(self)
@@ -197,6 +203,28 @@ class EmbeddingStorage(abc.ABC):
         fed a headroom estimate instead of a static byte count). None =
         nothing to retune (the inert default)."""
         return None
+
+    # -- live placement hooks -----------------------------------------------
+    def update_routing(self) -> Optional[dict]:
+        """Refresh load-aware replica routing from the latest window of
+        per-replica service-cost observations. None = nothing to route
+        (the inert default — backends without replicated placement)."""
+        return None
+
+    def plan_migration(self, window: Any = None, *,
+                       threshold: Optional[float] = None) -> Any:
+        """Phase 1 of live migration (pure, helper-thread safe): re-plan
+        table placement from the live traffic window; None (the inert
+        default) when the placement is fine — migration is the exception."""
+        return None
+
+    def install_migration(self, plan: Any) -> dict:
+        """Phase 2 of live migration (serving thread only): apply a
+        `plan_migration` result build-before-teardown — the new units are
+        constructed and swapped in atomically BEFORE the old ones close,
+        so a failed or rejected migration always leaves the old backend
+        serving. Returns at least {'migrated': bool}."""
+        return {"migrated": False}
 
     # -- stats & hygiene ----------------------------------------------------
     def stats(self) -> dict:

@@ -28,12 +28,37 @@ placement — never changes served values.
 The result is a `ShardPlacement`: a pure, picklable description consumed by
 `ShardedStorage.build(placement=...)` and exposed through the planner API
 as `repro.core.plan.plan_shard_placement`.
+
+Two serving-time companions make the placement *live* instead of
+build-time-frozen (the HugeCTR inference PS re-balances its GPU cache
+online for the same reason; production skew drifts on the timescale of
+minutes):
+
+  `plan_migration`   — re-run the planner on a LIVE traffic window and,
+                       when the current placement's imbalance under the
+                       fresh loads exceeds a threshold AND the re-planned
+                       placement wins by a material margin, emit a
+                       `MigrationPlan` (which tables move or change
+                       replica count). `ShardedStorage.install_migration`
+                       applies it build-before-teardown.
+  `ReplicaRouter`    — per-replicated-table batch splitter: instead of
+                       equal slices, each replica's share of the batch is
+                       proportional to the inverse of its observed service
+                       cost (EWMA of per-unit lookup seconds per row), so
+                       a slow or contended replica sheds load. A `min_frac`
+                       floor keeps a trickle of traffic on every replica so
+                       costs stay observable and a recovered replica can
+                       win its share back.
 """
 from __future__ import annotations
 
 import dataclasses
 
 import numpy as np
+
+#: imbalance ratio (max shard load / mean shard load) above which
+#: `plan_migration` considers the live placement worth re-planning
+DEFAULT_MIGRATION_THRESHOLD = 1.25
 
 
 def estimate_table_loads(trace: np.ndarray, row_bytes: int = 1
@@ -116,6 +141,17 @@ class ShardPlacement:
     @property
     def replicated_tables(self) -> tuple[int, ...]:
         return tuple(t for t, o in enumerate(self.replicas) if len(o) > 1)
+
+    def with_loads(self, loads: np.ndarray) -> "ShardPlacement":
+        """The SAME assignment re-costed under fresh load estimates — how
+        `plan_migration` asks "what does the live traffic think of the
+        placement we are serving?"."""
+        loads = np.asarray(loads, np.float64)
+        if len(loads) != self.num_tables:
+            raise ValueError(f"{len(loads)} loads for {self.num_tables} "
+                             f"tables")
+        return dataclasses.replace(
+            self, loads=tuple(float(x) for x in loads))
 
     def describe(self) -> str:
         """Human-readable shard load table (the example's --placement
@@ -208,3 +244,207 @@ def plan_shard_placement(trace: np.ndarray, num_shards: int, *,
         num_tables=T, num_shards=num_shards,
         replicas=tuple(tuple(sorted(o)) for o in owners),
         loads=tuple(float(x) for x in loads), strategy="balanced")
+
+
+# ---------------------------------------------------------------------------
+# live migration planning
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MigrationPlan:
+    """A placement change worth paying for: which tables move (or change
+    replica count), and the imbalance the move buys back.
+
+    Pure description — `ShardedStorage.install_migration` does the actual
+    build-before-teardown swap. `old` carries the LIVE loads (the serving
+    placement re-costed under the planning window), so
+    `imbalance_before == old.imbalance_ratio()`.
+    """
+
+    old: ShardPlacement
+    new: ShardPlacement
+    moved_tables: tuple[int, ...]        # owner set changed at all
+    imbalance_before: float              # old placement, live loads
+    imbalance_after: float               # new placement, live loads
+
+    @property
+    def replica_changes(self) -> tuple[int, ...]:
+        """Tables whose replica COUNT changed (subset of moved_tables)."""
+        return tuple(t for t in self.moved_tables
+                     if len(self.old.replicas[t]) != len(self.new.replicas[t]))
+
+    def describe(self) -> str:
+        return (f"migrate {len(self.moved_tables)} table(s) "
+                f"{list(self.moved_tables)}: imbalance "
+                f"{self.imbalance_before:.3f} -> {self.imbalance_after:.3f}"
+                + (f" (replica count changes: {list(self.replica_changes)})"
+                   if self.replica_changes else ""))
+
+
+def plan_migration(old: ShardPlacement, trace: np.ndarray | None = None, *,
+                   loads: np.ndarray | None = None,
+                   row_bytes: int = 1,
+                   threshold: float = DEFAULT_MIGRATION_THRESHOLD,
+                   min_gain: float = 0.05,
+                   replicate_factor: float = 0.0,
+                   max_replicas: int | None = None
+                   ) -> MigrationPlan | None:
+    """Decide whether the serving placement should follow traffic drift.
+
+    Re-costs `old` under load estimates from the LIVE `trace` (or explicit
+    `loads`) and re-runs the LPT planner at the same shard count. Returns
+    None — migration is the exception, not the rule — unless ALL hold:
+
+      * the live imbalance of `old` exceeds `threshold`;
+      * the re-planned placement improves imbalance by at least `min_gain`
+        (absolute), so sub-noise wins never churn the caches;
+      * at least one table actually moves.
+
+    Single-shard placements never migrate (nothing to balance).
+    """
+    if old.num_shards <= 1:
+        return None
+    if loads is None:
+        if trace is None:
+            raise ValueError("plan_migration needs a live trace= (or "
+                             "explicit loads=) to re-cost the placement")
+        loads = estimate_table_loads(trace, row_bytes)
+    loads = np.asarray(loads, np.float64)
+    cur = old.with_loads(loads)
+    before = cur.imbalance_ratio()
+    if before <= threshold:
+        return None
+    new = plan_shard_placement(trace, old.num_shards, row_bytes=row_bytes,
+                               loads=loads,
+                               replicate_factor=replicate_factor,
+                               max_replicas=max_replicas)
+    after = new.imbalance_ratio()
+    if before - after < min_gain:
+        return None
+    moved = tuple(t for t in range(old.num_tables)
+                  if set(old.replicas[t]) != set(new.replicas[t]))
+    if not moved:
+        return None
+    return MigrationPlan(old=cur, new=new, moved_tables=moved,
+                         imbalance_before=before, imbalance_after=after)
+
+
+# ---------------------------------------------------------------------------
+# load-aware replica routing
+# ---------------------------------------------------------------------------
+
+class ReplicaRouter:
+    """Cost-proportional batch splitter for ONE replicated table.
+
+    Tracks an EWMA of each replica's observed service cost (seconds per
+    routed batch row — lookup latency including any prefetch-consume wait)
+    and cuts each batch so replica k's slice is proportional to
+    `1 / cost_k`. Until the first observation the split is equal
+    (`np.array_split` law), which is also the exact legacy behaviour.
+
+    `min_frac` keeps every replica above a small floor so (a) a slow
+    replica keeps producing cost observations and can win its share back
+    when it recovers, and (b) no replica's slice collapses to a
+    permanently-unobservable zero.
+
+    Deterministic and pure: `bounds()` is a function of the stored EWMA
+    state only; the serving layer decides when `observe()` runs (router
+    moves invalidate staged batches, so updates happen at window
+    boundaries, never mid-batch).
+    """
+
+    def __init__(self, num_replicas: int, *, alpha: float = 0.5,
+                 min_frac: float = 0.05):
+        if num_replicas < 2:
+            raise ValueError("routing needs >= 2 replicas")
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError("need 0 < alpha <= 1")
+        if min_frac < 0.0:
+            raise ValueError("need min_frac >= 0")
+        self.num_replicas = num_replicas
+        self.alpha = float(alpha)
+        # clamp to half the equal share so the floor stays meaningful at
+        # ANY replica count — constructing a router must never raise for
+        # a valid placement (it runs mid-swap in _install_units)
+        self.min_frac = min(float(min_frac), 0.5 / num_replicas)
+        self.costs = np.ones(num_replicas, np.float64)   # relative s/row
+        self.observed = False
+        # the PUBLISHED split `bounds()` cuts by. The EWMA may drift every
+        # observe(); the published fractions move only when the drift
+        # exceeds the tolerance — so bounds change exactly when observe()
+        # returns True, and the caller's staged-batch flush is exact (a
+        # silently shifted bound would strand unmatchable staged batches
+        # in the bounded queues forever).
+        self._active: np.ndarray | None = None
+
+    def _equal(self) -> np.ndarray:
+        return np.full(self.num_replicas, 1.0 / self.num_replicas)
+
+    def fractions(self) -> np.ndarray:
+        """The published per-replica batch share (sums to 1; equal until
+        the first above-tolerance observation)."""
+        return self._equal() if self._active is None else self._active
+
+    def _raw_fractions(self) -> np.ndarray:
+        """Inverse-cost shares straight off the EWMA, floored at
+        min_frac — what `observe()` publishes when it moved enough."""
+        if not self.observed:
+            return self._equal()
+        w = 1.0 / np.maximum(self.costs, 1e-12)
+        f = w / w.sum()
+        if self.min_frac > 0.0:
+            f = np.maximum(f, self.min_frac)
+            f = f / f.sum()
+        return f
+
+    def bounds(self, batch: int) -> np.ndarray:
+        """Cut points [num_replicas + 1] partitioning `[0, batch)`;
+        replica k serves rows `[bounds[k], bounds[k+1])`. A pure function
+        of the published fractions.
+
+        Whenever `batch >= num_replicas`, EVERY replica gets at least one
+        row: one row per replica is reserved off the top and only the
+        remainder splits proportionally. Rounding a tiny published
+        fraction straight to a zero-width slice would freeze that
+        replica's cost observations (no rows -> NaN cost -> EWMA never
+        updates) and starve it permanently — the exact failure min_frac
+        exists to prevent. Batches smaller than the replica count
+        necessarily leave some replicas empty and fall back to the equal
+        law."""
+        r = self.num_replicas
+        if self._active is None or batch < r:
+            base, extra = divmod(batch, r)
+            sizes = base + (np.arange(r) < extra)
+            return np.concatenate(([0], np.cumsum(sizes))).astype(np.int64)
+        cum = np.concatenate(([0.0], np.cumsum(self._active)))
+        cum[-1] = 1.0                         # kill float-sum residue
+        # round(monotone) + strictly-increasing arange => strictly
+        # increasing bounds: width >= 1 everywhere by construction
+        return (np.round(cum * (batch - r)).astype(np.int64)
+                + np.arange(r + 1))
+
+    def observe(self, costs: np.ndarray, *, tol: float = 0.02) -> bool:
+        """Fold one window's per-replica cost samples (s/row; NaN = the
+        replica served nothing this window, its EWMA is left alone) into
+        the EWMA, and re-publish the split when it moved by more than
+        `tol` anywhere. Returns True exactly when the published split —
+        and therefore `bounds()` — changed, the caller's signal that
+        staged batches cut at the old bounds are now stale."""
+        costs = np.asarray(costs, np.float64)
+        if costs.shape != (self.num_replicas,):
+            raise ValueError(f"expected {self.num_replicas} costs, got "
+                             f"{costs.shape}")
+        seen = np.isfinite(costs) & (costs > 0)
+        if not seen.any():
+            return False
+        if not self.observed:
+            # first window: seed unseen replicas at the seen mean so one
+            # early observation cannot starve the others
+            self.costs[:] = costs[seen].mean()
+        self.costs[seen] += self.alpha * (costs[seen] - self.costs[seen])
+        self.observed = True
+        raw = self._raw_fractions()
+        if np.abs(raw - self.fractions()).max() > tol:
+            self._active = raw
+            return True
+        return False

@@ -11,10 +11,28 @@ Which tables a shard owns comes from a `ShardPlacement`
 (`repro.storage.placement`): the legacy contiguous split, or the
 frequency-aware planner (`plan_shard_placement`) that LPT-balances
 per-table load estimates — and may replicate a dominant table across
-several shards, in which case each replica serves an equal slice of the
-batch. Internally every (shard, table-group) pair is a *unit* holding one
+several shards, in which case each replica serves a slice of the batch.
+Internally every (shard, table-group) pair is a *unit* holding one
 ParameterServer: a shard has one unit for its non-replicated tables plus
 one per replica it hosts, executed serially on that shard's worker.
+
+The placement is LIVE, not build-time-frozen:
+
+  * **Routing** — a replicated table's batch slices start equal
+    (`np.array_split` law) and, once `update_routing()` has folded a
+    window of per-unit service costs into each table's `ReplicaRouter`,
+    become proportional to inverse observed cost, so a slow or contended
+    replica sheds load. A routing move flushes staged prefetch batches
+    (they were cut at the old bounds); correctness never depends on them.
+  * **Migration** — `plan_migration()` re-runs the placement planner on
+    the backend's own sliding traffic window and, past an imbalance
+    threshold, emits a plan; `install_migration()` applies it
+    build-before-teardown: the new units (and their ParameterServers) are
+    fully constructed first, swapped in atomically, and only then are the
+    orphaned old units closed — a failed or rejected migration always
+    leaves the old backend serving. `plan_refresh`/`install_refresh`
+    carry the same plan when a `migration_threshold` was configured at
+    build time, so periodic re-pinning doubles as periodic re-placement.
 
 Single-process multi-shard for now: `lookup()`/`stage()` fan out over a
 shard thread pool and join before returning, so each unit's PS still sees
@@ -28,23 +46,30 @@ Bit-exactness: every unit serves byte-identical copies of its table slice,
 and scattering per-unit row blocks back into the [B, T, L, D] buffer
 reconstructs exactly the array a single tiered server would have produced,
 so the shared pooling reduction yields bit-identical output — for ANY
-placement, replicated or not.
+placement, replicated or not, routed or not, before/during/after a
+migration swap.
 
 Stats: per-shard counters merge into ONE report — counter keys sum, rates
-are recomputed from the sums, `max_queue_depth` is the per-shard peak, and
-the unmerged snapshots ride along under `"per_shard"`.
+are recomputed from the summed true counters, instantaneous gauges
+(`queue_depth`) and per-shard peaks (`max_queue_depth`) take the per-shard
+max, and the unmerged snapshots ride along under `"per_shard"`.
 """
 from __future__ import annotations
 
 import concurrent.futures
 import dataclasses
-from typing import Optional, Union
+import time
+from collections import deque
+from typing import Any, Optional, Union
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.storage.base import EmbeddingStorage, StorageCapabilities
-from repro.storage.placement import ShardPlacement, plan_shard_placement
+from repro.storage.placement import (DEFAULT_MIGRATION_THRESHOLD,
+                                     MigrationPlan, ReplicaRouter,
+                                     ShardPlacement, plan_migration,
+                                     plan_shard_placement)
 from repro.storage.registry import register
 from repro.storage.tiered import (_extract_tables, _reject_double_remap,
                                   build_ps_config)
@@ -53,17 +78,21 @@ from repro.storage.tiered import (_extract_tables, _reject_double_remap,
 _SUM_KEYS = ("total_accesses", "hot_hits", "warm_hits", "cold_misses",
              "evictions", "insertions", "warm_occupancy",
              "cold_gathered_rows", "staged_rows", "prefetch_hits",
-             "prefetch_misses", "queue_depth", "off_critical_rows",
+             "prefetch_misses", "off_critical_rows",
              "consume_ready", "consume_waited", "consume_wait_s")
-# merged by maximum (per-shard peaks / lockstep counters)
-_MAX_KEYS = ("max_queue_depth", "refreshes")
+# merged by maximum: per-shard peaks, lockstep counters, and instantaneous
+# gauges (summing `queue_depth` across shards would report a depth no
+# single queue ever had — the auto-tuner and operators read this)
+_MAX_KEYS = ("max_queue_depth", "refreshes", "queue_depth")
 
 
 def merge_shard_stats(per_shard: list[dict]) -> dict:
     """Fold per-shard counter snapshots into one report.
 
     Invariant preserved: summed `hot_hits + warm_hits + cold_misses ==
-    total_accesses` (it holds per shard, and all three are sums).
+    total_accesses` (it holds per shard, and all three are sums). Rates
+    are recomputed from the summed TRUE counters only — gauges like
+    `queue_depth` merge by max and never feed a rate.
     """
     out: dict = {"num_shards": len(per_shard)}
     for k in _SUM_KEYS:
@@ -92,20 +121,28 @@ def merge_shard_stats(per_shard: list[dict]) -> dict:
 
 
 def _chunk_bounds(batch: int, num_chunks: int, k: int) -> tuple[int, int]:
-    """Equal batch split for replica k of num_chunks (np.array_split law)."""
-    bounds = np.linspace(0, batch, num_chunks + 1).astype(int)
-    return int(bounds[k]), int(bounds[k + 1])
+    """Equal batch split for replica k of num_chunks (np.array_split law:
+    the first `batch % num_chunks` chunks get the extra row, so B=5, n=2
+    splits (3, 2))."""
+    base, extra = divmod(batch, num_chunks)
+    lo = k * base + min(k, extra)
+    return lo, lo + base + (1 if k < extra else 0)
 
 
 @dataclasses.dataclass
 class _Unit:
     """One ParameterServer worth of placement: a shard's non-replicated
     table group (`chunk is None`, full batch) or a single replicated
-    table's copy (`chunk=(k, r)`: batch slice k of r)."""
+    table's copy (`chunk=(k, r)`: batch slice k of r). Replica units
+    accumulate service-cost observations (`service_s` over `served_rows`)
+    for the table's `ReplicaRouter`; only their owning shard worker
+    writes them."""
     shard: int
     table_ids: np.ndarray                 # global table ids, ascending
     ps: object                            # repro.ps.ParameterServer
     chunk: Optional[tuple[int, int]] = None
+    service_s: float = 0.0                # replica units: window lookup time
+    served_rows: int = 0                  # replica units: window batch rows
 
 
 @register("sharded")
@@ -118,10 +155,21 @@ class ShardedStorage(EmbeddingStorage):
         self.shards: list = []            # flat list: every unit's PS
         self.placement: Optional[ShardPlacement] = None
         self.table_slices: list[slice] = []   # contiguous placements only
+        self.migration_threshold: Optional[float] = None
         self._units: list[_Unit] = []
         self._shard_units: list[list[_Unit]] = []
+        self._routers: dict[int, ReplicaRouter] = {}
         self._valid_hint: Optional[int] = None
         self._pool: Optional[concurrent.futures.ThreadPoolExecutor] = None
+        self._closed = False
+        self._epoch = 0                   # bumped by build() and migration
+        self._tables: Optional[np.ndarray] = None    # authoritative copy
+        self._ps_cfg = None
+        self._replicate_factor = 0.0
+        # backend-level sliding traffic window ([B, T, L] real-traffic
+        # slices) — migration plans from FULL batches, which per-unit
+        # windows (sliced tables, sliced replicas) cannot reconstruct
+        self.window: deque = deque(maxlen=16)
 
     # -- descriptor ---------------------------------------------------------
     def capabilities(self) -> StorageCapabilities:
@@ -140,7 +188,8 @@ class ShardedStorage(EmbeddingStorage):
                 ps.cfg.async_prefetch for ps in self.shards),
             refreshable=True,
             shardable=True,
-            tunable=bool(self.shards))
+            tunable=bool(self.shards),
+            migratable=bool(self.shards))
 
     @property
     def num_shards(self) -> int:
@@ -173,64 +222,63 @@ class ShardedStorage(EmbeddingStorage):
         raise ValueError(f"placement must be 'contiguous', 'balanced', or a "
                          f"ShardPlacement, got {placement!r}")
 
-    def build(self, params: dict, ps_cfg=None,
-              trace: Optional[np.ndarray] = None, *,
-              num_shards: int = 2,
-              placement: Union[str, ShardPlacement, None] = None,
-              device_budget_bytes: Optional[int] = None,
-              parallel: bool = True,
-              **ps_cfg_overrides) -> "ShardedStorage":
-        """Assign tables to `num_shards` shard workers and build one
-        ParameterServer per placement unit (same `PSConfig` for all —
-        capacities are per-table, so the config is shard-size-agnostic).
-
-        `placement` selects the table-to-shard assignment: `'contiguous'`
-        (default; the legacy equal split), `'balanced'` (frequency-aware
-        LPT from `trace` — see `repro.storage.placement`), or an explicit
-        `ShardPlacement` (arbitrary assignment, replication included).
-        `trace` [N, T, L] is sliced per unit for hot-set planning; the
-        auto-tune path (`device_budget_bytes`) plans ONCE on the full
-        trace, exactly as the single tiered backend would. `parallel=False`
-        disables the shard thread pool (serial fan-out; deterministic
-        debugging)."""
+    def _construct_units(self, plc: ShardPlacement, tables: np.ndarray,
+                         ps_cfg, trace: Optional[np.ndarray] = None,
+                         hot_plans: Optional[dict] = None
+                         ) -> tuple[list[_Unit], list[list[_Unit]]]:
+        """Build every unit's ParameterServer for `plc` WITHOUT touching
+        any live state — the shared build-before-teardown machinery of
+        `build()` and `install_migration()`. A constructor failure here
+        raises with nothing torn down and nothing leaked (units already
+        constructed are closed again)."""
         from repro.ps import ParameterServer
-        cfg = self.cfg
-        if num_shards < 1:
-            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
-        num_shards = min(num_shards, cfg.num_tables)
-        ps_cfg = build_ps_config(trace, cfg.rows, cfg.dim,
-                                 cfg.jnp_dtype.itemsize, ps_cfg,
-                                 device_budget_bytes, **ps_cfg_overrides)
-        tables = _extract_tables(params, cfg.num_tables)
-        # validate everything that can raise BEFORE tearing down a live
-        # backend — a rejected rebuild must leave the old shards serving
-        plc = self._resolve_placement(placement, num_shards, trace)
-        self.close()                     # rebuilding: drop old workers
-        self.placement = plc
-
-        # units: per shard, one PS over its solely-owned tables, plus one
-        # single-table PS per replica copy it hosts (batch-sliced at serve)
-        self._units, self._shard_units = [], [[] for _ in
-                                             range(plc.num_shards)]
+        units: list[_Unit] = []
+        shard_units: list[list[_Unit]] = [[] for _ in range(plc.num_shards)]
 
         def add_unit(shard, ids, chunk):
             ids = np.asarray(ids, np.int64)
-            ps = ParameterServer(
-                tables[ids], ps_cfg,
-                trace=None if trace is None else trace[:, ids])
+            if hot_plans is not None:
+                plans = [hot_plans[int(t)] for t in ids]
+                ps = ParameterServer(tables[ids], ps_cfg, plans=plans)
+            else:
+                ps = ParameterServer(
+                    tables[ids], ps_cfg,
+                    trace=None if trace is None else trace[:, ids])
             unit = _Unit(shard=shard, table_ids=ids, ps=ps, chunk=chunk)
-            self._units.append(unit)
-            self._shard_units[shard].append(unit)
+            units.append(unit)
+            shard_units[shard].append(unit)
 
-        for s, tabs in enumerate(plc.shard_tables):
-            solo = [t for t in tabs if len(plc.replicas[t]) == 1]
-            if solo:
-                add_unit(s, solo, None)
-        for t in plc.replicated_tables:
-            owners = plc.replicas[t]
-            for k, s in enumerate(owners):
-                add_unit(s, [t], (k, len(owners)))
-        self.shards = [u.ps for u in self._units]
+        try:
+            for s, tabs in enumerate(plc.shard_tables):
+                solo = [t for t in tabs if len(plc.replicas[t]) == 1]
+                if solo:
+                    add_unit(s, solo, None)
+            for t in plc.replicated_tables:
+                owners = plc.replicas[t]
+                for k, s in enumerate(owners):
+                    add_unit(s, [t], (k, len(owners)))
+        except BaseException:
+            for u in units:               # don't leak worker threads
+                u.ps.close()
+            raise
+        return units, shard_units
+
+    def _install_units(self, plc: ShardPlacement, units: list[_Unit],
+                       shard_units: list[list[_Unit]]) -> None:
+        """Swap fully-constructed units in (serving thread only): close the
+        old units AFTER the new ones take over, resize the shard pool only
+        when the shard count moved, reset routers to the new replica sets."""
+        # anything that can raise runs BEFORE the first assignment — the
+        # swap below must be all-or-nothing
+        routers = {t: ReplicaRouter(len(plc.replicas[t]))
+                   for t in plc.replicated_tables}
+        old_units, old_pool_shards = self._units, len(self._shard_units)
+        self.placement = plc
+        self._units, self._shard_units = units, shard_units
+        self.shards = [u.ps for u in units]
+        self._routers = routers
+        self._epoch += 1
+        self._closed = False
 
         # legacy view: table_slices only describes replication-free
         # placements where every shard owns one ascending contiguous run
@@ -245,15 +293,89 @@ class ShardedStorage(EmbeddingStorage):
                     and all(a.stop == b.start
                             for a, b in zip(runs, runs[1:]))
                     and runs[0].start == 0
-                    and runs[-1].stop == cfg.num_tables):
+                    and runs[-1].stop == self.cfg.num_tables):
                 self.table_slices = runs
 
+        for u in old_units:               # teardown LAST (swap is done)
+            u.ps.close()
+        if self._pool is not None and old_pool_shards != plc.num_shards:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+            if plc.num_shards > 1:
+                self._pool = concurrent.futures.ThreadPoolExecutor(
+                    max_workers=plc.num_shards, thread_name_prefix="ps-shard")
+
+    def build(self, params: dict, ps_cfg=None,
+              trace: Optional[np.ndarray] = None, *,
+              num_shards: int = 2,
+              placement: Union[str, ShardPlacement, None] = None,
+              device_budget_bytes: Optional[int] = None,
+              parallel: bool = True,
+              migration_threshold: Optional[float] = None,
+              replicate_factor: float = 0.0,
+              **ps_cfg_overrides) -> "ShardedStorage":
+        """Assign tables to `num_shards` shard workers and build one
+        ParameterServer per placement unit (same `PSConfig` for all —
+        capacities are per-table, so the config is shard-size-agnostic).
+
+        `placement` selects the table-to-shard assignment: `'contiguous'`
+        (default; the legacy equal split), `'balanced'` (frequency-aware
+        LPT from `trace` — see `repro.storage.placement`), or an explicit
+        `ShardPlacement` (arbitrary assignment, replication included).
+        `trace` [N, T, L] is sliced per unit for hot-set planning; the
+        auto-tune path (`device_budget_bytes`) plans ONCE on the full
+        trace, exactly as the single tiered backend would. `parallel=False`
+        disables the shard thread pool (serial fan-out; deterministic
+        debugging).
+
+        `migration_threshold` (imbalance ratio, e.g. 1.25) arms live
+        migration: `plan_refresh`/`plan_migration` then re-plan the
+        placement from the live traffic window and emit a migration plan
+        once the serving placement's live imbalance exceeds it.
+        `replicate_factor` forwards to the re-planner so a migration may
+        also add/remove replicas of a dominant table.
+
+        Rebuild-safe: on a live backend every new ParameterServer is
+        constructed BEFORE the old units tear down, so a constructor
+        failure (bad trace shape, exploding config) leaves the old shards
+        serving — the same swap machinery `install_migration` uses."""
+        cfg = self.cfg
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        num_shards = min(num_shards, cfg.num_tables)
+        ps_cfg = build_ps_config(trace, cfg.rows, cfg.dim,
+                                 cfg.jnp_dtype.itemsize, ps_cfg,
+                                 device_budget_bytes, **ps_cfg_overrides)
+        tables = _extract_tables(params, cfg.num_tables)
+        # everything that can raise runs BEFORE the old backend is touched:
+        # placement resolution AND full unit construction — a rejected or
+        # failed rebuild must leave the old shards serving
+        plc = self._resolve_placement(placement, num_shards, trace)
+        units, shard_units = self._construct_units(plc, tables, ps_cfg,
+                                                   trace=trace)
+        had_pool = self._pool is not None
+        self._install_units(plc, units, shard_units)
+        self._tables = tables
+        self._ps_cfg = ps_cfg
+        self.migration_threshold = migration_threshold
+        self._replicate_factor = float(replicate_factor)
+        self.window = deque(maxlen=ps_cfg.window_batches)
+        self._valid_hint = None
         if parallel and plc.num_shards > 1:
-            self._pool = concurrent.futures.ThreadPoolExecutor(
-                max_workers=plc.num_shards, thread_name_prefix="ps-shard")
+            if self._pool is None:
+                self._pool = concurrent.futures.ThreadPoolExecutor(
+                    max_workers=plc.num_shards,
+                    thread_name_prefix="ps-shard")
+        elif not parallel and had_pool and self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
         return self
 
     def _require_built(self) -> None:
+        if self._closed:
+            raise RuntimeError(
+                "storage='sharded' backend is closed (its shard workers "
+                "are joined) — build() it again before serving")
         if not self.shards:
             raise RuntimeError(
                 "storage='sharded' needs its shard servers: call "
@@ -270,12 +392,30 @@ class ShardedStorage(EmbeddingStorage):
         futs = [self._pool.submit(fn, s) for s in range(n)]
         return [f.result() for f in futs]
 
+    def _unit_bounds(self, u: _Unit, batch: int) -> tuple[int, int]:
+        """The batch rows unit `u` serves: the full batch for a shard's
+        non-replicated group, or its replica's routed slice — the
+        table's `ReplicaRouter` cut (equal `np.array_split` law until the
+        router has observations). lookup/stage/hint all route through
+        here, so staged indices always match the upcoming lookup's."""
+        if u.chunk is None:
+            return 0, batch
+        k, r = u.chunk
+        router = self._routers.get(int(u.table_ids[0]))
+        if router is not None:
+            b = router.bounds(batch)
+            return int(b[k]), int(b[k + 1])
+        return _chunk_bounds(batch, r, k)
+
     # -- data path ----------------------------------------------------------
     def lookup(self, params: dict, indices, weights=None, *,
                pre_remapped: bool = False):
         """Fan the [B, T, L] lookup out by placement unit, join, scatter
         the per-unit row blocks into one [B, T, L, D] buffer, pool on
-        device — bit-identical to the single-server tiered path."""
+        device — bit-identical to the single-server tiered path. Replica
+        units are timed (service seconds over routed rows) to feed the
+        router; the real-traffic slice lands in the backend window that
+        migration plans from."""
         from repro.core.embedding import _pool_rows_core
         self._require_built()
         idx = np.asarray(indices)
@@ -283,16 +423,24 @@ class ShardedStorage(EmbeddingStorage):
         dtype = self.shards[0].cold.tables.dtype
         out = np.empty((B, T, L, self.shards[0].cold.dim), dtype)
         valid, self._valid_hint = self._valid_hint, None
+        real = idx if valid is None else idx[:valid]
+        if real.shape[0]:
+            self.window.append(real)
 
         def run_shard(s):
             for u in self._shard_units[s]:
-                lo, hi = (0, B) if u.chunk is None else \
-                    _chunk_bounds(B, u.chunk[1], u.chunk[0])
+                lo, hi = self._unit_bounds(u, B)
                 if lo == hi:
                     continue
                 if valid is not None:
                     u.ps.hint_valid(int(np.clip(valid - lo, 0, hi - lo)))
-                rows = u.ps.lookup(idx[lo:hi, u.table_ids])
+                if u.chunk is not None:
+                    t0 = time.perf_counter()
+                    rows = u.ps.lookup(idx[lo:hi, u.table_ids])
+                    u.service_s += time.perf_counter() - t0
+                    u.served_rows += hi - lo
+                else:
+                    rows = u.ps.lookup(idx[lo:hi, u.table_ids])
                 out[lo:hi, u.table_ids] = rows
 
         self._map_shards(run_shard)
@@ -320,8 +468,7 @@ class ShardedStorage(EmbeddingStorage):
         def run_shard(s):
             ok = True
             for u in self._shard_units[s]:
-                lo, hi = (0, B) if u.chunk is None else \
-                    _chunk_bounds(B, u.chunk[1], u.chunk[0])
+                lo, hi = self._unit_bounds(u, B)
                 if lo == hi:
                     continue
                 ok &= u.ps.stage(idx[lo:hi, u.table_ids])
@@ -335,30 +482,178 @@ class ShardedStorage(EmbeddingStorage):
         self._valid_hint = int(n)
 
     # -- refresh ------------------------------------------------------------
-    def refresh_window(self) -> list:
-        """Per-unit window snapshots (taken on the serving thread)."""
-        return [list(ps.window) for ps in self.shards]
+    def refresh_window(self) -> dict:
+        """Snapshot taken on the serving thread: per-unit windows (hot-set
+        re-planning), the backend-level full-batch window (migration
+        re-planning), and the unit epoch so a plan raced by a migration
+        swap is detected at install time instead of misapplied."""
+        return {"units": [list(ps.window) for ps in self.shards],
+                "traffic": list(self.window),
+                "epoch": self._epoch}
 
     def plan_refresh(self, window=None):
-        """Pure per-unit planning; helper-thread safe (each PS's
-        `plan_refresh` only reads the snapshot it is handed)."""
+        """Pure planning; helper-thread safe (reads only the snapshot).
+
+        Plans each unit's hot-set refresh and — when a
+        `migration_threshold` was configured at build — also re-plans the
+        placement from the full-batch window ("placement re-planning at
+        refresh time"). Returns None when there is nothing to do."""
         self._require_built()
         if window is None:
             window = self.refresh_window()
-        plans = [ps.plan_refresh(w) for ps, w in zip(self.shards, window)]
-        return None if all(p is None for p in plans) else plans
+        if isinstance(window, list):          # legacy per-unit-only shape
+            window = {"units": window, "traffic": [],
+                      "epoch": self._epoch}
+        unit_plans = None
+        if window["epoch"] == self._epoch and \
+                len(window["units"]) == len(self.shards):
+            plans = [ps.plan_refresh(w)
+                     for ps, w in zip(self.shards, window["units"])]
+            if any(p is not None for p in plans):
+                unit_plans = plans
+        migration = None
+        if self.migration_threshold is not None:
+            migration = self.plan_migration(window)
+        if unit_plans is None and migration is None:
+            return None
+        return {"units": unit_plans, "migration": migration,
+                "epoch": window["epoch"]}
 
     def install_refresh(self, plan) -> dict:
         self._require_built()
         if plan is None:
-            plan = [None] * len(self.shards)
+            results = [ps.install_refresh(None) for ps in self.shards]
+            return {"replanned": False,
+                    "refreshes": max(r["refreshes"] for r in results)}
+        if isinstance(plan, list):            # legacy per-unit-only shape
+            plan = {"units": plan, "migration": None, "epoch": self._epoch}
+        if plan.get("migration") is not None:
+            # the swap rebuilds every unit with hot plans from the same
+            # window, superseding the (now unit-less) per-unit plans
+            result = self.install_migration(plan["migration"])
+            result["replanned"] = result.get("migrated", False)
+            result.setdefault(
+                "refreshes", max((ps.refreshes for ps in self.shards),
+                                 default=0))
+            return result
+        if plan["epoch"] != self._epoch or \
+                plan["units"] is None or \
+                len(plan["units"]) != len(self.shards):
+            # planned against units that no longer exist (migration or
+            # rebuild raced the helper thread): drop it, next cycle re-plans
+            return {"replanned": False,
+                    "refreshes": max((ps.refreshes for ps in self.shards),
+                                     default=0)}
         results = [ps.install_refresh(p)
-                   for ps, p in zip(self.shards, plan)]
+                   for ps, p in zip(self.shards, plan["units"])]
         return {"replanned": any(r["replanned"] for r in results),
                 "refreshes": max(r["refreshes"] for r in results)}
 
     def refresh(self) -> dict:
         return self.install_refresh(self.plan_refresh())
+
+    # -- live migration & routing -------------------------------------------
+    def update_routing(self) -> Optional[dict]:
+        """Fold the window's per-replica service costs (seconds per routed
+        batch row, straight off the shard workers' lookup timers) into
+        each replicated table's `ReplicaRouter` and reset the
+        accumulators. A table whose published split moved gets its replica
+        units' staged prefetch batches flushed — they were cut at the old
+        bounds and would never match a routed lookup again (stale entries
+        would pin queue slots forever). Units whose slices are unaffected
+        (solo units, replicas of unmoved tables) keep theirs: `bounds()`
+        is a pure function of the published split, which changes exactly
+        when `observe()` says so. Returns None when the placement has no
+        replicas; else `{"changed": bool, "fractions": {table: [...]}}`."""
+        if not self._routers:
+            return None
+        self._require_built()
+        changed_tables = []
+        fractions = {}
+        for t, router in self._routers.items():
+            units = sorted((u for u in self._units
+                            if u.chunk is not None
+                            and int(u.table_ids[0]) == t),
+                           key=lambda u: u.chunk[0])
+            costs = np.array([u.service_s / u.served_rows
+                              if u.served_rows else np.nan for u in units])
+            for u in units:
+                u.service_s, u.served_rows = 0.0, 0
+            if router.observe(costs):
+                changed_tables.append(t)
+            fractions[t] = [round(float(f), 4) for f in router.fractions()]
+        for u in self._units:
+            if u.chunk is not None and int(u.table_ids[0]) in changed_tables:
+                u.ps.prefetch.flush()
+        return {"changed": bool(changed_tables), "fractions": fractions}
+
+    def plan_migration(self, window: Any = None, *,
+                       threshold: Optional[float] = None
+                       ) -> Optional[dict]:
+        """Phase 1 (pure, helper-thread safe): re-plan the placement from
+        the live full-batch window. Returns None unless the serving
+        placement's imbalance under the LIVE loads exceeds `threshold`
+        (default: the build-time `migration_threshold`, else
+        `DEFAULT_MIGRATION_THRESHOLD`) and the re-planned placement wins
+        materially. The plan carries per-table hot plans computed from the
+        same window, so `install_migration` only constructs and swaps."""
+        self._require_built()
+        if window is None:
+            # only the backend-level full-batch window is needed — don't
+            # snapshot every unit's per-PS window (refresh_window) just
+            # to discard it
+            window = {"traffic": list(self.window), "epoch": self._epoch}
+        traffic = window["traffic"] if isinstance(window, dict) else window
+        if not traffic:
+            return None
+        trace = np.concatenate(
+            [w.reshape(w.shape[0], w.shape[1], -1) for w in traffic],
+            axis=0)                                       # [N, T, L]
+        if threshold is None:
+            threshold = (self.migration_threshold
+                         if self.migration_threshold is not None
+                         else DEFAULT_MIGRATION_THRESHOLD)
+        mig = plan_migration(
+            self.placement, trace,
+            row_bytes=self.cfg.dim * self.cfg.jnp_dtype.itemsize,
+            threshold=threshold,
+            replicate_factor=self._replicate_factor)
+        if mig is None:
+            return None
+        hot_plans = None
+        k = min(self._ps_cfg.hot_rows, self.cfg.rows)
+        if k > 0:
+            from repro.core import hot_cache
+            hot_plans = {t: hot_cache.plan_from_trace(trace[:, t],
+                                                      self.cfg.rows, k)
+                         for t in range(self.cfg.num_tables)}
+        return {"migration": mig, "hot_plans": hot_plans}
+
+    def install_migration(self, plan: Optional[dict]) -> dict:
+        """Phase 2 (serving thread only): apply a `plan_migration` result
+        build-before-teardown. Every new unit's ParameterServer is fully
+        constructed FIRST; only after the atomic swap do the orphaned old
+        units close — so a constructor failure (or a None/stale plan)
+        always leaves the old backend serving, bit-exactly. Old units'
+        staged batches and warm-cache contents die with them (the new
+        units re-admit from traffic; served values never change)."""
+        self._require_built()
+        if plan is None:
+            return {"migrated": False}
+        mig: MigrationPlan = plan["migration"]
+        if mig.old.replicas != self.placement.replicas or \
+                mig.old.num_shards != self.placement.num_shards:
+            # planned against a placement that already changed: reject
+            return {"migrated": False, "stale_plan": True}
+        units, shard_units = self._construct_units(
+            mig.new, self._tables, self._ps_cfg,
+            hot_plans=plan.get("hot_plans"))
+        self._install_units(mig.new, units, shard_units)
+        return {"migrated": True,
+                "moved_tables": list(mig.moved_tables),
+                "replica_changes": list(mig.replica_changes),
+                "imbalance_before": round(mig.imbalance_before, 4),
+                "imbalance_after": round(mig.imbalance_after, 4)}
 
     # -- runtime tuning ------------------------------------------------------
     def prefetch_depth(self) -> int:
@@ -414,14 +709,29 @@ class ShardedStorage(EmbeddingStorage):
     def reset_stats(self) -> None:
         for ps in self.shards:
             ps.reset_stats()
+        for u in self._units:
+            u.service_s, u.served_rows = 0.0, 0
 
     def flush(self) -> None:
         for ps in self.shards:
             ps.flush()
+        self.window.clear()
 
     def close(self) -> None:
+        """Join every unit's workers and the shard pool, then CLEAR the
+        unit lists: a closed backend must not pass `_require_built` (its
+        prefetch workers are gone — a post-close lookup would die deep in
+        a joined queue with an opaque error) nor advertise `tunable`.
+        Idempotent; `build()` re-opens."""
         for ps in self.shards:
             ps.close()
         if self._pool is not None:
             self._pool.shutdown(wait=True)
             self._pool = None
+        if self.shards:
+            self._closed = True
+        self.shards = []
+        self._units = []
+        self._shard_units = []
+        self._routers = {}
+        self.window.clear()

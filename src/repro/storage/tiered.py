@@ -73,6 +73,7 @@ class TieredStorage(EmbeddingStorage):
         super().__init__(ebc)
         _reject_double_remap(self.cfg, "tiered")
         self.ps = ps                   # repro.ps.ParameterServer
+        self._closed = False
 
     @classmethod
     def adopt(cls, ps) -> "TieredStorage":
@@ -84,11 +85,12 @@ class TieredStorage(EmbeddingStorage):
 
     # -- descriptor ---------------------------------------------------------
     def capabilities(self) -> StorageCapabilities:
-        # a closed async prefetcher cannot stage again (its worker is
-        # joined), so staging capabilities drop after close() — sync
-        # lookups remain usable, matching ParameterServer.close() semantics
-        # live prefetch depth (not the built config) decides stageability —
-        # the queue-depth auto-tuner may have moved it since build()
+        # close() drops the server reference entirely, so EVERY serving
+        # capability (stageable, tunable, ...) drains after close() and
+        # lookup/stage raise a clear "backend closed" error — build()
+        # re-opens. Live prefetch depth (not the built config) decides
+        # stageability — the queue-depth auto-tuner may have moved it
+        # since build()
         stageable = (self.ps is not None
                      and self.ps.prefetch.depth > 0
                      and not getattr(self.ps.prefetch, "closed", False))
@@ -119,8 +121,26 @@ class TieredStorage(EmbeddingStorage):
                                  cfg.jnp_dtype.itemsize, ps_cfg,
                                  device_budget_bytes, **ps_cfg_overrides)
         tables = _extract_tables(params, cfg.num_tables)
-        self.ps = ParameterServer(tables, ps_cfg, trace=trace)
+        # construct BEFORE replacing: a constructor failure (bad trace
+        # shape) must leave a live backend serving, and a successful
+        # rebuild must not leak the old server's worker thread
+        new_ps = ParameterServer(tables, ps_cfg, trace=trace)
+        old_ps, self.ps = self.ps, new_ps
+        self._closed = False
+        if old_ps is not None:
+            old_ps.close()
         return self
+
+    def _require_built(self) -> None:
+        if self.ps is None:
+            if self._closed:
+                raise RuntimeError(
+                    "storage='tiered' backend is closed (its prefetch "
+                    "worker is joined) — build() it again before serving")
+            raise RuntimeError(
+                f"storage={self.name!r} needs a ParameterServer: call "
+                f"ebc.storage.build(params, ps_cfg) (or the deprecated "
+                f"build_parameter_server shim) first")
 
     # -- data path ----------------------------------------------------------
     def lookup(self, params: dict, indices, weights=None, *,
@@ -129,11 +149,7 @@ class TieredStorage(EmbeddingStorage):
         run OUTSIDE jit), pooling runs on device via the same reduction as
         the dense branch, so outputs are bit-identical."""
         from repro.core.embedding import _pool_rows_core
-        if self.ps is None:
-            raise RuntimeError(
-                f"storage={self.name!r} needs a ParameterServer: call "
-                f"ebc.storage.build(params, ps_cfg) (or the deprecated "
-                f"build_parameter_server shim) first")
+        self._require_built()
         rows = self.ps.lookup(np.asarray(indices))      # [B, T, L, D]
         rows_t = jnp.swapaxes(jnp.asarray(rows), 0, 1)  # [T, B, L, D]
         w_t = (None if weights is None
@@ -150,21 +166,26 @@ class TieredStorage(EmbeddingStorage):
         return self.ps is not None and self.ps.can_stage()
 
     def stage(self, next_indices: np.ndarray) -> bool:
+        self._require_built()
         return self.ps.stage(next_indices)
 
     def hint_valid(self, n: int) -> None:
+        self._require_built()
         self.ps.hint_valid(n)
 
     def refresh_window(self):
         return [] if self.ps is None else list(self.ps.window)
 
     def plan_refresh(self, window=None):
+        self._require_built()
         return self.ps.plan_refresh(window)
 
     def install_refresh(self, plan) -> dict:
+        self._require_built()
         return self.ps.install_refresh(plan)
 
     def refresh(self) -> dict:
+        self._require_built()
         return self.ps.refresh()
 
     # -- runtime tuning ------------------------------------------------------
@@ -197,5 +218,12 @@ class TieredStorage(EmbeddingStorage):
             self.ps.flush()
 
     def close(self) -> None:
+        """Join the prefetch worker and DROP the server reference: a
+        closed backend must not pass `_require_built` (a post-close
+        lookup/stage would die inside the joined worker with an opaque
+        error) nor advertise `tunable` through a dead server. Idempotent;
+        `build()` re-opens."""
         if self.ps is not None:
             self.ps.close()
+            self.ps = None
+            self._closed = True

@@ -1,0 +1,601 @@
+"""Live shard migration + load-aware replica routing (PR 5).
+
+Pins the acceptance contract: a mid-stream migration — planner-triggered
+or auto-tuner-driven — serves bit-identical lookups to the dense gather
+before, during, and after the build-before-teardown swap; a failed or
+rejected migration (and a failed rebuild) always leaves the old backend
+serving; replica routing shifts batch slices away from a synthetically
+slow replica while staying an exact partition; and the serving-lifecycle
+bugfixes hold: closed backends raise clear errors and drop `tunable`,
+`_chunk_bounds` follows its documented `np.array_split` law, merged
+`queue_depth` is a per-shard max, and `ServingSession.submit_batch`
+auto-advances query ids.
+"""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (EmbeddingBagCollection, EmbeddingStageConfig,
+                        make_pattern, plan_shard_migration)
+from repro.models.dlrm import DLRM, DLRMConfig
+from repro.ps import AutoTuneConfig, PSConfig
+from repro.serving import BatcherConfig, ServingSession
+from repro.storage import (MigrationPlan, ReplicaRouter, ShardPlacement,
+                           estimate_table_loads, plan_migration,
+                           plan_shard_placement)
+from repro.storage.sharded import _chunk_bounds, merge_shard_stats
+
+ROWS, TABLES, DIM, POOL = 256, 6, 16, 6
+# heavy tables stacked at one end => the contiguous split starts lopsided
+SKEWED = ("one_item", "one_item", "high_hot", "med_hot", "random", "random")
+
+
+def _pats(hotness=SKEWED):
+    return [make_pattern(h, ROWS, seed=t) for t, h in enumerate(hotness)]
+
+
+def _batch(pats, batch, seed):
+    return np.stack([p.sample(batch, POOL, seed=seed * 100 + t)
+                     for t, p in enumerate(pats)], axis=1).astype(np.int32)
+
+
+def _trace(pats, batches=3, batch=8, seed0=50):
+    return np.concatenate([_batch(pats, batch, seed0 + s)
+                           for s in range(batches)], axis=0)
+
+
+def _stage_cfg(storage="device"):
+    return EmbeddingStageConfig(num_tables=TABLES, rows=ROWS, dim=DIM,
+                                pooling=POOL, backend="xla",
+                                storage=storage)
+
+
+@pytest.fixture(scope="module")
+def dense_ref():
+    ebc = EmbeddingBagCollection(_stage_cfg("device"))
+    params = ebc.init(jax.random.PRNGKey(0))
+    return ebc, params
+
+
+def _build_sharded(params, pats, **kw):
+    ebc = EmbeddingBagCollection(_stage_cfg("sharded"))
+    kw.setdefault("num_shards", 2)
+    ebc.storage.build(params,
+                      PSConfig(hot_rows=16, warm_slots=16,
+                               async_prefetch=True, window_batches=8),
+                      trace=_trace(pats), **kw)
+    return ebc
+
+
+# ---------------------------------------------------------------------------
+# migration planning (placement level)
+# ---------------------------------------------------------------------------
+
+def test_plan_migration_threshold_and_gain_gates():
+    pats = _pats()
+    trace = _trace(pats)
+    loads = estimate_table_loads(trace, DIM * 4)
+    cont = ShardPlacement.contiguous(TABLES, 2, loads=loads)
+    assert cont.imbalance_ratio() > 1.2          # the mix really is skewed
+    mig = plan_migration(cont, trace, row_bytes=DIM * 4, threshold=1.1)
+    assert isinstance(mig, MigrationPlan)
+    assert mig.imbalance_after < mig.imbalance_before
+    assert mig.moved_tables                       # something actually moves
+    assert mig.imbalance_before == pytest.approx(cont.imbalance_ratio())
+    # above-threshold serving placement: no plan
+    assert plan_migration(cont, trace, row_bytes=DIM * 4,
+                          threshold=10.0) is None
+    # an already-balanced placement never migrates (gain gate)
+    bal = plan_shard_placement(trace, 2, row_bytes=DIM * 4)
+    assert plan_migration(bal, trace, row_bytes=DIM * 4,
+                          threshold=1.0) is None
+    # single shard: nothing to balance
+    one = ShardPlacement.contiguous(TABLES, 1, loads=loads)
+    assert plan_migration(one, trace, row_bytes=DIM * 4) is None
+    # the planner-API offline entry answers the same what-if
+    assert plan_shard_migration(cont, trace, row_bytes=DIM * 4,
+                                threshold=1.1).moved_tables \
+        == mig.moved_tables
+
+
+def test_plan_migration_can_change_replica_count():
+    loads = np.array([100.0, 5.0, 5.0, 5.0])
+    old = ShardPlacement(num_tables=4, num_shards=3,
+                         replicas=((0,), (1,), (2,), (0,)),
+                         loads=tuple(np.ones(4)))
+    mig = plan_migration(old, None, loads=loads, threshold=1.2,
+                         replicate_factor=1.0)
+    assert mig is not None
+    assert 0 in mig.replica_changes               # table 0 gained replicas
+    assert len(mig.new.replicas[0]) > 1
+
+
+# ---------------------------------------------------------------------------
+# mid-stream migration: bit-exact before / during / after the swap
+# ---------------------------------------------------------------------------
+
+def test_migration_mid_stream_bit_exact(dense_ref):
+    ebc0, params = dense_ref
+    pats = _pats()
+    ebc = _build_sharded(params, pats, placement="contiguous",
+                         migration_threshold=1.1)
+    st = ebc.storage
+
+    def check(seed):
+        idx = _batch(pats, 8, seed=seed)
+        got = np.asarray(ebc.apply(params, jnp.asarray(idx)))
+        want = np.asarray(ebc0.apply(params, jnp.asarray(idx)))
+        assert np.array_equal(got, want), seed
+
+    with st:
+        for seed in range(4):                    # before (fills the window)
+            st.stage(_batch(pats, 8, seed=seed + 1))
+            check(seed)
+        old_units = list(st.shards)
+        plan = st.plan_migration()
+        assert plan is not None                  # skew crossed the threshold
+        check(4)                                 # during: plan in hand,
+        #                                          old placement still serves
+        res = st.install_migration(plan)
+        assert res["migrated"] and res["imbalance_after"] \
+            < res["imbalance_before"]
+        assert st.placement.strategy == "balanced"
+        assert all(ps.prefetch.closed for ps in old_units
+                   if hasattr(ps.prefetch, "closed"))   # orphans joined
+        for seed in range(5, 9):                 # after the swap
+            st.stage(_batch(pats, 8, seed=seed + 1))
+            check(seed)
+        # counter invariant survives the new unit set
+        s = st.stats()
+        assert (s["hot_hits"] + s["warm_hits"] + s["cold_misses"]
+                == s["total_accesses"])
+
+
+def test_migration_via_plan_install_refresh(dense_ref):
+    """`plan_refresh` carries the migration when a threshold is armed —
+    placement re-planning at refresh time."""
+    ebc0, params = dense_ref
+    pats = _pats()
+    ebc = _build_sharded(params, pats, placement="contiguous",
+                         migration_threshold=1.1)
+    st = ebc.storage
+    with st:
+        for seed in range(4):
+            ebc.apply(params, jnp.asarray(_batch(pats, 8, seed=seed)))
+        plan = st.plan_refresh()
+        assert plan["migration"] is not None
+        res = st.install_refresh(plan)
+        assert res["replanned"] and res["migrated"]
+        assert st.placement.strategy == "balanced"
+        idx = _batch(pats, 8, seed=9)
+        assert np.array_equal(
+            np.asarray(ebc.apply(params, jnp.asarray(idx))),
+            np.asarray(ebc0.apply(params, jnp.asarray(idx))))
+
+
+def test_migration_via_auto_tuner(dense_ref):
+    """The `migrate_every_batches` leg drives the whole loop through
+    protocol verbs: traffic -> threshold crossing -> live swap."""
+    _, params = dense_ref
+    pats = _pats()
+    model = DLRM(DLRMConfig(embedding=_stage_cfg("sharded"),
+                            bottom_mlp=(32, DIM), top_mlp=(16, 1)))
+    params = model.init(jax.random.PRNGKey(0))
+    model.ebc.storage.build(
+        params, PSConfig(hot_rows=16, warm_slots=16, async_prefetch=True,
+                         window_batches=8),
+        trace=_trace(pats), num_shards=2, placement="contiguous")
+    assert model.ebc.storage.capabilities().migratable
+    cfg = AutoTuneConfig(depth_every_batches=0, migrate_every_batches=3,
+                         migrate_threshold=1.1)
+    with ServingSession(model, params,
+                        batcher=BatcherConfig(max_batch=8, max_wait_s=0.0),
+                        sla_ms=1e6, auto_tune=cfg) as sess:
+        for b in range(8):
+            dense = np.zeros((8, model.cfg.dense_features), np.float32)
+            sess.submit_batch(dense, _batch(pats, 8, seed=b))
+            if b >= 1:
+                sess.poll()
+        sess.drain()
+        pct = sess.percentiles()
+    migs = [e for e in sess.tuner.events if e["kind"] == "migration"]
+    assert len(migs) >= 1
+    assert pct["migrations"] == len(migs)
+    assert migs[0]["imbalance_after"] < migs[0]["imbalance_before"]
+    assert model.ebc.storage.placement.strategy == "balanced"
+
+
+def test_device_backend_ignores_migration_hooks():
+    ebc = EmbeddingBagCollection(_stage_cfg("device"))
+    assert not ebc.storage.capabilities().migratable
+    assert ebc.storage.update_routing() is None
+    assert ebc.storage.plan_migration() is None
+    assert ebc.storage.install_migration(None) == {"migrated": False}
+
+
+# ---------------------------------------------------------------------------
+# rejected / failed migration and rebuild: old backend keeps serving
+# ---------------------------------------------------------------------------
+
+def _failing_ps(monkeypatch, fail_after: int):
+    """Make ParameterServer constructions fail after `fail_after` more
+    successes (models a bad trace shape / OOM mid-construction)."""
+    import repro.ps as ps_pkg
+    real = ps_pkg.ParameterServer
+    count = {"n": 0}
+
+    class Flaky(real):
+        def __init__(self, *a, **kw):
+            if count["n"] >= fail_after:
+                raise MemoryError("synthetic constructor failure")
+            count["n"] += 1
+            super().__init__(*a, **kw)
+
+    monkeypatch.setattr(ps_pkg, "ParameterServer", Flaky)
+    return count
+
+
+def test_failed_migration_rolls_back(dense_ref, monkeypatch):
+    ebc0, params = dense_ref
+    pats = _pats()
+    ebc = _build_sharded(params, pats, placement="contiguous",
+                         migration_threshold=1.1)
+    st = ebc.storage
+    with st:
+        for seed in range(4):
+            ebc.apply(params, jnp.asarray(_batch(pats, 8, seed=seed)))
+        plan = st.plan_migration()
+        assert plan is not None
+        old_placement, old_units = st.placement, list(st.shards)
+        _failing_ps(monkeypatch, fail_after=1)   # second new unit explodes
+        with pytest.raises(MemoryError):
+            st.install_migration(plan)
+        # the old backend is untouched and still serving bit-exactly
+        assert st.placement is old_placement
+        assert st.shards == old_units
+        assert st.capabilities().stageable       # workers alive
+        idx = _batch(pats, 8, seed=9)
+        assert np.array_equal(
+            np.asarray(ebc.apply(params, jnp.asarray(idx))),
+            np.asarray(ebc0.apply(params, jnp.asarray(idx))))
+
+
+def test_stale_migration_plan_rejected(dense_ref):
+    """A plan raced by another placement change installs as a no-op."""
+    _, params = dense_ref
+    pats = _pats()
+    ebc = _build_sharded(params, pats, placement="contiguous",
+                         migration_threshold=1.1)
+    st = ebc.storage
+    with st:
+        for seed in range(4):
+            ebc.apply(params, jnp.asarray(_batch(pats, 8, seed=seed)))
+        plan = st.plan_migration()
+        assert st.install_migration(plan)["migrated"]
+        res = st.install_migration(plan)         # same plan, new placement
+        assert res == {"migrated": False, "stale_plan": True}
+
+
+def test_rebuild_ctor_failure_leaves_old_backend_serving(dense_ref,
+                                                         monkeypatch):
+    """Regression: build() used to close() the live shards BEFORE
+    constructing the new servers, stranding a half-built backend."""
+    ebc0, params = dense_ref
+    pats = _pats()
+    ebc = _build_sharded(params, pats)
+    st = ebc.storage
+    with st:
+        _failing_ps(monkeypatch, fail_after=0)
+        with pytest.raises(MemoryError):
+            st.build(params, PSConfig(hot_rows=8, warm_slots=8),
+                     trace=_trace(pats), num_shards=3)
+        caps = st.capabilities()
+        assert caps.stageable and caps.async_prefetch   # old workers alive
+        assert st.num_shards == 2
+        idx = _batch(pats, 8, seed=0)
+        assert np.array_equal(
+            np.asarray(ebc.apply(params, jnp.asarray(idx))),
+            np.asarray(ebc0.apply(params, jnp.asarray(idx))))
+
+
+def test_tiered_rebuild_ctor_failure_leaves_old_serving(dense_ref,
+                                                        monkeypatch):
+    ebc0, params = dense_ref
+    pats = _pats()
+    ebc = EmbeddingBagCollection(_stage_cfg("tiered"))
+    ebc.storage.build(params, PSConfig(hot_rows=16, warm_slots=16,
+                                       async_prefetch=True),
+                      trace=_trace(pats))
+    with ebc.storage:
+        _failing_ps(monkeypatch, fail_after=0)
+        with pytest.raises(MemoryError):
+            ebc.storage.build(params, PSConfig(hot_rows=8))
+        assert ebc.storage.capabilities().stageable
+        idx = _batch(pats, 8, seed=0)
+        assert np.array_equal(
+            np.asarray(ebc.apply(params, jnp.asarray(idx))),
+            np.asarray(ebc0.apply(params, jnp.asarray(idx))))
+
+
+# ---------------------------------------------------------------------------
+# replica routing
+# ---------------------------------------------------------------------------
+
+def test_replica_router_equal_until_observed_and_partitions():
+    r = ReplicaRouter(3)
+    # equal split follows the np.array_split law
+    assert list(r.bounds(8)) == [0, 3, 6, 8]
+    assert list(r.bounds(9)) == [0, 3, 6, 9]
+    assert not r.observe(np.full(3, np.nan))     # nothing served: no-op
+    assert r.observe(np.array([1.0, 1.0, 8.0]))  # slow third replica
+    f = r.fractions()
+    assert f[2] < f[0] == pytest.approx(f[1])
+    assert f.sum() == pytest.approx(1.0)
+    for batch in (1, 2, 7, 32, 100):
+        b = r.bounds(batch)
+        assert b[0] == 0 and b[-1] == batch
+        assert (np.diff(b) >= 0).all()           # monotone partition
+    with pytest.raises(ValueError):
+        ReplicaRouter(1)
+    with pytest.raises(ValueError):
+        r.observe(np.ones(2))
+
+
+def test_replica_router_min_frac_floor_keeps_replica_observable():
+    r = ReplicaRouter(2, min_frac=0.05)
+    for _ in range(20):                          # pathologically slow #2
+        r.observe(np.array([1.0, 1e6]))
+    f = r.fractions()
+    assert f[1] == pytest.approx(0.05 / 1.05, rel=1e-6) or f[1] >= 0.04
+    assert r.bounds(100)[1] < 100                # replica 2 still gets rows
+
+
+def test_replica_router_many_replicas_never_raises():
+    """Regression: the default min_frac must clamp, not raise, at any
+    replica count — router construction runs mid-swap in
+    `_install_units`, where a raise would violate the rollback
+    contract."""
+    r = ReplicaRouter(32)
+    assert r.min_frac <= 1.0 / 64 + 1e-12
+    b = r.bounds(64)
+    assert b[0] == 0 and b[-1] == 64
+    with pytest.raises(ValueError, match="min_frac"):
+        ReplicaRouter(2, min_frac=-0.1)
+
+
+def test_replica_router_never_starves_a_replica_to_zero_rows():
+    """Regression: rounding a tiny published fraction to a zero-width
+    slice would freeze that replica's cost observations (no rows -> NaN
+    cost) and starve it permanently. Whenever batch >= num_replicas,
+    every replica keeps at least one row."""
+    r = ReplicaRouter(2)
+    for _ in range(20):                          # ~100x sustained cost gap
+        r.observe(np.array([1.0, 100.0]))
+    for batch in (2, 3, 8, 9, 32):
+        widths = np.diff(r.bounds(batch))
+        assert (widths >= 1).all(), (batch, list(widths))
+        assert widths.sum() == batch
+    # so the slow replica keeps producing observations and can recover
+    for _ in range(20):
+        r.observe(np.array([1.0, 1.0]))
+    f = r.fractions()
+    assert abs(f[0] - f[1]) < 0.2                # share won back
+
+
+def test_session_mixed_submit_and_submit_batch_qids_unique():
+    """Regression: submit() must advance the auto-qid counter too, or a
+    following submit_batch() reuses its ids."""
+    from repro.serving import Query
+    model = DLRM(DLRMConfig(embedding=_stage_cfg("device"),
+                            bottom_mlp=(32, DIM), top_mlp=(16, 1)))
+    params = model.init(jax.random.PRNGKey(0))
+    pats = _pats()
+    with ServingSession(model, params,
+                        batcher=BatcherConfig(max_batch=4, max_wait_s=0.0),
+                        sla_ms=1e6) as sess:
+        idx = _batch(pats, 4, seed=0)
+        for i in range(4):
+            sess.submit(Query(qid=i, dense=np.zeros(
+                model.cfg.dense_features, np.float32), indices=idx[i]))
+        sess.submit_batch(np.zeros((4, model.cfg.dense_features),
+                                   np.float32), _batch(pats, 4, seed=1))
+        qids = [q.qid for q in sess.server.batcher.queue]
+        assert len(set(qids)) == len(qids) == 8
+        sess.drain()
+
+
+def test_replica_router_bounds_move_only_when_observe_says_so():
+    """Regression: `bounds()` must be a pure function of the PUBLISHED
+    split — a sub-tolerance EWMA drift that silently shifted a bound
+    would strand staged batches cut at the old bounds in the bounded
+    queues forever."""
+    r = ReplicaRouter(2)
+    for _ in range(12):                          # converge the EWMA
+        r.observe(np.array([1.0, 3.0]))
+    before = list(r.bounds(32))
+    # a tiny drift: EWMA moves, published split must not
+    assert not r.observe(np.array([1.0, 3.01]), tol=0.02)
+    assert list(r.bounds(32)) == before
+    # a big drift re-publishes
+    assert r.observe(np.array([1.0, 30.0]))
+    assert list(r.bounds(32)) != before
+
+
+def _replicated_placement(loads):
+    """Table 4 (heavy `random`) replicated across both shards."""
+    return ShardPlacement(num_tables=TABLES, num_shards=2,
+                          replicas=((0,), (0,), (1,), (1,),
+                                    (0, 1), (0,)),
+                          loads=tuple(float(x) for x in loads),
+                          strategy="replicated")
+
+
+def test_routing_shifts_load_off_slow_replica_bit_exact(dense_ref):
+    """The tentpole routing contract: under a synthetically slow replica
+    the router converges to a smaller slice for it, slices keep
+    partitioning the batch, and lookups stay bit-exact throughout."""
+    ebc0, params = dense_ref
+    pats = _pats()
+    trace = _trace(pats)
+    plc = _replicated_placement(estimate_table_loads(trace, DIM * 4))
+    ebc = _build_sharded(params, pats, placement=plc)
+    st = ebc.storage
+    with st:
+        # replica k=1 of table 4 gets a per-row penalty (contended shard)
+        slow = next(u for u in st._units
+                    if u.chunk is not None and u.chunk[0] == 1)
+        real_lookup = slow.ps.lookup
+
+        def slow_lookup(idx):
+            time.sleep(idx.shape[0] * 2e-4)
+            return real_lookup(idx)
+        slow.ps.lookup = slow_lookup
+
+        t = int(slow.table_ids[0])
+        for step in range(6):
+            idx = _batch(pats, 16, seed=step)
+            got = np.asarray(ebc.apply(params, jnp.asarray(idx)))
+            want = np.asarray(ebc0.apply(params, jnp.asarray(idx)))
+            assert np.array_equal(got, want), step
+            if step % 2 == 1:
+                st.update_routing()
+        frac = st._routers[t].fractions()
+        assert frac[1] < 0.5 < frac[0]           # load moved off the slow one
+        b = st._routers[t].bounds(16)
+        assert b[0] == 0 and b[-1] == 16
+        # and the routed backend still serves bit-exactly
+        idx = _batch(pats, 16, seed=99)
+        assert np.array_equal(
+            np.asarray(ebc.apply(params, jnp.asarray(idx))),
+            np.asarray(ebc0.apply(params, jnp.asarray(idx))))
+
+
+def test_routing_update_flushes_stale_staged_batches(dense_ref):
+    """A routing move re-cuts future batches; staged batches cut at the
+    old bounds must be dropped, not left pinning queue slots forever."""
+    _, params = dense_ref
+    pats = _pats()
+    trace = _trace(pats)
+    plc = _replicated_placement(estimate_table_loads(trace, DIM * 4))
+    ebc = _build_sharded(params, pats, placement=plc)
+    st = ebc.storage
+    with st:
+        slow = next(u for u in st._units
+                    if u.chunk is not None and u.chunk[0] == 1)
+        real_lookup = slow.ps.lookup
+        slow.ps.lookup = lambda idx: (time.sleep(idx.shape[0] * 2e-4),
+                                      real_lookup(idx))[1]
+        for step in range(4):                    # gather cost observations
+            ebc.apply(params, jnp.asarray(_batch(pats, 16, seed=step)))
+        assert st.stage(_batch(pats, 16, seed=50))     # cut at equal bounds
+        replica_units = [u for u in st._units if u.chunk is not None]
+        solo_units = [u for u in st._units if u.chunk is None]
+        assert all(len(u.ps.prefetch) > 0 for u in st._units)
+        res = st.update_routing()
+        assert res is not None and res["changed"]
+        # only the moved table's replica units are flushed; solo units'
+        # slices never depend on routing, so their staged batches stay
+        assert all(len(u.ps.prefetch) == 0 for u in replica_units)
+        assert all(len(u.ps.prefetch) == 1 for u in solo_units)
+        # and the retained staged batches are still consumable
+        idx = _batch(pats, 16, seed=50)
+        ebc.apply(params, jnp.asarray(idx))
+        assert all(len(u.ps.prefetch) == 0 for u in solo_units)
+
+
+def test_update_routing_none_without_replicas(dense_ref):
+    _, params = dense_ref
+    ebc = _build_sharded(params, _pats(), placement="contiguous")
+    with ebc.storage:
+        assert ebc.storage.update_routing() is None
+
+
+# ---------------------------------------------------------------------------
+# serving-lifecycle bugfixes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend,build_kw", [
+    ("tiered", {}), ("sharded", {"num_shards": 2})])
+def test_closed_backend_raises_clear_error_and_drops_tunable(
+        dense_ref, backend, build_kw):
+    _, params = dense_ref
+    pats = _pats()
+    ebc = EmbeddingBagCollection(_stage_cfg(backend))
+    ebc.storage.build(params, PSConfig(hot_rows=8, warm_slots=8,
+                                       async_prefetch=True),
+                      trace=_trace(pats), **build_kw)
+    assert ebc.storage.capabilities().tunable
+    ebc.storage.close()
+    ebc.storage.close()                          # idempotent
+    caps = ebc.storage.capabilities()
+    assert not caps.tunable and not caps.stageable and not caps.migratable
+    idx = np.zeros((2, TABLES, POOL), np.int32)
+    with pytest.raises(RuntimeError, match="closed.*build"):
+        ebc.storage.lookup(params, idx)
+    with pytest.raises(RuntimeError, match="closed.*build"):
+        ebc.storage.stage(idx)
+    assert ebc.storage.can_stage() is False
+    # build() re-opens the backend
+    ebc.storage.build(params, PSConfig(hot_rows=8, warm_slots=8),
+                      trace=_trace(pats), **build_kw)
+    assert ebc.storage.capabilities().tunable
+    ebc.storage.lookup(params, idx)
+    ebc.storage.close()
+
+
+def test_never_built_error_still_mentions_build():
+    ebc = EmbeddingBagCollection(_stage_cfg("sharded"))
+    with pytest.raises(RuntimeError, match="build"):
+        ebc.apply({}, jnp.zeros((2, TABLES, POOL), jnp.int32))
+
+
+def test_chunk_bounds_matches_array_split_law():
+    """Regression: B=5, n=2 must split (3, 2) like np.array_split — the
+    old linspace truncation produced (2, 3) against its own docstring."""
+    assert [_chunk_bounds(5, 2, k) for k in range(2)] == [(0, 3), (3, 5)]
+    for batch in (0, 1, 5, 7, 16, 33):
+        for n in (1, 2, 3, 5):
+            want = np.array_split(np.arange(batch), n)
+            got = [_chunk_bounds(batch, n, k) for k in range(n)]
+            assert [hi - lo for lo, hi in got] == [len(w) for w in want]
+            assert got[0][0] == 0 and got[-1][1] == batch
+            assert all(a[1] == b[0] for a, b in zip(got, got[1:]))
+
+
+def test_merge_shard_stats_queue_depth_is_max_not_sum():
+    """Regression: summing the instantaneous queue_depth gauge across
+    shards inflated the merged report the auto-tuner reads."""
+    a = {"total_accesses": 10, "hot_hits": 10, "warm_hits": 0,
+         "cold_misses": 0, "queue_depth": 2, "max_queue_depth": 2}
+    b = {"total_accesses": 10, "hot_hits": 10, "warm_hits": 0,
+         "cold_misses": 0, "queue_depth": 1, "max_queue_depth": 3}
+    m = merge_shard_stats([a, b])
+    assert m["queue_depth"] == 2                 # per-shard max, not 3
+    assert m["max_queue_depth"] == 3
+    assert m["total_accesses"] == 20             # true counters still sum
+
+
+def test_submit_batch_auto_advances_qids():
+    """Regression: the old qid0=0 default made every batch reuse ids
+    0..B-1, colliding in latency accounting."""
+    model = DLRM(DLRMConfig(embedding=_stage_cfg("device"),
+                            bottom_mlp=(32, DIM), top_mlp=(16, 1)))
+    params = model.init(jax.random.PRNGKey(0))
+    pats = _pats()
+    with ServingSession(model, params,
+                        batcher=BatcherConfig(max_batch=4, max_wait_s=0.0),
+                        sla_ms=1e6) as sess:
+        dense = np.zeros((4, model.cfg.dense_features), np.float32)
+        sess.submit_batch(dense, _batch(pats, 4, seed=0))
+        sess.submit_batch(dense, _batch(pats, 4, seed=1))
+        qids = [q.qid for q in sess.server.batcher.queue]
+        assert qids == list(range(8))            # no duplicates
+        sess.submit_batch(dense, _batch(pats, 4, seed=2), qid0=100)
+        sess.submit_batch(dense, _batch(pats, 4, seed=3))
+        qids = [q.qid for q in sess.server.batcher.queue]
+        assert qids[-8:] == list(range(100, 108))  # explicit re-base honours
+        sess.drain()
+        assert sess.stats.served == 16

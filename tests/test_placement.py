@@ -626,10 +626,13 @@ def test_capacity_retune_through_session():
                 sess.poll()
         sess.drain()
         pct = sess.percentiles()
+        # capacities actually moved toward the (much larger) budget — read
+        # before close(): a closed backend drops its server (PR-5 lifecycle
+        # fix), so post-close reads of .ps are no longer a thing
+        cap_rows = model.ebc.storage.ps.cfg.capacity_rows()
     caps = [e for e in sess.tuner.events if e["kind"] == "capacity"]
     assert caps and pct["capacity_retunes"] == len(caps)
-    # capacities actually moved toward the (much larger) budget
-    assert model.ebc.storage.ps.cfg.capacity_rows() > 8
+    assert cap_rows > 8
 
 
 def test_estimate_device_budget_fallback_and_stats():
@@ -688,3 +691,25 @@ def test_check_bench_schema_vs_drift():
              "imbalance"): 1.0}
     errors, _ = cb.compare({}, good, 4.0, 0.5)
     assert any("not below contiguous" in e for e in errors)
+    # the replica-routing invariant: routed must beat equal slicing on
+    # both tail latency and slow-replica batch share
+    bad_route = {("sharded_migration", "sharded_migration/route_aware",
+                  "p99_ms"): 50.0,
+                 ("sharded_migration", "sharded_migration/route_equal",
+                  "p99_ms"): 40.0,
+                 ("sharded_migration", "sharded_migration/route_aware",
+                  "slow_frac"): 0.5,
+                 ("sharded_migration", "sharded_migration/route_equal",
+                  "slow_frac"): 0.5}
+    errors, _ = cb.compare({}, bad_route, 4.0, 0.5)
+    assert sum("replica routing regressed" in e for e in errors) == 2
+    ok_route = {("sharded_migration", "sharded_migration/route_aware",
+                 "p99_ms"): 20.0,
+                ("sharded_migration", "sharded_migration/route_equal",
+                 "p99_ms"): 40.0,
+                ("sharded_migration", "sharded_migration/route_aware",
+                 "slow_frac"): 0.05,
+                ("sharded_migration", "sharded_migration/route_equal",
+                 "slow_frac"): 0.5}
+    errors, _ = cb.compare({}, ok_route, 4.0, 0.5)
+    assert errors == []

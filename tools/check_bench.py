@@ -8,9 +8,13 @@ Compares a fresh `benchmarks/run.py --json` output against the checked-in
       record (sweep, name, metric) missing from the new output, a value
       changing type, or a deterministic value changing at all (booleans
       like `bit_exact`, strings like the capability descriptor, and the
-      exact-count metric `served`). Also the one semantic invariant the
-      placement work exists for: in the `sharded_balance` sweep, the
-      balanced placement's imbalance ratio must stay below contiguous.
+      exact-count metric `served`). Also the semantic invariants the
+      placement/routing work exists for: in the `sharded_balance` sweep
+      the balanced placement's imbalance ratio must stay below contiguous,
+      and in the `sharded_migration` sweep load-aware replica routing must
+      beat equal slicing (lower p99 AND a smaller slow-replica batch
+      share) — both compared WITHIN the fresh run, so host speed never
+      flakes them.
   warnings (exit 0)      — numeric drift: timing metrics (units us/ms/s)
       outside a generous x`--timing-factor` band, other numerics (hit
       rates, overlap fractions — thread-race dependent) moving more than
@@ -19,7 +23,8 @@ Compares a fresh `benchmarks/run.py --json` output against the checked-in
 
 New records absent from the baseline are reported as info — refresh the
 baseline (`benchmarks/run.py --sweep storage_backends --sweep
-sharded_balance --json benchmarks/baseline.json`) when adding sweeps.
+sharded_balance --sweep sharded_migration --json
+benchmarks/baseline.json`) when adding sweeps.
 
 Stdlib only (runs before `pip install` in CI if need be).
 """
@@ -110,6 +115,20 @@ def compare(base: dict, new: dict, timing_factor: float,
         errors.append(f"sharded_balance: balanced imbalance {b:g} is not "
                       f"below contiguous {c:g} — the placement planner "
                       f"regressed")
+
+    # semantic invariant: load-aware replica routing must beat equal
+    # slicing under the skewed-replica trace (a slow replica sheds load:
+    # smaller batch share AND lower tail latency)
+    def route(records, mode, metric):
+        return records.get(("sharded_migration",
+                            f"sharded_migration/route_{mode}", metric))
+    for metric, what in (("p99_ms", "p99"), ("slow_frac",
+                                             "slow-replica batch share")):
+        a, e = route(new, "aware", metric), route(new, "equal", metric)
+        if a is not None and e is not None and not a < e:
+            errors.append(f"sharded_migration: routed {what} {a:g} is not "
+                          f"below equal-slicing {e:g} — replica routing "
+                          f"regressed")
     return errors, warnings
 
 
