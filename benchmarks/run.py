@@ -55,6 +55,15 @@ ROWS_CSV: list[str] = []
 # record per metric it can parse out of a row
 JSON_RECORDS: list[dict] = []
 _CURRENT_SWEEP: str = ""
+# global seed offset (--seed). Default 0 keeps every sweep byte-identical
+# to the checked-in baseline; any other value shifts every pattern/rng/key
+# seed in lockstep so a full run can be reproduced from the JSON header.
+SEED = 0
+
+
+def seeded(s: int) -> int:
+    """Offset a sweep-local literal seed by the global --seed."""
+    return SEED + s
 
 
 def _coerce(v: str):
@@ -107,13 +116,13 @@ def _dlrm(backend="xla", pinned=0, plans=None) -> tuple[DLRM, dict]:
         num_tables=TABLES, rows=ROWS, dim=DIM, pooling=POOL,
         backend=backend, pinned_rows=pinned))
     model = DLRM(cfg, plans)
-    params = model.init(jax.random.PRNGKey(0))
+    params = model.init(jax.random.PRNGKey(SEED))
     return model, params
 
 
 def _indices(hotness: str, seed=0) -> np.ndarray:
-    pat = make_pattern(hotness, ROWS, seed=seed)
-    return np.stack([pat.sample(BATCH, POOL, seed=seed * 100 + t)
+    pat = make_pattern(hotness, ROWS, seed=seeded(seed))
+    return np.stack([pat.sample(BATCH, POOL, seed=seeded(seed) * 100 + t)
                      for t in range(TABLES)], axis=1)
 
 
@@ -123,10 +132,10 @@ def _hot_frac(hotness: str, k: int) -> float:
     same table, later traffic)."""
     if hotness == "one_item":
         return 1.0
-    pat = make_pattern(hotness, ROWS, seed=0)       # fixed rank->row map
-    train = pat.sample(BATCH, POOL, seed=0)
+    pat = make_pattern(hotness, ROWS, seed=seeded(0))  # fixed rank->row map
+    train = pat.sample(BATCH, POOL, seed=seeded(0))
     plan = plan_from_trace(train, ROWS, k)
-    evl = pat.sample(BATCH, POOL, seed=7)           # fresh traffic window
+    evl = pat.sample(BATCH, POOL, seed=seeded(7))   # fresh traffic window
     return hot_coverage(evl, plan.perm[:k])
 
 
@@ -136,16 +145,17 @@ def tab3_unique_access():
     """At the paper's reference workload (500K rows, B=2048, pool 150)."""
     from repro.core.access_patterns import REF_ROWS
     for h in HOTNESS:
-        pat = make_pattern(h, REF_ROWS)
-        got = unique_access_pct(pat.sample(2048, 150, seed=1), REF_ROWS)
+        pat = make_pattern(h, REF_ROWS, seed=seeded(0))
+        got = unique_access_pct(pat.sample(2048, 150, seed=seeded(1)),
+                                REF_ROWS)
         emit(f"tab3_unique_access/{h}", "", round(got, 4))
 
 
 def fig5_coverage():
     from repro.core.access_patterns import REF_ROWS
     for h in HOTNESS:
-        pat = make_pattern(h, REF_ROWS)
-        cov = coverage_curve(pat.sample(2048, 150, seed=1))
+        pat = make_pattern(h, REF_ROWS, seed=seeded(0))
+        cov = coverage_curve(pat.sample(2048, 150, seed=seeded(1)))
         i = min(int(np.searchsorted(cov[:, 0], 10.0, side="left")),
                 len(cov) - 1)
         emit(f"fig5_coverage_at_10pct_unique/{h}", "",
@@ -156,7 +166,7 @@ def fig1_embedding_contribution():
     model, params = _dlrm()
     fwd = jax.jit(lambda d, i: model.forward(params, d, i))
     emb = jax.jit(lambda i: model.embedding_only(params, i))
-    dense = jnp.asarray(np.random.default_rng(0)
+    dense = jnp.asarray(np.random.default_rng(SEED)
                         .standard_normal((BATCH, 13)).astype(np.float32))
     for h in HOTNESS:
         idx = jnp.asarray(_indices(h))
@@ -354,7 +364,7 @@ def tiered_ps_capacity_sweep():
     rows, batch, pool, dim = 2000, 256, 20, 8
 
     def run(hotness_list, frac):
-        pats = [make_pattern(h, rows, seed=t)
+        pats = [make_pattern(h, rows, seed=seeded(t))
                 for t, h in enumerate(hotness_list)]
         t_count = len(pats)
         cap = int(frac * rows)
@@ -410,11 +420,12 @@ def tiered_ps_sync_vs_async():
     """
     from repro.ps import ParameterServer, PSConfig
     rows, batch, pool, dim, t_count = 2000, 256, 20, 8, 4
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(SEED)
     tables = rng.normal(size=(t_count, rows, dim)).astype(np.float32)
 
     def run(hotness, async_prefetch):
-        pats = [make_pattern(hotness, rows, seed=t) for t in range(t_count)]
+        pats = [make_pattern(hotness, rows, seed=seeded(t))
+                for t in range(t_count)]
 
         def mk(seed):
             return np.stack([p.sample(batch, pool, seed=seed * 100 + t)
@@ -458,7 +469,8 @@ def tiered_ps_autotune():
     from repro.ps import ParameterServer, PSConfig
     rows, batch, pool, dim, t_count = 2000, 256, 20, 8, 4
     for h in ("high_hot", "med_hot", "low_hot"):
-        pats = [make_pattern(h, rows, seed=t) for t in range(t_count)]
+        pats = [make_pattern(h, rows, seed=seeded(t))
+                for t in range(t_count)]
 
         def mk(seed):
             return np.stack([p.sample(batch, pool, seed=seed * 100 + t)
@@ -506,12 +518,12 @@ def storage_backends(backends: list[str] | None = None):
         return DLRM(cfg)
 
     ref_model = mk_model("device")
-    params = ref_model.init(jax.random.PRNGKey(0))
+    params = ref_model.init(jax.random.PRNGKey(SEED))
     for backend in backends:
         for h in ("med_hot", "random"):
             stream = DLRMQueryStream(num_tables=t_count, rows=rows,
                                      pooling=pool, batch_size=batch,
-                                     hotness=h, seed=0)
+                                     hotness=h, seed=seeded(0))
             model = mk_model(backend)
             store = model.ebc.storage
             caps = store.capabilities()
@@ -568,7 +580,8 @@ def sharded_balance():
     hotness = ("one_item", "one_item", "high_hot", "high_hot",
                "med_hot", "low_hot", "random", "random")
     t_count = len(hotness)
-    pats = [make_pattern(h, rows, seed=t) for t, h in enumerate(hotness)]
+    pats = [make_pattern(h, rows, seed=seeded(t))
+            for t, h in enumerate(hotness)]
 
     def mk(seed):
         return np.stack([p.sample(batch, pool, seed=seed * 100 + t)
@@ -591,8 +604,8 @@ def sharded_balance():
         return DLRM(cfg)
 
     ref_model = mk_model("device")
-    params = ref_model.init(jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
+    params = ref_model.init(jax.random.PRNGKey(SEED))
+    rng = np.random.default_rng(SEED)
     for pname, plc in placements.items():
         model = mk_model("sharded")
         model.ebc.storage.build(
@@ -656,7 +669,8 @@ def sharded_migration():
     # -- routing: slow replica sheds load ---------------------------------
     hotness = ("random", "high_hot", "med_hot", "low_hot")
     t_count = len(hotness)
-    pats = [make_pattern(h, rows, seed=t) for t, h in enumerate(hotness)]
+    pats = [make_pattern(h, rows, seed=seeded(t))
+            for t, h in enumerate(hotness)]
 
     def mk(seed):
         return np.stack([p.sample(batch, pool, seed=seed * 100 + t)
@@ -670,8 +684,8 @@ def sharded_migration():
                          loads=tuple(float(x) for x in loads),
                          strategy="replicated")
     ref_model = mk_model("device", t_count)
-    params = ref_model.init(jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
+    params = ref_model.init(jax.random.PRNGKey(SEED))
+    rng = np.random.default_rng(SEED)
     for mode in ("equal", "aware"):
         model = mk_model("sharded", t_count)
         store = model.ebc.storage
@@ -722,10 +736,11 @@ def sharded_migration():
     hotness = ("one_item", "one_item", "high_hot", "high_hot",
                "med_hot", "low_hot", "random", "random")
     t_count = len(hotness)
-    pats = [make_pattern(h, rows, seed=t) for t, h in enumerate(hotness)]
+    pats = [make_pattern(h, rows, seed=seeded(t))
+            for t, h in enumerate(hotness)]
     trace = np.concatenate([mk(s) for s in range(2)], axis=0)
     ref_model = mk_model("device", t_count)
-    params = ref_model.init(jax.random.PRNGKey(0))
+    params = ref_model.init(jax.random.PRNGKey(SEED))
     model = mk_model("sharded", t_count)
     store = model.ebc.storage
     store.build(params,
@@ -752,17 +767,106 @@ def sharded_migration():
          f"imb_after={res.get('imbalance_after', 0.0):.4f}")
 
 
+def slo_overload():
+    """SLO-driven overload serving: flash-crowd replay on a virtual clock.
+
+    Calibrates the real batch service time on this host, then offers a
+    deterministic flash-crowd trace (base 0.5x the service rate, a 4x
+    spike) through `ServingSession(slo=..., clock=VirtualClock())` with
+    the SLO controller off vs on, plus an SLO-on steady leg. Because the
+    offered load is expressed in multiples of the MEASURED service rate
+    and arrivals live on the virtual clock, the comparison is
+    host-independent: `tools/check_bench.py` enforces (within one run)
+    that SLO-on recovers its windowed p99 to the target after the spike
+    while SLO-off does not, that the spike's shed fraction stays bounded,
+    and that the steady leg sheds nothing.
+    """
+    from repro.ps import PSConfig
+    from repro.serving import BatcherConfig, ServingSession, SLOConfig
+    from repro.traffic import VirtualClock, make_traffic, replay
+    rows, dim, batch, pool, t_count = 2000, 16, 32, 10, 4
+
+    def mk_session(slo):
+        cfg = DLRMConfig(embedding=EmbeddingStageConfig(
+            num_tables=t_count, rows=rows, dim=dim, pooling=pool,
+            backend="xla", storage="tiered"),
+            bottom_mlp=(32, dim), top_mlp=(16, 1))
+        model = DLRM(cfg)
+        params = model.init(jax.random.PRNGKey(SEED))
+        gen0 = make_traffic("steady", base_qps=100.0, num_tables=t_count,
+                            rows=rows, pooling=pool, seed=seeded(0))
+        trace = np.stack([q.indices for q in gen0.queries(64)])
+        model.ebc.storage.build(
+            params,
+            PSConfig(hot_rows=rows // 10, warm_slots=rows // 10,
+                     prefetch_depth=2, window_batches=8,
+                     async_prefetch=True),
+            trace=trace)
+        return ServingSession(
+            model, params,
+            batcher=BatcherConfig(max_batch=batch, max_wait_s=0.002),
+            slo=slo, clock=VirtualClock())
+
+    # calibrate: real batch service time -> offered load in service-rate
+    # multiples (host-independent overload factors)
+    sess = mk_session(None)
+    dense = np.zeros((batch, 13), np.float32)
+    idx = np.zeros((batch, t_count, pool), np.int32)
+    t0 = time.perf_counter()
+    for _ in range(5):
+        np.asarray(sess._forward(dense, idx))
+    t_b = (time.perf_counter() - t0) / 5
+    sess.close()
+    svc_qps = batch / t_b
+    target_ms = 6.0 * t_b * 1e3
+    base_qps, spike_qps = 0.5 * svc_qps, 4.0 * svc_qps
+    # the steady leg runs at a deeper margin (0.25x): it asserts that an
+    # ARMED controller sheds nothing in steady state, and t_b is calibrated
+    # once up front — per-batch service drifting a few percent over the
+    # flash legs must not turn headroom into backlog
+    steady_qps = 0.25 * svc_qps
+    spike_start, spike_len, post = 8.0 * t_b, 24.0 * t_b, 16.0 * t_b
+    n_flash = int(base_qps * (spike_start + post) + spike_qps * spike_len)
+    n_steady = int(steady_qps * (spike_start + spike_len + post))
+
+    def leg(kind, slo_on, n, qps):
+        slo = (SLOConfig(target_p99_ms=target_ms, shed_deadline_frac=0.4,
+                         window_queries=256) if slo_on else None)
+        sess = mk_session(slo)
+        gen = make_traffic(kind, base_qps=qps, spike_qps=spike_qps,
+                           spike_start_s=spike_start, spike_len_s=spike_len,
+                           num_tables=t_count, rows=rows, pooling=pool,
+                           seed=seeded(1))
+        rep = replay(sess, gen.queries(n), window_queries=256)
+        pct = rep.percentiles
+        sess.close()
+        return rep, pct
+
+    for name, kind, on, n, qps in (
+            ("flash_off", "flash", False, n_flash, base_qps),
+            ("flash_on", "flash", True, n_flash, base_qps),
+            ("steady_on", "steady", True, n_steady, steady_qps)):
+        rep, pct = leg(kind, on, n, qps)
+        post_p99 = rep.final_windowed_p99_ms() or 0.0
+        line = (f"post_p99_ms={post_p99:.2f} target_ms={target_ms:.2f} "
+                f"shed_frac={rep.shed_frac:.3f} answered={rep.served}")
+        if on:
+            line += (f" breaches={pct.get('slo_breaches', 0)} "
+                     f"degraded_batches={pct.get('slo_degraded_batches', 0)}")
+        emit(f"slo_overload/{name}", "", line)
+
+
 ALL = [tab3_unique_access, fig5_coverage, fig1_embedding_contribution,
        fig6_pipeline_sweep, fig9_prefetch_distance, fig11_l2p_pooling,
        fig12_embedding_speedup, fig12_measured_cpu, fig13_e2e_speedup,
        fig14_gap, fig15_buffer_schemes, fig16_no_optmt, fig17_heterogeneous,
        tab45_microarch, tiered_ps_capacity_sweep, tiered_ps_sync_vs_async,
        tiered_ps_autotune, storage_backends, sharded_balance,
-       sharded_migration]
+       sharded_migration, slo_overload]
 
 
 def main(argv: list[str] | None = None) -> None:
-    global _CURRENT_SWEEP
+    global _CURRENT_SWEEP, SEED
     from repro import storage as storage_registry
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--sweep", action="append", default=None,
@@ -777,7 +881,13 @@ def main(argv: list[str] | None = None) -> None:
                     help="also write structured records (schema_version 1: "
                          "sweep/name/metric/value/units per record) for "
                          "tools/check_bench.py")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="global seed offset threaded through every "
+                         "sweep's patterns/rngs/keys (default 0 "
+                         "reproduces the checked-in baseline exactly); "
+                         "recorded at the top level of --json output")
     args = ap.parse_args(argv)
+    SEED = args.seed
     selected = (ALL if args.sweep is None
                 else [fn for fn in ALL if fn.__name__ in args.sweep])
     print("name,us_per_call,derived")
@@ -789,8 +899,8 @@ def main(argv: list[str] | None = None) -> None:
             fn()
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"schema_version": 1, "records": JSON_RECORDS},
-                      f, indent=1)
+            json.dump({"schema_version": 1, "seed": SEED,
+                       "records": JSON_RECORDS}, f, indent=1)
         print(f"wrote {len(JSON_RECORDS)} records to {args.json}",
               file=sys.stderr)
 

@@ -16,12 +16,24 @@ exercises the deprecated PR-2 shim path (`build_parameter_server` +
 DeprecationWarning. See docs/serving.md for the operator guide and the
 old→new migration table.
 
+`--trace` switches to timestamped-trace replay (repro.traffic): queries
+arrive on a virtual clock following a named rate profile (steady Zipf,
+diurnal sinusoid, flash-crowd spike, hotness shift) at a rate calibrated
+to this host's measured service rate, so "overload" means the same thing
+everywhere. `--slo-p99-ms` arms the SLO controller on top — admission
+control sheds (typed) when the predicted queue wait blows the deadline
+budget, and the escalation ladder can drop into degraded warm-cache-only
+serving. The run ends with a shed/degraded summary table (see
+docs/serving.md "Serving under overload").
+
     PYTHONPATH=src python examples/serve_dlrm.py [--queries 256]
     PYTHONPATH=src python examples/serve_dlrm.py --storage tiered
     PYTHONPATH=src python examples/serve_dlrm.py --storage sharded --shards 4
     PYTHONPATH=src python examples/serve_dlrm.py --storage tiered --async \
         --auto-budget-kib 4096 --warm-backing device
     PYTHONPATH=src python examples/serve_dlrm.py --storage tiered --legacy
+    PYTHONPATH=src python examples/serve_dlrm.py --storage tiered \
+        --trace flash --slo-p99-ms 20
 """
 import argparse
 import time
@@ -94,6 +106,17 @@ def parse_args():
     ap.add_argument("--legacy", action="store_true",
                     help="drive the deprecated build_parameter_server + "
                          "InferenceServer(ps=...) shim path")
+    ap.add_argument("--trace", choices=("steady", "diurnal", "flash",
+                                        "shift"), default=None,
+                    help="replay a timestamped trace on a virtual clock "
+                         "instead of the hotness sweep (repro.traffic)")
+    ap.add_argument("--slo-p99-ms", type=float, default=0.0,
+                    help="trace mode: arm the SLO controller with this "
+                         "windowed-p99 target (deadline admission + "
+                         "degraded-mode ladder; 0 = off)")
+    ap.add_argument("--base-qps", type=float, default=0.0,
+                    help="trace mode: offered base rate (0 = calibrate "
+                         "to 0.5x this host's measured service rate)")
     return ap.parse_args()
 
 
@@ -178,6 +201,89 @@ def run_session(args, hotness) -> tuple[dict, int, float]:
     return pct, viol, emb_share
 
 
+def run_trace(args) -> None:
+    """Timestamped-trace replay (repro.traffic): deterministic offered
+    load on a virtual clock, real measured service cost, optional SLO
+    controller. Prints a timeline excerpt and the shed/degraded summary
+    the operator guide documents."""
+    from repro.serving import SLOConfig
+    from repro.traffic import VirtualClock, make_traffic, replay
+    cfg = DLRMConfig(embedding=EmbeddingStageConfig(
+        num_tables=args.tables, rows=args.rows, dim=128,
+        pooling=args.pooling, storage=args.storage))
+    model = DLRM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    stream = DLRMQueryStream(num_tables=args.tables, rows=args.rows,
+                             pooling=args.pooling, batch_size=args.batch,
+                             hotness="med_hot", seed=0)
+    device_resident = model.ebc.storage.capabilities().device_resident
+    if not device_resident:
+        build_storage(args, model, params, stream)
+    slo = (SLOConfig(target_p99_ms=args.slo_p99_ms)
+           if args.slo_p99_ms else None)
+    sess = ServingSession(
+        model, params,
+        batcher=BatcherConfig(max_batch=args.batch, max_wait_s=0.002),
+        sla_ms=500,
+        refresh_every_batches=(0 if device_resident
+                               else args.refresh_every),
+        async_refresh=args.async_mode and not device_resident,
+        slo=slo, clock=VirtualClock())
+    try:
+        # calibrate the real batch service time so the offered load is a
+        # known multiple of what this host can serve (host-independent
+        # overload); the probe batches are not traffic — drop their
+        # cache footprint like warmup does
+        dense = np.zeros((args.batch, cfg.dense_features), np.float32)
+        idx = np.zeros((args.batch, args.tables, args.pooling), np.int32)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            np.asarray(sess._forward(dense, idx))
+        t_b = (time.perf_counter() - t0) / 3
+        sess.storage.flush()
+        sess.storage.reset_stats()
+        svc_qps = args.batch / t_b
+        base = args.base_qps or 0.5 * svc_qps
+        kw = dict(base_qps=base, num_tables=args.tables, rows=args.rows,
+                  pooling=args.pooling, seed=0)
+        if args.trace == "flash":
+            kw.update(spike_qps=4.0 * svc_qps, spike_start_s=8.0 * t_b,
+                      spike_len_s=24.0 * t_b)
+        elif args.trace == "diurnal":
+            kw.update(period_s=args.queries / base, amplitude=0.5)
+        elif args.trace == "shift":
+            kw.update(shift_at_s=0.5 * args.queries / base)
+        gen = make_traffic(args.trace, **kw)
+        window = max(32, min(256, args.queries // 2))
+        rep = replay(sess, gen.queries(args.queries),
+                     window_queries=window)
+        reasons = dict(sess.stats.shed_reasons)
+    finally:
+        sess.close()
+    print(f"trace={args.trace} base_qps={base:.0f} "
+          f"({base / svc_qps:.2f}x service rate) "
+          f"slo={'off' if slo is None else f'{args.slo_p99_ms:g}ms'}")
+    print("    t_ms  served   shed  qlen  wp99_ms  lvl  degraded")
+    step = max(1, len(rep.timeline) // 8)
+    picks = list(rep.timeline[::step])
+    if rep.timeline and picks[-1] is not rep.timeline[-1]:
+        picks.append(rep.timeline[-1])
+    for s in picks:
+        print(f"{s.t_s * 1e3:8.1f} {s.served:7d} {s.shed:6d} "
+              f"{s.queue_len:5d} {s.windowed_p99_ms:8.2f} "
+              f"{s.slo_level:4d} {'yes' if s.degraded else 'no':>9s}")
+    pct = rep.percentiles
+    line = (f"submitted={rep.submitted} admitted={rep.admitted} "
+            f"served={rep.served} shed={rep.shed} "
+            f"(frac={rep.shed_frac:.3f}"
+            + (f", {reasons}" if reasons else "") + ") "
+            f"final_wp99={rep.final_windowed_p99_ms() or 0.0:.2f}ms")
+    if slo is not None:
+        line += (f" breaches={pct.get('slo_breaches', 0)} "
+                 f"degraded_batches={pct.get('slo_degraded_batches', 0)}")
+    print(line, flush=True)
+
+
 def run_legacy(args, hotness) -> tuple[dict, int, float]:
     """The deprecated PR-2 wiring, kept exercising the shims: manual
     warmup, build_parameter_server(), InferenceServer(ps=...)."""
@@ -233,6 +339,15 @@ def main():
         raise SystemExit("--legacy exercises the tiered "
                          "build_parameter_server shim; use "
                          "--storage tiered")
+    if args.slo_p99_ms and not args.trace:
+        raise SystemExit("--slo-p99-ms needs --trace: the SLO controller "
+                         "watches windowed p99 over a timestamped replay")
+    if args.trace:
+        if args.legacy:
+            raise SystemExit("--trace replays through ServingSession; "
+                             "drop --legacy")
+        run_trace(args)
+        return
     levels = HOTNESS if args.hotness == "all" else (args.hotness,)
     for hotness in levels:
         pct, viol, emb_share = (run_legacy(args, hotness) if args.legacy

@@ -5,7 +5,8 @@ from repro.core.access_patterns import (HOTNESS_LEVELS, PAPER_UNIQUE_PCT,
 from repro.core.embedding import EmbeddingBagCollection, EmbeddingStageConfig
 from repro.core.hot_cache import (HotPlan, build_plan, identity_plan,
                                   plan_from_trace, profile_counts)
-from repro.core.plan import (EmbeddingPlanReport, TierCapacityPlan,
-                             estimate_device_budget, plan_embedding_stage,
+from repro.core.plan import (AdmissionPlan, EmbeddingPlanReport,
+                             TierCapacityPlan, estimate_device_budget,
+                             plan_admission, plan_embedding_stage,
                              plan_shard_migration, plan_shard_placement,
                              plan_tier_capacities)

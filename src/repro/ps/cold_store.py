@@ -26,6 +26,7 @@ class ColdStore:
         self.num_tables, self.num_rows, self.dim = tables.shape
         self.gathered_rows = 0      # rows pulled host->device (proxy)
         self.gather_calls = 0
+        self._norms_sq = None       # lazy [T, R] squared row norms
         self._lock = threading.Lock()   # counters only; tables are read-only
 
     @property
@@ -47,6 +48,21 @@ class ColdStore:
         with self._lock:
             self.gathered_rows = 0
             self.gather_calls = 0
+
+    def row_norms_sq(self, table: int) -> np.ndarray:
+        """Per-row squared L2 norms for one table, [R] float64.
+
+        Lazily computed once for all tables then cached (tables are
+        immutable during serving). Lets degraded-mode serving report the
+        EXACT L2 error of zero-filling a row — ||row||² — without ever
+        performing the gather it skipped.
+        """
+        if self._norms_sq is None:
+            with self._lock:
+                if self._norms_sq is None:
+                    t64 = self.tables.astype(np.float64, copy=False)
+                    self._norms_sq = np.einsum("trd,trd->tr", t64, t64)
+        return self._norms_sq[table]
 
     def hot_block(self, table: int, hot_row_ids: np.ndarray) -> np.ndarray:
         """Materialize the device-resident hot block for one table."""

@@ -79,6 +79,12 @@ class ParameterServer:
         self.hot_hits = 0
         self.total_accesses = 0
         self.refreshes = 0
+        # degraded (warm-cache-only) overload mode: cold misses are
+        # zero-filled instead of gathered — see set_degraded()
+        self.degraded_mode = False
+        self.degraded_lookups = 0
+        self.degraded_rows = 0          # zero-filled row ACCESSES
+        self.degraded_l2_sq = 0.0       # exact Σ ||row||² over those
         # one-shot hint from the serving layer: only the first N queries of
         # the next lookup are real traffic (the rest is batcher padding)
         self._valid_hint: int | None = None
@@ -155,20 +161,37 @@ class ParameterServer:
             vals[resident] = warm.read(slots[resident])
         if (~resident).any():
             mu, mcounts = u[~resident], counts[~resident]
-            srows, sdata, residual = self.prefetch.split_misses(
-                staged, t, mu)
-            payload = np.empty((len(mu), D), self.cold.tables.dtype)
-            if residual.size:
-                rdata = self.cold.gather(t, residual)
-            # mu is sorted; scatter staged + residual payloads back
-            if srows.size:
-                payload[np.searchsorted(mu, srows)] = sdata
-            if residual.size:
-                payload[np.searchsorted(mu, residual)] = rdata
-            vals[~resident] = payload
-            # admit hottest-first so capacity truncation keeps the best rows
-            order = np.lexsort((mu, -mcounts))
-            warm.admit(mu[order], payload[order], mcounts[order])
+            if self.degraded_mode:
+                # warm-cache-only overload mode: zero-fill instead of
+                # gathering, and NEVER admit the zeros into the warm tier
+                # (a poisoned entry would break bit-exactness after the
+                # mode lifts). Tier access accounting stays identical to
+                # admit()'s (first access = miss, duplicates = hits) so
+                # the hot+warm+cold == total invariant survives; the
+                # degraded counters ride on top, with the exact L2 error
+                # of each zero-fill from the precomputed row norms.
+                vals[~resident] = 0
+                warm.misses += len(mu)
+                warm.hits += int(mcounts.sum()) - len(mu)
+                self.degraded_rows += int(mcounts.sum())
+                self.degraded_l2_sq += float(
+                    (self.cold.row_norms_sq(t)[mu] * mcounts).sum())
+            else:
+                srows, sdata, residual = self.prefetch.split_misses(
+                    staged, t, mu)
+                payload = np.empty((len(mu), D), self.cold.tables.dtype)
+                if residual.size:
+                    rdata = self.cold.gather(t, residual)
+                # mu is sorted; scatter staged + residual payloads back
+                if srows.size:
+                    payload[np.searchsorted(mu, srows)] = sdata
+                if residual.size:
+                    payload[np.searchsorted(mu, residual)] = rdata
+                vals[~resident] = payload
+                # admit hottest-first so capacity truncation keeps the
+                # best rows
+                order = np.lexsort((mu, -mcounts))
+                warm.admit(mu[order], payload[order], mcounts[order])
         out[cold_idx] = vals[inv]
         return out
 
@@ -202,7 +225,15 @@ class ParameterServer:
                 return pad
             real = self.lookup(indices[:valid])
             return np.concatenate([real, pad], axis=0)
-        staged = self.prefetch.consume(indices)
+        if self.degraded_mode:
+            # no staged batches exist while degraded (entering the mode
+            # flushed the queue and can_stage() is gated off), so there is
+            # nothing to consume — and consuming would risk waiting on a
+            # worker, exactly the latency the mode exists to avoid
+            staged = None
+            self.degraded_lookups += 1
+        else:
+            staged = self.prefetch.consume(indices)
         self.window.append(indices)
         self.total_accesses += indices.size
         out = np.empty((B, T, L, self.cold.dim), self.cold.tables.dtype)
@@ -211,11 +242,36 @@ class ParameterServer:
                 t, indices[:, t].ravel(), staged).reshape(B, L, -1)
         return out
 
+    # -- degraded (warm-cache-only) overload mode ----------------------------
+    def degraded(self) -> bool:
+        return self.degraded_mode
+
+    def set_degraded(self, on: bool) -> bool:
+        """Toggle warm-cache-only serving (the overload escape hatch).
+
+        While on: lookups serve hot/warm hits exactly as usual but
+        ZERO-FILL cold misses instead of gathering them, and no new
+        prefetch work starts (`can_stage()` gates off). Entering the mode
+        flushes staged batches — their payloads describe batches that will
+        now be answered degraded, and a stale staged batch would pin a
+        queue slot forever once staging resumes. Leaving the mode restores
+        bit-exact serving immediately: the warm tier is never polluted
+        with zeros, and staging re-enables on the next probe. The zeroed
+        accesses are tallied (`degraded_rows`) together with their exact
+        L2 error vs the dense gather (`degraded_l2_delta` in stats()).
+        Returns True (the toggle is always available on a live server)."""
+        on = bool(on)
+        if on and not self.degraded_mode:
+            self.prefetch.flush()
+        self.degraded_mode = on
+        return True
+
     # -- prefetch -----------------------------------------------------------
     def can_stage(self) -> bool:
         """Backpressure probe for callers that would otherwise do assembly
-        work just to have stage() discard it (queue full / staging off)."""
-        return self.prefetch.can_stage()
+        work just to have stage() discard it (queue full / staging off /
+        degraded mode — no new cold work while shedding load)."""
+        return not self.degraded_mode and self.prefetch.can_stage()
 
     def stage(self, indices: np.ndarray) -> bool:
         """Pre-resolve a FUTURE batch's cold misses (overlap analogue).
@@ -234,8 +290,8 @@ class ParameterServer:
         (and performs no gather work) when the queue is full — the
         backpressure signal.
         """
-        if not self.prefetch.can_stage():
-            return False    # queue full: don't burn probes on a discard
+        if not self.can_stage():
+            return False    # queue full / degraded: don't probe for a discard
         indices = np.asarray(indices)
         rows: dict[int, np.ndarray] = {}
         for t in range(self.cold.num_tables):
@@ -399,6 +455,13 @@ class ParameterServer:
             "cache_hit_rate": (self.hot_hits + warm_hits) / total
                               if total else 0.0,
             "cold_gathered_rows": self.cold.gathered_rows,
+            # degraded (warm-cache-only) serving: zero-filled accesses and
+            # their exact L2 error vs the dense gather. `degraded_l2_sq`
+            # is the mergeable raw sum; the delta is derived from it.
+            "degraded_lookups": self.degraded_lookups,
+            "degraded_rows": self.degraded_rows,
+            "degraded_l2_sq": self.degraded_l2_sq,
+            "degraded_l2_delta": float(np.sqrt(self.degraded_l2_sq)),
         }
         s.update(self.prefetch.stats())
         return s
@@ -406,6 +469,9 @@ class ParameterServer:
     def reset_stats(self) -> None:
         self.hot_hits = 0
         self.total_accesses = 0
+        self.degraded_lookups = 0
+        self.degraded_rows = 0
+        self.degraded_l2_sq = 0.0
         for w in self.warm:
             w.hits = w.misses = w.evictions = w.insertions = 0
         self.cold.reset_counters()

@@ -152,6 +152,11 @@ class AutoTuner:
         self.migratable = caps.migratable
         self.batches = 0
         self.events: list[dict] = []
+        # while True, the queue-depth leg holds: an engaged SLO controller
+        # (serving/slo.py) owns the depth during a breach, and two
+        # controllers steering one knob is the oscillation the tests pin
+        # down. The other legs (capacity/routing/migration) keep running.
+        self.depth_suspended = False
         self._last = self._snapshot() if self.enabled else {}
         self._last_depth = storage.prefetch_depth() if self.enabled else 0
 
@@ -168,7 +173,14 @@ class AutoTuner:
         c = self.cfg
         if c.depth_every_batches and \
                 self.batches % c.depth_every_batches == 0:
-            self._depth_step()
+            if self.depth_suspended:
+                # don't tune, but DO roll the observation window forward:
+                # resuming against counters from before the suspension
+                # would hand the controller a stale overlap fraction
+                self._last = self._snapshot()
+                self.storage.take_prefetch_window_peak()
+            else:
+                self._depth_step()
         if c.capacity_every_batches and \
                 self.batches % c.capacity_every_batches == 0:
             self._capacity_step()

@@ -1,16 +1,21 @@
-"""Serving layer: the batching loop and the session facade.
+"""Serving layer: the batching loop, the session facade, and the SLO loop.
 
 `ServingSession` is the front door — it owns batcher + engine + storage
 and drives prefetch/refresh through the `repro.storage` protocol.
 `InferenceServer`/`Batcher` remain the inner loop for callers that wire
 their own engines. Runtime auto-tuning (`AutoTuneConfig`, re-exported from
-`repro.ps.tuning`) hangs off `ServingSession(auto_tune=...)`.
+`repro.ps.tuning`) hangs off `ServingSession(auto_tune=...)`; the SLO
+outer loop (`SLOConfig`/`SLOController`, admission shedding via
+`BatcherConfig.max_queue`/`deadline_ms` + `QueryShedError`) hangs off
+`ServingSession(slo=...)`.
 """
 from repro.ps.tuning import AutoTuneConfig, QueueDepthController
 from repro.serving.server import (Batcher, BatcherConfig, InferenceServer,
-                                  Query, ServeStats)
+                                  Query, QueryShedError, ServeStats)
 from repro.serving.session import ServingSession
+from repro.serving.slo import SLOConfig, SLOController, windowed_p99_ms
 
 __all__ = ["Batcher", "BatcherConfig", "InferenceServer", "Query",
-           "ServeStats", "ServingSession", "AutoTuneConfig",
-           "QueueDepthController"]
+           "QueryShedError", "ServeStats", "ServingSession",
+           "AutoTuneConfig", "QueueDepthController", "SLOConfig",
+           "SLOController", "windowed_p99_ms"]

@@ -42,7 +42,10 @@ class Query:
     qid: int
     dense: np.ndarray          # [F]
     indices: np.ndarray        # [T, L]
-    arrival_s: float = 0.0
+    # None = stamped by the batcher at submit time (live traffic); replay
+    # drivers preset the trace's nominal arrival so latency accounting
+    # reflects offered load even when the server is behind
+    arrival_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -50,15 +53,93 @@ class BatcherConfig:
     max_batch: int = 2048
     max_wait_s: float = 0.002   # SLA-driven batching window
     pad_to_max: bool = True     # stable shapes => no recompilation
+    # admission control (overload shedding); both default OFF so steady
+    # state is untouched:
+    # hard bound on queued queries — submit() sheds (typed rejection)
+    # instead of letting arrivals outpace service without backpressure
+    max_queue: int = 0          # 0 = unbounded
+    # per-query deadline budget: shed at submit when the predicted wait
+    # (queued batches ahead x EWMA batch service time) already blows it
+    deadline_ms: float = 0.0    # 0 = off
+
+
+class QueryShedError(RuntimeError):
+    """Typed admission rejection — a shed query is never silently dropped.
+
+    Raised by `Batcher.submit` when admission control rejects a query;
+    carries enough context for the caller to retry elsewhere or count the
+    loss. `reason` is `"queue_full"` (max_queue bound) or `"deadline"`
+    (predicted wait exceeds the deadline budget)."""
+
+    def __init__(self, qid: int, reason: str, queue_len: int,
+                 predicted_wait_s: Optional[float] = None):
+        self.qid = qid
+        self.reason = reason
+        self.queue_len = queue_len
+        self.predicted_wait_s = predicted_wait_s
+        wait = ("" if predicted_wait_s is None
+                else f", predicted wait {predicted_wait_s * 1e3:.1f}ms")
+        super().__init__(f"query {qid} shed ({reason}; "
+                         f"queue_len={queue_len}{wait})")
 
 
 class Batcher:
-    def __init__(self, cfg: BatcherConfig):
+    """Groups queries into batches; owns the admission-control decision.
+
+    `clock` abstracts time for the batching window and arrival stamps —
+    the default is the real `time.perf_counter`; replay harnesses pass a
+    `repro.traffic.VirtualClock` so offered load is deterministic.
+    """
+
+    #: EWMA smoothing for the observed batch service time (deadline
+    #: admission). One observation per executed batch; 0.3 tracks load
+    #: shifts within a few batches without chasing single-batch noise.
+    SERVICE_EWMA_ALPHA = 0.3
+
+    def __init__(self, cfg: BatcherConfig, clock: Optional[Callable] = None):
         self.cfg = cfg
+        self.clock = clock if clock is not None else time.perf_counter
         self.queue: collections.deque[Query] = collections.deque()
+        self.shed = 0
+        self.shed_reasons: collections.Counter = collections.Counter()
+        self.service_ewma_s: Optional[float] = None
+
+    def observe_service(self, dt_s: float) -> None:
+        """One executed batch took `dt_s` seconds — feed the service-time
+        EWMA the deadline admission predicts waits from."""
+        a = self.SERVICE_EWMA_ALPHA
+        self.service_ewma_s = (dt_s if self.service_ewma_s is None
+                               else a * dt_s + (1 - a) * self.service_ewma_s)
+
+    def _admit(self, q: Query) -> None:
+        """Shed (raise) instead of queueing when admission control says the
+        query cannot be served usefully: the queue bound is hit, or the
+        predicted wait to its batch's completion already exceeds the
+        deadline budget. Runs BEFORE the query is queued, so a shed query
+        costs no assembly or service work at all."""
+        cfg = self.cfg
+        qlen = len(self.queue)
+        if cfg.max_queue and qlen >= cfg.max_queue:
+            self.shed += 1
+            self.shed_reasons["queue_full"] += 1
+            raise QueryShedError(q.qid, "queue_full", qlen)
+        if cfg.deadline_ms and self.service_ewma_s is not None:
+            # whole batches queued AHEAD of this query. Its own batch's
+            # service deliberately doesn't count: an empty queue must
+            # always admit, or one slow batch (compile, GC) could push the
+            # EWMA past the deadline and wedge admission shut forever —
+            # nothing served means the estimate never refreshes
+            batches_ahead = qlen // cfg.max_batch
+            wait = batches_ahead * self.service_ewma_s
+            if wait > cfg.deadline_ms / 1e3:
+                self.shed += 1
+                self.shed_reasons["deadline"] += 1
+                raise QueryShedError(q.qid, "deadline", qlen, wait)
 
     def submit(self, q: Query) -> None:
-        q.arrival_s = time.perf_counter()
+        self._admit(q)
+        if q.arrival_s is None:
+            q.arrival_s = self.clock()
         self.queue.append(q)
 
     def next_batch(self, force: bool = False) -> Optional[list[Query]]:
@@ -69,7 +150,7 @@ class Batcher:
             return None
         deadline = self.queue[0].arrival_s + self.cfg.max_wait_s
         if (not force and len(self.queue) < self.cfg.max_batch
-                and time.perf_counter() < deadline):
+                and self.clock() < deadline):
             return None
         out = []
         while self.queue and len(out) < self.cfg.max_batch:
@@ -84,6 +165,12 @@ class ServeStats:
     query_latencies_s: list = dataclasses.field(default_factory=list)
     # refreshes whose planning phase ran on the helper thread
     async_refreshes: int = 0
+    # admission control: queries shed at submit (typed rejections, by
+    # reason) and the request-queue length gauge, mirrored from the
+    # batcher after every submit/poll
+    shed_queries: int = 0
+    shed_reasons: dict = dataclasses.field(default_factory=dict)
+    request_queue_len: int = 0
     # storage-backend cache counters (tiered / sharded / any backend whose
     # stats() reports them): hot/warm hit rates, cold misses, evictions,
     # refreshes, and the prefetch queue/overlap counters — updated by
@@ -97,7 +184,10 @@ class ServeStats:
                 # queue / overlap counters (async + sync staging)
                 "queue_depth", "max_queue_depth", "off_critical_frac",
                 "consume_ready", "consume_waited", "consume_wait_s",
-                "consume_overlap_frac")
+                "consume_overlap_frac",
+                # degraded (warm-cache-only) serving counters + the exact
+                # L2 error of the zero-filled accesses vs the dense gather
+                "degraded_lookups", "degraded_rows", "degraded_l2_delta")
 
     def percentiles(self) -> dict:
         """Latency percentiles plus (when a PS is attached) the cache and
@@ -113,6 +203,11 @@ class ServeStats:
                "p99_ms": float(np.percentile(q, 99)),
                "mean_batch_ms": float(b.mean()),
                "served": self.served}
+        # admission gauges ride along unconditionally: an operator reading
+        # shed_queries == 0 learns shedding is armed-but-idle, which a
+        # missing key cannot say
+        out["shed_queries"] = self.shed_queries
+        out["request_queue_len"] = self.request_queue_len
         for k in self._PS_KEYS:
             if k in self.ps_stats:
                 out[k] = self.ps_stats[k]
@@ -142,7 +237,8 @@ class InferenceServer:
     def __init__(self, forward: Callable, batcher_cfg: BatcherConfig,
                  sla_ms: float = 50.0, ps=None, storage=None,
                  refresh_every_batches: int = 0,
-                 async_refresh: bool = False):
+                 async_refresh: bool = False,
+                 clock: Optional[Callable] = None):
         if ps is not None and storage is not None:
             raise ValueError("pass either storage= (preferred) or the "
                              "deprecated ps=, not both")
@@ -155,7 +251,13 @@ class InferenceServer:
             from repro.storage import TieredStorage
             storage = TieredStorage.adopt(ps)
         self.forward = forward
-        self.batcher = Batcher(batcher_cfg)
+        # `clock` abstracts serving time: None = real time.perf_counter;
+        # a replay harness passes a `repro.traffic.VirtualClock` (callable
+        # with an `advance()` method) so latencies are measured in trace
+        # time — real batch service durations advance the virtual clock
+        self.clock = clock if clock is not None else time.perf_counter
+        self._clock_advance = getattr(clock, "advance", None)
+        self.batcher = Batcher(batcher_cfg, clock=self.clock)
         self.sla_s = sla_ms / 1e3
         self.stats = ServeStats()
         self.storage = storage
@@ -176,7 +278,16 @@ class InferenceServer:
         return getattr(self.storage, "ps", None)
 
     def submit(self, q: Query) -> None:
-        self.batcher.submit(q)
+        """Admit or shed one query. A shed query raises `QueryShedError`
+        (typed, never silent); either way the admission gauges mirror into
+        stats so `percentiles()` reflects sheds that happened between
+        polls."""
+        try:
+            self.batcher.submit(q)
+        finally:
+            self.stats.shed_queries = self.batcher.shed
+            self.stats.shed_reasons = dict(self.batcher.shed_reasons)
+            self.stats.request_queue_len = len(self.batcher.queue)
 
     @staticmethod
     def _assemble_indices(batch: list[Query], b: int) -> np.ndarray:
@@ -268,10 +379,22 @@ class InferenceServer:
         scores = self.forward(dense, idx)
         np.asarray(scores)  # block
         t1 = time.perf_counter()
-        self.stats.batch_latencies_s.append(t1 - t0)
+        # batch service time is always REAL seconds (it feeds the deadline
+        # admission's EWMA); a virtual clock advances by exactly that
+        # duration, so query latencies = virtual queueing delay + real
+        # service — deterministic offered load, honest service cost
+        service = t1 - t0
+        self.batcher.observe_service(service)
+        if self._clock_advance is not None:
+            self._clock_advance(service)
+            done = self.clock()
+        else:
+            done = t1
+        self.stats.batch_latencies_s.append(service)
         for q in batch:
-            self.stats.query_latencies_s.append(t1 - q.arrival_s)
+            self.stats.query_latencies_s.append(done - q.arrival_s)
         self.stats.served += n
+        self.stats.request_queue_len = len(self.batcher.queue)
         if self.storage is not None:
             self._executed_batches += 1
             if (self.refresh_every_batches
@@ -291,11 +414,18 @@ class InferenceServer:
         poll = self.poll if poll is None else poll
         t0 = time.perf_counter()
         while self.batcher.queue:
-            now = time.perf_counter()
+            now = self.clock()
             head_deadline = (self.batcher.queue[0].arrival_s
                              + self.batcher.cfg.max_wait_s)
-            force = now >= head_deadline or now - t0 >= timeout_s
-            poll(force=force)
+            force = (now >= head_deadline
+                     or time.perf_counter() - t0 >= timeout_s)
+            served = poll(force=force)
+            if (not served and not force
+                    and self._clock_advance is not None):
+                # a virtual clock only moves when a batch executes, so a
+                # partial batch inside its batching window would spin here
+                # forever — model the wait by advancing to the deadline
+                self._clock_advance(max(0.0, head_deadline - self.clock()))
 
     def close(self) -> None:
         """Finish any in-flight async refresh — wait for the planner

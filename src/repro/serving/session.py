@@ -31,14 +31,17 @@ Typical use (see docs/serving.md for the operator guide):
 """
 from __future__ import annotations
 
-from typing import Optional, Union
+import dataclasses
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.ps.tuning import AutoTuneConfig, AutoTuner
-from repro.serving.server import BatcherConfig, InferenceServer, Query
+from repro.serving.server import (BatcherConfig, InferenceServer, Query,
+                                  QueryShedError)
+from repro.serving.slo import SLOConfig, SLOController
 from repro.storage import require_capability
 
 
@@ -52,20 +55,33 @@ class ServingSession:
                  refresh_every_batches: int = 0,
                  async_refresh: bool = False,
                  auto_tune: Union[AutoTuneConfig, bool, None] = None,
+                 slo: Optional[SLOConfig] = None,
+                 clock: Optional[Callable] = None,
                  warmup: bool = True):
         self.model = model
         self.params = params
         self.storage = model.ebc.storage
+        self.clock = clock
         caps = self.storage.capabilities()
         if (async_refresh or refresh_every_batches) and not caps.refreshable:
             # fail fast instead of silently never re-pinning
             require_capability(self.storage, "refreshable")
         batcher = batcher if batcher is not None else BatcherConfig()
-        self._forward = self._build_engine(caps)
+        if (slo is not None and slo.shed_deadline_frac > 0
+                and batcher.deadline_ms == 0):
+            # an SLO without admission control cannot hold its target —
+            # the backlog's queueing delay alone blows it. Default the
+            # deadline budget to the target unless the caller configured
+            # (or explicitly zeroed) one.
+            batcher = dataclasses.replace(
+                batcher,
+                deadline_ms=slo.target_p99_ms * slo.shed_deadline_frac)
         self.server = InferenceServer(
-            self._forward, batcher, sla_ms=sla_ms, storage=self.storage,
+            self._build_engine(caps), batcher, sla_ms=sla_ms,
+            storage=self.storage,
             refresh_every_batches=refresh_every_batches,
-            async_refresh=async_refresh)
+            async_refresh=async_refresh, clock=clock)
+        self._forward = self.server.forward
         self._closed = False
         self._next_qid = 0
         if warmup:
@@ -80,6 +96,12 @@ class ServingSession:
             auto_tune = AutoTuneConfig()
         self.tuner: Optional[AutoTuner] = (
             AutoTuner(auto_tune, self.storage) if auto_tune else None)
+        # SLO outer loop (serving/slo.py): windowed-p99 watcher + overload
+        # escalation ladder. Also created after warmup, and handed the
+        # tuner so it can suspend the queue-depth leg while engaged.
+        self.slo: Optional[SLOController] = (
+            SLOController(slo, self.storage, self.server.stats,
+                          tuner=self.tuner) if slo is not None else None)
 
     # -- engine -------------------------------------------------------------
     def _build_engine(self, caps):
@@ -115,8 +137,12 @@ class ServingSession:
         self._next_qid = max(self._next_qid, query.qid + 1)
 
     def submit_batch(self, dense: np.ndarray, indices: np.ndarray,
-                     qid0: Optional[int] = None) -> None:
-        """Convenience: enqueue one [B, ...] batch as B queries.
+                     qid0: Optional[int] = None) -> int:
+        """Convenience: enqueue one [B, ...] batch as B queries; returns
+        how many were ADMITTED. Shed queries (admission control on an
+        overloaded queue) are counted in `stats.shed_queries` rather than
+        raised per query — callers who need the typed rejection submit
+        single queries through `submit()`.
 
         Query ids auto-advance from the last issued one, so consecutive
         calls never emit duplicate qids into latency accounting (the old
@@ -124,15 +150,26 @@ class ServingSession:
         explicit `qid0` re-bases the counter."""
         if qid0 is None:
             qid0 = self._next_qid
+        admitted = 0
         for i in range(len(dense)):
-            self.server.submit(Query(qid=qid0 + i, dense=dense[i],
-                                     indices=indices[i]))
+            try:
+                self.server.submit(Query(qid=qid0 + i, dense=dense[i],
+                                         indices=indices[i]))
+                admitted += 1
+            except QueryShedError:
+                pass            # tallied in stats by the server
         self._next_qid = qid0 + len(dense)
+        return admitted
 
     def poll(self, force: bool = False) -> int:
         served = self.server.poll(force=force)
-        if served and self.tuner is not None:
-            self.tuner.step()       # one executed batch per serving poll
+        if served:
+            # SLO first: it publishes depth ownership (suspension) before
+            # the tuner decides whether its depth leg may fire this batch
+            if self.slo is not None:
+                self.slo.step()
+            if self.tuner is not None:
+                self.tuner.step()   # one executed batch per serving poll
         return served
 
     def drain(self, timeout_s: float = 10.0) -> None:
@@ -154,6 +191,8 @@ class ServingSession:
         out = self.server.stats.percentiles()
         if self.tuner is not None and out:
             out.update(self.tuner.summary())
+        if self.slo is not None and out:
+            out.update(self.slo.summary())
         return out
 
     def sla_violations(self) -> int:

@@ -68,6 +68,12 @@ class StorageCapabilities:
     # tables' batch slices by observed replica cost. False (the default)
     # means all three are inert no-ops.
     migratable: bool = False
+    # set_degraded(True) switches to warm-cache-only serving: device-tier
+    # hits stay exact, cold misses are zero-filled (never gathered, never
+    # cached), and the zero-fills' exact L2 error vs the dense gather is
+    # tallied in stats(). The SLO controller's last escalation rung under
+    # overload. False (the default) means set_degraded is an inert no-op.
+    degradable: bool = False
 
     def describe(self) -> str:
         on = [f.name for f in dataclasses.fields(self)
@@ -203,6 +209,19 @@ class EmbeddingStorage(abc.ABC):
         fed a headroom estimate instead of a static byte count). None =
         nothing to retune (the inert default)."""
         return None
+
+    # -- degraded-mode (overload) hooks --------------------------------------
+    def degraded(self) -> bool:
+        """Whether warm-cache-only serving is currently on."""
+        return False
+
+    def set_degraded(self, on: bool) -> bool:
+        """Toggle warm-cache-only serving (see the `degradable` capability):
+        device-tier hits keep their exact payloads, cold misses zero-fill
+        with their L2 error tallied, and no new prefetch work starts.
+        Returns False when the backend cannot degrade (the inert default —
+        `device` serves everything from HBM and never needs to)."""
+        return False
 
     # -- live placement hooks -----------------------------------------------
     def update_routing(self) -> Optional[dict]:

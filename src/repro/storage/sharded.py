@@ -79,11 +79,16 @@ _SUM_KEYS = ("total_accesses", "hot_hits", "warm_hits", "cold_misses",
              "evictions", "insertions", "warm_occupancy",
              "cold_gathered_rows", "staged_rows", "prefetch_hits",
              "prefetch_misses", "off_critical_rows",
-             "consume_ready", "consume_waited", "consume_wait_s")
+             "consume_ready", "consume_waited", "consume_wait_s",
+             "degraded_rows", "degraded_l2_sq")
 # merged by maximum: per-shard peaks, lockstep counters, and instantaneous
 # gauges (summing `queue_depth` across shards would report a depth no
-# single queue ever had — the auto-tuner and operators read this)
-_MAX_KEYS = ("max_queue_depth", "refreshes", "queue_depth")
+# single queue ever had — the auto-tuner and operators read this).
+# `degraded_lookups` is lockstep too: every unit serves (its slice of)
+# every degraded batch, so the max is the batch count a single tiered
+# server would have reported.
+_MAX_KEYS = ("max_queue_depth", "refreshes", "queue_depth",
+             "degraded_lookups")
 
 
 def merge_shard_stats(per_shard: list[dict]) -> dict:
@@ -116,6 +121,11 @@ def merge_shard_stats(per_shard: list[dict]) -> dict:
     if consumed or any("consume_ready" in s for s in per_shard):
         out["consume_overlap_frac"] = (out.get("consume_ready", 0) / consumed
                                        if consumed else 0.0)
+    if "degraded_l2_sq" in out:
+        # per-shard deltas are sqrt's — they don't sum; re-derive from the
+        # summed squared error so the merged delta is the exact L2 error
+        # of the whole zero-filled [B, T, L, D] tensor
+        out["degraded_l2_delta"] = float(np.sqrt(out["degraded_l2_sq"]))
     out["per_shard"] = per_shard
     return out
 
@@ -166,6 +176,7 @@ class ShardedStorage(EmbeddingStorage):
         self._tables: Optional[np.ndarray] = None    # authoritative copy
         self._ps_cfg = None
         self._replicate_factor = 0.0
+        self._degraded = False        # backend-level: survives migration
         # backend-level sliding traffic window ([B, T, L] real-traffic
         # slices) — migration plans from FULL batches, which per-unit
         # windows (sliced tables, sliced replicas) cannot reconstruct
@@ -189,7 +200,8 @@ class ShardedStorage(EmbeddingStorage):
             refreshable=True,
             shardable=True,
             tunable=bool(self.shards),
-            migratable=bool(self.shards))
+            migratable=bool(self.shards),
+            degradable=bool(self.shards))
 
     @property
     def num_shards(self) -> int:
@@ -296,6 +308,12 @@ class ShardedStorage(EmbeddingStorage):
                     and runs[-1].stop == self.cfg.num_tables):
                 self.table_slices = runs
 
+        # freshly constructed units default to exact serving; a swap that
+        # lands mid-overload must come up in the SAME mode the backend is
+        # publishing, or one migration would silently lift degradation
+        if self._degraded:
+            for u in units:
+                u.ps.set_degraded(True)
         for u in old_units:               # teardown LAST (swap is done)
             u.ps.close()
         if self._pool is not None and old_pool_shards != plc.num_shards:
@@ -354,6 +372,7 @@ class ShardedStorage(EmbeddingStorage):
         units, shard_units = self._construct_units(plc, tables, ps_cfg,
                                                    trace=trace)
         had_pool = self._pool is not None
+        self._degraded = False        # a full (re)build starts exact
         self._install_units(plc, units, shard_units)
         self._tables = tables
         self._ps_cfg = ps_cfg
@@ -480,6 +499,22 @@ class ShardedStorage(EmbeddingStorage):
         """Recorded here and applied per unit at the next lookup (replica
         units see the hint clipped to their batch slice)."""
         self._valid_hint = int(n)
+
+    # -- degraded (warm-cache-only) overload mode ----------------------------
+    def degraded(self) -> bool:
+        return self._degraded
+
+    def set_degraded(self, on: bool) -> bool:
+        """Fan the mode toggle out to every unit in lockstep (matching the
+        all-shards staging law: a batch is answered degraded by all units
+        or by none). The backend-level flag makes the mode survive a
+        migration swap — `_install_units` re-applies it to fresh units."""
+        if not self.shards:
+            return False
+        self._degraded = bool(on)
+        for ps in self.shards:
+            ps.set_degraded(on)
+        return True
 
     # -- refresh ------------------------------------------------------------
     def refresh_window(self) -> dict:
@@ -734,4 +769,5 @@ class ShardedStorage(EmbeddingStorage):
         self._units = []
         self._shard_units = []
         self._routers = {}
+        self._degraded = False
         self.window.clear()

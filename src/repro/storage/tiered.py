@@ -100,7 +100,8 @@ class TieredStorage(EmbeddingStorage):
             async_prefetch=stageable and self.ps.cfg.async_prefetch,
             refreshable=True,
             shardable=False,
-            tunable=self.ps is not None)
+            tunable=self.ps is not None,
+            degradable=self.ps is not None)
 
     # -- construction -------------------------------------------------------
     def build(self, params: dict, ps_cfg=None,
@@ -172,6 +173,14 @@ class TieredStorage(EmbeddingStorage):
     def hint_valid(self, n: int) -> None:
         self._require_built()
         self.ps.hint_valid(n)
+
+    def degraded(self) -> bool:
+        return self.ps is not None and self.ps.degraded()
+
+    def set_degraded(self, on: bool) -> bool:
+        if self.ps is None:
+            return False
+        return self.ps.set_degraded(on)
 
     def refresh_window(self):
         return [] if self.ps is None else list(self.ps.window)

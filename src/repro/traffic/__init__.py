@@ -1,0 +1,18 @@
+"""Traffic subsystem: timestamped query streams + virtual-time replay.
+
+Rate profiles x hotness models compose into deterministic DLRM traces
+(`generators`), a `VirtualClock` puts the serving loop on trace time
+(`clock`), and `replay()` drives a `ServingSession` through a stream
+while recording an overload timeline (`replay`). See docs/architecture.md
+for the subsystem diagram and docs/serving.md for the operator guide.
+"""
+from repro.traffic.clock import VirtualClock
+from repro.traffic.generators import (TRACE_KINDS, DiurnalRate,
+                                      FlashCrowdRate, SteadyRate,
+                                      TimedQuery, TrafficGenerator,
+                                      make_traffic)
+from repro.traffic.replay import ReplayReport, ReplaySnapshot, replay
+
+__all__ = ["VirtualClock", "TimedQuery", "TrafficGenerator", "make_traffic",
+           "SteadyRate", "DiurnalRate", "FlashCrowdRate", "TRACE_KINDS",
+           "ReplayReport", "ReplaySnapshot", "replay"]

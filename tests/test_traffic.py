@@ -1,0 +1,250 @@
+"""Traffic subsystem: generators, virtual clock, and trace replay.
+
+Covers the determinism contract (`--seed` reproducibility: same args ->
+byte-identical streams), each rate profile's shape (steady spacing,
+diurnal swing, flash-crowd density), the hotness-shift axis (pre-shift
+stream unperturbed, post-shift hot set moves), the virtual clock's
+monotonicity, replay on a real `ServingSession` (everything served at low
+offered load, timeline coherent with trace time), and the
+`plan_admission` sizing helper.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.core import EmbeddingStageConfig, plan_admission
+from repro.models.dlrm import DLRM, DLRMConfig
+from repro.ps import PSConfig
+from repro.serving import BatcherConfig, ServingSession, SLOConfig
+from repro.traffic import (TRACE_KINDS, DiurnalRate, FlashCrowdRate,
+                           SteadyRate, TrafficGenerator, VirtualClock,
+                           make_traffic, replay)
+
+ROWS, TABLES, POOL = 512, 4, 6
+
+
+def _gen(kind="steady", **kw):
+    kw.setdefault("base_qps", 100.0)
+    kw.setdefault("num_tables", TABLES)
+    kw.setdefault("rows", ROWS)
+    kw.setdefault("pooling", POOL)
+    return make_traffic(kind, **kw)
+
+
+# ---------------------------------------------------------------------------
+# virtual clock
+# ---------------------------------------------------------------------------
+
+def test_virtual_clock_advances_and_rejects_backwards():
+    clk = VirtualClock()
+    assert clk() == 0.0
+    assert clk.advance(1.5) == 1.5
+    clk.advance(0.0)                    # zero advance is legal (no-op)
+    assert clk() == clk.now == 1.5
+    with pytest.raises(ValueError):
+        clk.advance(-0.1)
+    assert clk.now == 1.5               # failed advance left time untouched
+
+
+# ---------------------------------------------------------------------------
+# rate profiles
+# ---------------------------------------------------------------------------
+
+def test_steady_arrivals_evenly_spaced():
+    g = _gen("steady", base_qps=50.0)
+    t = g.arrival_times(100)
+    assert t[0] == 0.0
+    np.testing.assert_allclose(np.diff(t), 1.0 / 50.0)
+
+
+def test_diurnal_rate_swings_and_validates():
+    prof = DiurnalRate(base_qps=100.0, amplitude=0.5, period_s=10.0)
+    ts = np.linspace(0.0, 10.0, 500)
+    rates = np.array([prof.rate(t) for t in ts])
+    assert rates.max() > 140.0 and rates.min() < 60.0    # ~base*(1 +/- 0.5)
+    assert rates.min() > 0.0                             # never stalls
+    with pytest.raises(ValueError):
+        DiurnalRate(base_qps=100.0, amplitude=1.0)       # rate could hit 0
+    # arrivals strictly increase even at the trough
+    t = _gen("diurnal", base_qps=100.0, period_s=10.0).arrival_times(2000)
+    assert np.all(np.diff(t) > 0)
+
+
+def test_flash_crowd_densifies_the_spike_window():
+    g = _gen("flash", base_qps=100.0, spike_qps=1000.0,
+             spike_start_s=1.0, spike_len_s=1.0)
+    t = g.arrival_times(1300)
+    in_spike = np.count_nonzero((t >= 1.0) & (t < 2.0))
+    # ~1000 arrivals land inside the 1s spike vs ~100 per steady second
+    assert in_spike > 800
+    before = np.count_nonzero(t < 1.0)
+    assert 80 <= before <= 120
+    assert FlashCrowdRate(100.0, 1000.0, 1.0, 1.0).in_spike(1.5)
+    assert not FlashCrowdRate(100.0, 1000.0, 1.0, 1.0).in_spike(2.5)
+
+
+# ---------------------------------------------------------------------------
+# determinism (the --seed contract)
+# ---------------------------------------------------------------------------
+
+def test_same_args_byte_identical_stream():
+    for kind in TRACE_KINDS:
+        a = _gen(kind, seed=7).queries(64)
+        b = _gen(kind, seed=7).queries(64)
+        assert [q.arrival_s for q in a] == [q.arrival_s for q in b]
+        for qa, qb in zip(a, b):
+            assert qa.qid == qb.qid
+            np.testing.assert_array_equal(qa.dense, qb.dense)
+            np.testing.assert_array_equal(qa.indices, qb.indices)
+
+
+def test_seed_changes_the_stream():
+    a = _gen("steady", seed=0).queries(64)
+    b = _gen("steady", seed=1).queries(64)
+    assert not all(np.array_equal(qa.indices, qb.indices)
+                   for qa, qb in zip(a, b))
+    assert not np.array_equal(a[0].dense, b[0].dense)
+
+
+def test_tables_get_distinct_patterns():
+    q = _gen("steady", seed=0).queries(64)
+    idx = np.stack([x.indices for x in q])          # [N, T, L]
+    flat = [idx[:, t].reshape(-1) for t in range(TABLES)]
+    assert not all(np.array_equal(flat[0], f) for f in flat[1:])
+
+
+# ---------------------------------------------------------------------------
+# hotness shift
+# ---------------------------------------------------------------------------
+
+def test_shift_preserves_pre_stream_and_moves_the_hot_set():
+    base = _gen("steady", base_qps=100.0, seed=3).queries(400)
+    shifted = _gen("shift", base_qps=100.0, seed=3,
+                   shift_at_s=2.0).queries(400)
+    pre = [i for i, q in enumerate(shifted) if q.arrival_s < 2.0]
+    post = [i for i, q in enumerate(shifted) if q.arrival_s >= 2.0]
+    assert pre and post
+    for i in pre:                      # adding a shift never rewrites the
+        np.testing.assert_array_equal(  # already-emitted prefix
+            shifted[i].indices, base[i].indices)
+    # post-shift the hot SET moves: top rows before/after barely overlap
+    def top_rows(ids):
+        counts = np.bincount(np.concatenate(ids).reshape(-1),
+                             minlength=ROWS)
+        return set(np.argsort(-counts)[:10].tolist())
+    hot_pre = top_rows([shifted[i].indices[:, 0] for i in pre])
+    hot_post = top_rows([shifted[i].indices[:, 0] for i in post])
+    assert len(hot_pre & hot_post) < 5
+
+
+def test_make_traffic_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown trace kind"):
+        _gen("tsunami")
+
+
+# ---------------------------------------------------------------------------
+# replay on a real session
+# ---------------------------------------------------------------------------
+
+def _session(slo=None, clock=None):
+    cfg = DLRMConfig(embedding=EmbeddingStageConfig(
+        num_tables=TABLES, rows=ROWS, dim=16, pooling=POOL,
+        storage="tiered"),
+        bottom_mlp=(32, 16), top_mlp=(16, 1))
+    model = DLRM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    trace = np.stack([q.indices for q in _gen("steady").queries(32)])
+    model.ebc.storage.build(
+        params, PSConfig(hot_rows=64, warm_slots=64), trace=trace)
+    return ServingSession(
+        model, params,
+        batcher=BatcherConfig(max_batch=8, max_wait_s=0.05),
+        slo=slo, clock=clock)
+
+
+def test_replay_requires_a_virtual_clock():
+    sess = _session()                   # real perf_counter clock
+    try:
+        with pytest.raises(TypeError, match="VirtualClock"):
+            replay(sess, _gen("steady").queries(4))
+    finally:
+        sess.close()
+
+
+def test_replay_steady_low_load_serves_everything():
+    sess = _session(clock=VirtualClock())
+    try:
+        queries = _gen("steady", base_qps=100.0, seed=1).queries(64)
+        rep = replay(sess, queries)
+        assert rep.submitted == 64
+        assert rep.shed == 0 and rep.shed_frac == 0.0
+        assert rep.admitted == rep.served == 64
+        assert rep.percentiles["served"] == 64
+        assert rep.percentiles["shed_queries"] == 0
+        # timeline is coherent with trace time: monotone stamps, served
+        # counts non-decreasing, final snapshot saw every query
+        t = [s.t_s for s in rep.timeline]
+        assert t == sorted(t)
+        served = [s.served for s in rep.timeline]
+        assert served == sorted(served) and served[-1] == 64
+        assert all(not s.degraded and s.slo_level == 0
+                   for s in rep.timeline)
+        assert rep.final_windowed_p99_ms() > 0.0
+        # at 100qps a batch of 8 fills in 80ms >> the 50ms window: every
+        # batch is a partial flushed at its deadline, so query latencies
+        # never exceed window + one real service time (generous margin —
+        # service is real host seconds)
+        assert all(lat <= 0.05 + 0.25
+                   for lat in sess.stats.query_latencies_s)
+    finally:
+        sess.close()
+
+
+def test_replay_snapshots_after_filters_by_time():
+    sess = _session(clock=VirtualClock())
+    try:
+        rep = replay(sess, _gen("steady", base_qps=100.0).queries(32))
+        mid = rep.timeline[len(rep.timeline) // 2].t_s
+        late = rep.snapshots_after(mid)
+        assert late and all(s.t_s >= mid for s in late)
+        assert len(late) < len(rep.timeline)
+    finally:
+        sess.close()
+
+
+# ---------------------------------------------------------------------------
+# admission planning (core.plan)
+# ---------------------------------------------------------------------------
+
+def test_plan_admission_sizes_queue_from_budget():
+    plan = plan_admission(target_p99_ms=10.0, batch_service_ms=2.0,
+                          max_batch=32, headroom=0.8)
+    assert plan.deadline_ms == pytest.approx(8.0)
+    assert plan.batches_in_budget == 4
+    assert plan.max_queue == 4 * 32
+    assert plan.sustainable_qps == pytest.approx(16000.0)
+    assert plan.notes == ()
+
+
+def test_plan_admission_floors_at_one_batch():
+    plan = plan_admission(target_p99_ms=1.0, batch_service_ms=5.0,
+                          max_batch=16)
+    assert plan.batches_in_budget == 1 and plan.max_queue == 16
+    assert plan.notes                   # warns the budget is unservable
+
+
+def test_plan_admission_monotone_in_target():
+    queues = [plan_admission(t, 2.0, 32).max_queue
+              for t in (4.0, 8.0, 16.0, 64.0)]
+    assert queues == sorted(queues)
+
+
+def test_plan_admission_validates():
+    with pytest.raises(ValueError):
+        plan_admission(0.0, 2.0, 32)
+    with pytest.raises(ValueError):
+        plan_admission(10.0, -1.0, 32)
+    with pytest.raises(ValueError):
+        plan_admission(10.0, 2.0, 0)
+    with pytest.raises(ValueError):
+        plan_admission(10.0, 2.0, 32, headroom=1.5)

@@ -11,10 +11,13 @@ Compares a fresh `benchmarks/run.py --json` output against the checked-in
       exact-count metric `served`). Also the semantic invariants the
       placement/routing work exists for: in the `sharded_balance` sweep
       the balanced placement's imbalance ratio must stay below contiguous,
-      and in the `sharded_migration` sweep load-aware replica routing must
+      in the `sharded_migration` sweep load-aware replica routing must
       beat equal slicing (lower p99 AND a smaller slow-replica batch
-      share) — both compared WITHIN the fresh run, so host speed never
-      flakes them.
+      share), and in the `slo_overload` sweep the SLO controller must earn
+      its keep under a flash crowd (SLO-on windowed p99 recovers to the
+      target after the spike while SLO-off's does not; the shed fraction
+      stays bounded; the armed-but-unloaded steady leg sheds nothing) —
+      all compared WITHIN the fresh run, so host speed never flakes them.
   warnings (exit 0)      — numeric drift: timing metrics (units us/ms/s)
       outside a generous x`--timing-factor` band, other numerics (hit
       rates, overlap fractions — thread-race dependent) moving more than
@@ -23,7 +26,7 @@ Compares a fresh `benchmarks/run.py --json` output against the checked-in
 
 New records absent from the baseline are reported as info — refresh the
 baseline (`benchmarks/run.py --sweep storage_backends --sweep
-sharded_balance --sweep sharded_migration --json
+sharded_balance --sweep sharded_migration --sweep slo_overload --json
 benchmarks/baseline.json`) when adding sweeps.
 
 Stdlib only (runs before `pip install` in CI if need be).
@@ -129,6 +132,42 @@ def compare(base: dict, new: dict, timing_factor: float,
             errors.append(f"sharded_migration: routed {what} {a:g} is not "
                           f"below equal-slicing {e:g} — replica routing "
                           f"regressed")
+
+    # semantic invariants: the SLO controller must earn its keep under a
+    # flash crowd. Offered load is expressed in multiples of the measured
+    # service rate on a virtual clock, so these hold on any host — compare
+    # within the fresh run only
+    def slo(records, leg, metric):
+        return records.get(("slo_overload",
+                            f"slo_overload/{leg}", metric))
+    on_p99 = slo(new, "flash_on", "post_p99_ms")
+    off_p99 = slo(new, "flash_off", "post_p99_ms")
+    target = slo(new, "flash_on", "target_ms")
+    if on_p99 is not None and target is not None:
+        if not on_p99 <= target:
+            errors.append(f"slo_overload: SLO-on post-spike p99 "
+                          f"{on_p99:g}ms did not recover to the "
+                          f"{target:g}ms target — the controller lost "
+                          f"its SLO")
+        if off_p99 is not None and not off_p99 > target:
+            errors.append(f"slo_overload: SLO-off post-spike p99 "
+                          f"{off_p99:g}ms is within the {target:g}ms "
+                          f"target — the flash crowd no longer "
+                          f"overloads, the comparison is vacuous")
+        if off_p99 is not None and not on_p99 < off_p99:
+            errors.append(f"slo_overload: SLO-on p99 {on_p99:g}ms is not "
+                          f"below SLO-off {off_p99:g}ms — admission "
+                          f"control regressed")
+    on_shed = slo(new, "flash_on", "shed_frac")
+    if on_shed is not None and not 0.0 < on_shed <= 0.9:
+        errors.append(f"slo_overload: flash shed fraction {on_shed:g} "
+                      f"outside (0, 0.9] — shedding is either inert or "
+                      f"rejecting nearly everything")
+    steady_shed = slo(new, "steady_on", "shed_frac")
+    if steady_shed is not None and steady_shed != 0.0:
+        errors.append(f"slo_overload: armed controller shed "
+                      f"{steady_shed:g} of a steady in-capacity trace — "
+                      f"admission control must be invisible off-overload")
     return errors, warnings
 
 
