@@ -767,6 +767,85 @@ def sharded_migration():
          f"imb_after={res.get('imbalance_after', 0.0):.4f}")
 
 
+def embedding_stage():
+    """Fused warm-cache lookup (hit-gather + pooled reduce + miss-list in
+    one launch) vs the per-row tier path, per residency leg.
+
+    Both paths serve the SAME parameter-server tiers over a device-resident
+    warm payload; `fused` routes through `ParameterServer.lookup_fused`
+    (the `PSConfig.fused_lookup` flag), `unfused` through the legacy
+    lookup-then-pool pipeline that materializes the dense [B, T, L, D]
+    block host-side. Three legs sweep residency: `warm_hit` (traffic
+    universe resident after warmup — the leg the fusion exists for),
+    `mixed`, and `cold` (the host cold path dominates both). Records
+    µs/row (`row_us`), bit-exactness of fused vs unfused output, and the
+    achieved cache hit rate. `tools/check_bench.py` enforces within-run
+    that fused is no slower than unfused on the warm-hit leg, plus a
+    roofline record asserting the fused stage lowers memory-dominant
+    (the paper's premise for the embedding stage).
+    """
+    from repro.core.embedding import _pool_rows_core
+    from repro.kernels.embedding_bag import fused_warm_lookup_xla
+    from repro.ps import ParameterServer, PSConfig
+    from repro.roofline.analyze import roofline_terms
+    rows, dim, batch, pool, t_count = 8192, 256, 256, 32, 4
+    n_rows = batch * t_count * pool
+    rng = np.random.default_rng(SEED)
+    tables = rng.normal(size=(t_count, rows, dim)).astype(np.float32)
+
+    # roofline: arithmetic intensity of the fused stage's lowered HLO —
+    # a gather + pooled reduce must land memory-dominant
+    cache = jnp.asarray(tables[0][:1024])
+    slots = jnp.asarray(np.random.default_rng(seeded(1))
+                        .integers(0, 1024, (batch, pool)))
+    lowered = jax.jit(
+        lambda c, s, r: fused_warm_lookup_xla(c, s, r)).lower(
+            cache, slots, slots)
+    terms = roofline_terms(lowered.compile().as_text(), num_chips=1)
+    ai = terms["per_device_flops"] / max(terms["per_device_bytes"], 1.0)
+    emit("embedding_stage/roofline", "",
+         f"dominant={terms['dominant']} arith_intensity={ai:.6f}")
+
+    def mk(universe, seed):
+        return np.random.default_rng(seeded(seed)).integers(
+            0, universe, (batch, t_count, pool))
+
+    for leg, warm, universe in (("warm_hit", 1024, 512),
+                                ("mixed", 256, 2048),
+                                ("cold", 32, rows)):
+        ps_f = ParameterServer(
+            tables, PSConfig(warm_slots=warm, warm_backing="device",
+                             fused_lookup=True, prefetch_depth=0))
+        ps_u = ParameterServer(
+            tables, PSConfig(warm_slots=warm, warm_backing="device",
+                             prefetch_depth=0))
+        for s in range(3):                               # warm the tiers
+            idx = mk(universe, s)
+            ps_f.lookup_fused(idx)
+            ps_u.lookup(idx)
+        idx = mk(universe, 10)
+
+        def unfused():
+            blk = ps_u.lookup(idx)                       # [B, T, L, D]
+            pooled = _pool_rows_core(
+                jnp.swapaxes(jnp.asarray(blk), 0, 1), None, "sum", pool)
+            return jnp.swapaxes(pooled, 0, 1)
+
+        exact = bool(np.array_equal(np.asarray(ps_f.lookup_fused(idx)),
+                                    np.asarray(unfused())))
+        t_f = timeit_median(lambda: ps_f.lookup_fused(idx), iters=5,
+                            warmup=2)
+        t_u = timeit_median(unfused, iters=5, warmup=2)
+        hit = ps_f.stats()["cache_hit_rate"]
+        ps_f.close()
+        ps_u.close()
+        emit(f"embedding_stage/{leg}/fused", round(t_f * 1e6, 1),
+             f"row_us={t_f * 1e6 / n_rows:.4f} bit_exact={exact} "
+             f"hit={hit:.3f}")
+        emit(f"embedding_stage/{leg}/unfused", round(t_u * 1e6, 1),
+             f"row_us={t_u * 1e6 / n_rows:.4f}")
+
+
 def slo_overload():
     """SLO-driven overload serving: flash-crowd replay on a virtual clock.
 
@@ -862,7 +941,7 @@ ALL = [tab3_unique_access, fig5_coverage, fig1_embedding_contribution,
        fig14_gap, fig15_buffer_schemes, fig16_no_optmt, fig17_heterogeneous,
        tab45_microarch, tiered_ps_capacity_sweep, tiered_ps_sync_vs_async,
        tiered_ps_autotune, storage_backends, sharded_balance,
-       sharded_migration, slo_overload]
+       sharded_migration, embedding_stage, slo_overload]
 
 
 def main(argv: list[str] | None = None) -> None:

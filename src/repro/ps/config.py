@@ -48,6 +48,12 @@ class PSConfig:
     window_batches: int = 16
     # decay applied to warm-tier frequency counters at refresh (LFU aging)
     freq_decay: float = 0.5
+    # fused lookup path: resolve warm hits + pooled reduction in one fused
+    # kernel launch over the device-resident payload, emitting a compact
+    # miss-list for the host cold path (ParameterServer.lookup_fused).
+    # Requires warm_backing='device'; storage backends fall back to the
+    # per-row path when off or when the backing is host-side
+    fused_lookup: bool = False
 
     def __post_init__(self):
         if self.eviction not in ("lfu", "lru"):
@@ -58,6 +64,9 @@ class PSConfig:
                              f"got {self.warm_backing!r}")
         if self.hot_rows < 0 or self.warm_slots < 0:
             raise ValueError("tier capacities must be >= 0")
+        if self.fused_lookup and self.warm_backing != "device":
+            raise ValueError("fused_lookup=True needs the device-resident "
+                             "warm payload: set warm_backing='device'")
 
     @classmethod
     def from_plan(cls, plan, **overrides) -> "PSConfig":

@@ -116,6 +116,10 @@ class ParameterServer:
         else:
             self._inv_perm = None
             self._hot = None
+        # device mirror of the hot block for the fused path, materialized
+        # lazily on first lookup_fused() (refresh/resize lands here and
+        # must drop the stale mirror)
+        self._hot_dev = None
 
     # -- lookup -------------------------------------------------------------
     def _lookup_table(self, t: int, flat: np.ndarray,
@@ -240,6 +244,160 @@ class ParameterServer:
         for t in range(T):
             out[:, t] = self._lookup_table(
                 t, indices[:, t].ravel(), staged).reshape(B, L, -1)
+        return out
+
+    # -- fused lookup --------------------------------------------------------
+    def supports_fused(self) -> bool:
+        """True when the fused kernel path can serve: the flag is on and
+        every warm payload is device-resident."""
+        return (self.cfg.fused_lookup
+                and all(w.supports_fused for w in self.warm))
+
+    def _pool_dense_block(self, rows: np.ndarray, weights, combine: str):
+        """Pool raw rows [B, T, L, D] -> [B, T, D] with EXACTLY the ops the
+        unfused storage path uses (`_pool_rows_core`, eager), so fused and
+        unfused outputs stay bit-identical on shared sub-paths (the
+        valid-hint padding block)."""
+        import jax.numpy as jnp
+
+        from repro.core.embedding import _pool_rows_core
+        rows_t = jnp.swapaxes(jnp.asarray(rows), 0, 1)
+        w_t = (None if weights is None
+               else jnp.swapaxes(jnp.asarray(weights), 0, 1))
+        pooled = _pool_rows_core(rows_t, w_t, combine, rows.shape[2])
+        return jnp.swapaxes(pooled, 0, 1)
+
+    def lookup_fused(self, indices: np.ndarray, weights=None, *,
+                     combine: str = "sum"):
+        """indices [B, T, L] (+ optional weights [B, T, L]) -> pooled
+        [B, T, D] as a device-resident jax array.
+
+        One fused launch per table over the device warm payload does
+        hit-gather + pooled reduction + miss-list emission; only the
+        emitted misses then touch the host cold path (gather + admit +
+        whole-bag recompute via `complete_miss_bags`), replacing the
+        per-index Python round trip of `lookup()` + host pooling. Output
+        is bit-identical to pooling `lookup()`'s rows with
+        `_pool_rows_core` — the tests pin this for every tier mix.
+
+        Counter/window/staging semantics mirror `lookup()` exactly: the
+        valid-hint padding block is served uncounted, staged prefetch
+        payloads are consumed, and degraded mode answers with the kernel's
+        zero-contribution partial output (misses tallied with their exact
+        L2 delta, the warm tier never polluted).
+        """
+        import jax.numpy as jnp
+
+        from repro.kernels.embedding_bag import (complete_miss_bags,
+                                                 fused_warm_lookup)
+        if not self.supports_fused():
+            raise RuntimeError(
+                "lookup_fused needs cfg.fused_lookup=True and a "
+                "device-resident warm payload (warm_backing='device'); "
+                "use lookup() otherwise")
+        if combine not in ("sum", "mean"):
+            raise ValueError(f"unknown combine {combine!r}")
+        indices = np.asarray(indices)
+        B, T, L = indices.shape
+        assert T == self.cold.num_tables
+        valid, self._valid_hint = self._valid_hint, None
+        if valid is not None and valid < B:
+            # padding rows: pooled directly from the cold tables
+            # (uncounted, not cached) — the fused analogue of lookup()'s
+            # padding block
+            pad_rows = self.cold.tables[np.arange(T)[None, :, None],
+                                        indices[valid:]]
+            pad_pooled = self._pool_dense_block(
+                pad_rows, None if weights is None else weights[valid:],
+                combine)
+            if valid == 0:
+                return pad_pooled
+            real = self.lookup_fused(
+                indices[:valid],
+                None if weights is None else weights[:valid],
+                combine=combine)
+            return jnp.concatenate([real, pad_pooled], axis=0)
+
+        if self.degraded_mode:
+            staged = None
+            self.degraded_lookups += 1
+        else:
+            staged = self.prefetch.consume(indices)
+        self.window.append(indices)
+        self.total_accesses += indices.size
+
+        if self.num_hot > 0 and self._hot_dev is None:
+            self._hot_dev = jnp.asarray(self._hot)
+        D = self.cold.dim
+        pooled_tables = []
+        for t in range(T):
+            rows_bl = indices[:, t]                        # [B, L]
+            flat = rows_bl.ravel()
+            w_t = None if weights is None else weights[:, t]
+            warm = self.warm[t]
+            # slot-map build: hot positions first, then the warm tag store
+            # (offset by num_hot), MISS everywhere else
+            slot_map = np.full(flat.size, -1, np.int64)
+            if self.num_hot > 0:
+                pos = self._inv_perm[t][flat]
+                hot_mask = pos < self.num_hot
+                slot_map[hot_mask] = pos[hot_mask]
+                self.hot_hits += int(hot_mask.sum())
+                rest = np.flatnonzero(~hot_mask)
+            else:
+                rest = np.arange(flat.size)
+            if rest.size:
+                u, inv, counts = np.unique(flat[rest], return_inverse=True,
+                                           return_counts=True)
+                slots = warm.probe(u)
+                resident = slots >= 0
+                if resident.any():
+                    warm.touch(slots[resident], counts[resident])
+                slot_map[rest] = np.where(resident, self.num_hot + slots,
+                                          -1)[inv]
+            res = fused_warm_lookup(
+                warm.data, slot_map.reshape(B, L), rows_bl, w_t,
+                hot=self._hot_dev[t] if self.num_hot > 0 else None,
+                mode="sum")
+            pooled_t = res.pooled
+            if res.miss_rows.size:
+                # the kernel's compact miss-list drives the cold path
+                mu = res.miss_rows.astype(np.int64)
+                _, mcounts = np.unique(flat[res.miss_pos],
+                                       return_counts=True)   # aligned: sorted
+                if self.degraded_mode:
+                    # zero-contribution partial output IS the degraded
+                    # answer; account like _lookup_table's degraded branch
+                    warm.misses += len(mu)
+                    warm.hits += int(mcounts.sum()) - len(mu)
+                    self.degraded_rows += int(mcounts.sum())
+                    self.degraded_l2_sq += float(
+                        (self.cold.row_norms_sq(t)[mu] * mcounts).sum())
+                else:
+                    srows, sdata, residual = self.prefetch.split_misses(
+                        staged, t, mu)
+                    payload = np.empty((len(mu), D),
+                                       self.cold.tables.dtype)
+                    if srows.size:
+                        payload[np.searchsorted(mu, srows)] = sdata
+                    if residual.size:
+                        payload[np.searchsorted(mu, residual)] = \
+                            self.cold.gather(t, residual)
+                    order = np.lexsort((mu, -mcounts))
+                    warm.admit(mu[order], payload[order], mcounts[order])
+                    # whole-bag recompute (never add-to-partial: summation
+                    # order must match the dense reference). Hit positions
+                    # re-read the authoritative cold copy — every tier
+                    # holds identical bytes, so values cannot differ
+                    bags = np.unique(res.miss_pos // L)
+                    pooled_t = complete_miss_bags(
+                        pooled_t, bags, self.cold.tables[t][rows_bl[bags]],
+                        w_t, mode="sum")
+            pooled_tables.append(pooled_t)
+        out = jnp.stack(pooled_tables, axis=1)             # [B, T, D]
+        if combine == "mean":
+            # same eager divide-by-static-int as _pool_rows_core
+            out = out / L
         return out
 
     # -- degraded (warm-cache-only) overload mode ----------------------------

@@ -34,6 +34,10 @@ import numpy as np
 class WarmCache:
     """One table's warm cache (host-backed payload)."""
 
+    # fused kernel lookups need the payload device-resident; the host
+    # backing answers False and callers fall back to probe()/read()
+    supports_fused = False
+
     def __init__(self, capacity: int, dim: int, policy: str = "lfu",
                  dtype=np.float32):
         assert policy in ("lfu", "lru")
@@ -179,7 +183,15 @@ class DeviceWarmCache(WarmCache):
     materialize to host numpy, which is bit-exact for the float dtypes the
     tables use. The tag store (`slot_row`/`slot_freq`/`slot_tick`/`loc`)
     is inherited unchanged and stays on the host.
+
+    The device payload additionally powers the FUSED lookup path
+    (`kernels.embedding_bag.fused`): `build_slot_map()` turns raw row ids
+    into the kernel's slot-map and `lookup_fused()` runs hit-gather +
+    pooled reduce + miss-list emission in one launch over `data`, without
+    ever reading hit payloads back to the host.
     """
+
+    supports_fused = True
 
     def _alloc_payload(self) -> None:
         import jax.numpy as jnp        # lazy: host-only deployments of
@@ -219,3 +231,30 @@ class DeviceWarmCache(WarmCache):
 
     def device_bytes(self) -> int:
         return int(self.capacity * self.dim * self.dtype.itemsize)
+
+    # -- fused lookup path ---------------------------------------------------
+    def build_slot_map(self, rows: np.ndarray) -> np.ndarray:
+        """rows [B, L] raw ids -> kernel slot-map (slot, or -1 = MISS).
+
+        Pure tag-store read like probe(): no counters move, no payload is
+        touched — the caller decides when an access becomes a hit/miss
+        (touch()/admit()) so batched accounting stays in one place.
+        """
+        rows = np.asarray(rows)
+        u, inv = np.unique(rows.ravel(), return_inverse=True)
+        return self.probe(u)[inv].reshape(rows.shape)
+
+    def lookup_fused(self, rows: np.ndarray, weights=None, *,
+                     mode: str = "sum", backend: str = "auto", opts=None):
+        """Cache-only fused lookup: [B, L] raw ids -> FusedLookupResult.
+
+        Pooled values carry ZERO contribution at miss positions (the
+        kernel's partial output — what degraded serving answers with);
+        the result's miss-list is exactly the set-difference of the
+        looked-up rows and the cached set. Read-only, like probe().
+        """
+        from repro.kernels.embedding_bag import fused_warm_lookup
+        rows = np.asarray(rows)
+        return fused_warm_lookup(self.data, self.build_slot_map(rows), rows,
+                                 weights, mode=mode, backend=backend,
+                                 opts=opts)

@@ -74,6 +74,12 @@ class StorageCapabilities:
     # tallied in stats(). The SLO controller's last escalation rung under
     # overload. False (the default) means set_degraded is an inert no-op.
     degradable: bool = False
+    # lookup() serves warm/hot hits through the fused kernel path: slot-map
+    # build -> one fused launch (hit-gather + pooled reduce + miss-list) ->
+    # host cold path only for the emitted misses. Requires
+    # PSConfig.fused_lookup=True and a device-resident warm payload; the
+    # per-row Python path serves otherwise (same bits either way).
+    fused_lookup: bool = False
 
     def describe(self) -> str:
         on = [f.name for f in dataclasses.fields(self)

@@ -201,7 +201,9 @@ class ShardedStorage(EmbeddingStorage):
             shardable=True,
             tunable=bool(self.shards),
             migratable=bool(self.shards),
-            degradable=bool(self.shards))
+            degradable=bool(self.shards),
+            fused_lookup=bool(self.shards) and all(
+                ps.supports_fused() for ps in self.shards))
 
     @property
     def num_shards(self) -> int:
@@ -440,11 +442,49 @@ class ShardedStorage(EmbeddingStorage):
         idx = np.asarray(indices)
         B, T, L = idx.shape
         dtype = self.shards[0].cold.tables.dtype
-        out = np.empty((B, T, L, self.shards[0].cold.dim), dtype)
+        dim = self.shards[0].cold.dim
         valid, self._valid_hint = self._valid_hint, None
         real = idx if valid is None else idx[:valid]
         if real.shape[0]:
             self.window.append(real)
+
+        if all(ps.supports_fused() for ps in self.shards):
+            # fused fan-out: each unit pools ITS (batch-slice, table-group)
+            # block inside one kernel launch, so the join scatters pooled
+            # [b, t, D] blocks instead of raw [b, t, L, D] rows. Each
+            # unit's mean epilogue divides by the same python int L, so
+            # the scatter reconstructs exactly what a single fused server
+            # would have produced (f32 survives the np round trip).
+            pooled_out = np.empty((B, T, dim), dtype)
+            w_np = None if weights is None else np.asarray(weights)
+
+            def run_shard_fused(s):
+                for u in self._shard_units[s]:
+                    lo, hi = self._unit_bounds(u, B)
+                    if lo == hi:
+                        continue
+                    if valid is not None:
+                        u.ps.hint_valid(int(np.clip(valid - lo, 0,
+                                                    hi - lo)))
+                    w_u = (None if w_np is None
+                           else w_np[lo:hi][:, u.table_ids])
+                    if u.chunk is not None:
+                        t0 = time.perf_counter()
+                        pooled = u.ps.lookup_fused(
+                            idx[lo:hi][:, u.table_ids], w_u,
+                            combine=self.cfg.combine)
+                        u.service_s += time.perf_counter() - t0
+                        u.served_rows += hi - lo
+                    else:
+                        pooled = u.ps.lookup_fused(
+                            idx[lo:hi][:, u.table_ids], w_u,
+                            combine=self.cfg.combine)
+                    pooled_out[lo:hi, u.table_ids] = np.asarray(pooled)
+
+            self._map_shards(run_shard_fused)
+            return jnp.asarray(pooled_out)
+
+        out = np.empty((B, T, L, dim), dtype)
 
         def run_shard(s):
             for u in self._shard_units[s]:

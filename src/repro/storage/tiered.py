@@ -101,7 +101,8 @@ class TieredStorage(EmbeddingStorage):
             refreshable=True,
             shardable=False,
             tunable=self.ps is not None,
-            degradable=self.ps is not None)
+            degradable=self.ps is not None,
+            fused_lookup=self.ps is not None and self.ps.supports_fused())
 
     # -- construction -------------------------------------------------------
     def build(self, params: dict, ps_cfg=None,
@@ -151,6 +152,15 @@ class TieredStorage(EmbeddingStorage):
         the dense branch, so outputs are bit-identical."""
         from repro.core.embedding import _pool_rows_core
         self._require_built()
+        if self.ps.supports_fused():
+            # fused path: warm/hot hits gather + pool inside one kernel
+            # launch, the host cold path only touches the emitted
+            # miss-list. Bit-exact with the per-row branch below (the
+            # fused tests pin this down), so callers can't tell which
+            # path served them except through stats()/latency.
+            w = None if weights is None else np.asarray(weights)
+            return self.ps.lookup_fused(np.asarray(indices), w,
+                                        combine=self.cfg.combine)
         rows = self.ps.lookup(np.asarray(indices))      # [B, T, L, D]
         rows_t = jnp.swapaxes(jnp.asarray(rows), 0, 1)  # [T, B, L, D]
         w_t = (None if weights is None

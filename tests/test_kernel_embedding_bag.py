@@ -77,6 +77,26 @@ def test_kernel_weights_and_mean():
                                    rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("batch", [1, 3, 5, 7])
+def test_weighted_mean_with_batch_padding(batch):
+    """`_pad_batch` coverage gap: batch % batch_block != 0 combined with
+    WEIGHTED mean bags. The dummy bags carry zero weights, so their
+    weighted-mean denominator hits the epsilon clamp (0/1e-9) — the padded
+    rows must still slice away cleanly and the real rows must match the
+    reference exactly, not just the sum path the other padding tests hit."""
+    table, idx = _mk(64, 128, batch, 6, seed=batch)
+    w = jnp.asarray(np.random.default_rng(batch)
+                    .random((batch, 6)).astype(np.float32))
+    opts = EmbeddingBagOpts(prefetch_distance=3, batch_block=4,
+                            interpret=True)
+    out = embedding_bag(table, idx, w, mode="mean", backend="pallas",
+                        opts=opts)
+    ref = embedding_bag_ref(table, idx, w, mode="mean")
+    assert out.shape == (batch, 128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_mean_no_weights():
     table, idx = _mk(64, 128, 8, 5)
     opts = EmbeddingBagOpts(prefetch_distance=2, batch_block=4, mode="mean",

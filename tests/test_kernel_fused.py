@@ -1,0 +1,520 @@
+"""Fused warm-cache lookup kernel (hit-gather + pooled reduce + miss-list
+in one launch) vs the dense reference — interpret=True on CPU.
+
+The laws pinned down here ARE the kernel's design constraints (see the
+fused.py module docstring):
+
+  * BIT-exactness, not allclose: the fused pooled output must equal
+    `embedding_bag_ref` on the miss-zeroed table byte-for-byte, for every
+    (hit-rate, mode, weighting, padding) combination — the serving stack
+    swaps the fused path in behind a config flag and nothing downstream
+    may be able to tell.
+  * Miss-list laws: exact set-difference vs the resident set, distinct
+    rows deduplicated and sorted, occurrence positions ascending,
+    deterministic across runs, empty at full residency.
+  * Round-trip: completing the emitted misses through the host cold path
+    (`complete_miss_bags`) restores bit-exactness with the full dense
+    reference.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.embedding_bag import (FusedLookupOpts, FusedLookupResult,
+                                         complete_miss_bags,
+                                         embedding_bag_ref,
+                                         fused_warm_lookup,
+                                         fused_warm_lookup_xla)
+from repro.kernels.embedding_bag.fused import (MISS, PAD,
+                                               _miss_list_from_slots)
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# harness: build a (table, cache, slot-map) world at a target hit rate
+# ---------------------------------------------------------------------------
+
+def _world(rows, dim, batch, pooling, *, hit_rate=1.0, num_hot=0,
+           dup=False, seed=0, dtype=np.float32):
+    """A full table, a warm cache holding `hit_rate` of its rows (hot block
+    excluded), raw lookup ids [B, L], and the host-built slot-map.
+
+    Returns (table, cache, hot, slots, idx): `cache[s]` holds row
+    `cached[s]`; slot-map entries follow the fused.py convention
+    (hot-block row < num_hot, warm slot + num_hot, MISS elsewhere).
+    """
+    rng = np.random.default_rng(seed)
+    table = rng.normal(size=(rows, dim)).astype(dtype)
+    if dup and pooling > 1:
+        base = rng.integers(0, rows, size=(batch, 1))
+        idx = np.where(rng.random((batch, pooling)) < 0.5, base,
+                       rng.integers(0, rows, size=(batch, pooling)))
+    else:
+        idx = rng.integers(0, rows, size=(batch, pooling))
+    hot = table[:num_hot] if num_hot else None
+    cold_rows = np.arange(num_hot, rows)
+    n_cached = int(round(hit_rate * len(cold_rows)))
+    cached = np.sort(rng.choice(cold_rows, size=n_cached, replace=False))
+    cache = table[cached] if n_cached else np.zeros((0, dim), dtype)
+    slot_of = {int(r): s for s, r in enumerate(cached)}
+    slots = np.full(idx.shape, MISS, np.int64)
+    for b in range(batch):
+        for i in range(pooling if pooling else 0):
+            r = int(idx[b, i])
+            if r < num_hot:
+                slots[b, i] = r
+            elif r in slot_of:
+                slots[b, i] = num_hot + slot_of[r]
+    return (jnp.asarray(table), jnp.asarray(cache),
+            None if hot is None else jnp.asarray(hot), slots, idx)
+
+
+def _masked_ref(table, idx, slots, weights=None, mode="sum"):
+    """The oracle: dense reference on a table whose MISSED rows are zeroed.
+
+    Zeroing by (bag, position) rather than by row id — a row can be hot in
+    the table yet MISS in the slot-map only if the harness said so, and
+    duplicate ids always share residency — so masking the gathered rows
+    is exactly equivalent and simpler."""
+    t = np.asarray(table)
+    gathered = t[np.asarray(idx)]                         # [B, L, D]
+    gathered[np.asarray(slots) < 0] = 0.0
+    # feed the reference the pre-gathered rows via a virtual [B*L] table
+    B, L = idx.shape
+    vt = jnp.asarray(gathered.reshape(B * L, -1))
+    vi = jnp.arange(B * L, dtype=jnp.int32).reshape(B, L)
+    return embedding_bag_ref(vt, vi, weights, mode=mode)
+
+
+def _fused(cache, slots, idx, weights=None, hot=None, *, mode="sum",
+           backend="pallas", bb=4, distance=3):
+    opts = FusedLookupOpts(prefetch_distance=distance, batch_block=bb,
+                           interpret=True)
+    return fused_warm_lookup(cache, slots, idx, weights, hot, mode=mode,
+                             backend=backend, opts=opts)
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness vs the dense reference, every axis the serving stack uses
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("hit_rate", [0.0, 0.5, 1.0])
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+@pytest.mark.parametrize("weighted", [False, True])
+@pytest.mark.parametrize("backend", ["pallas", "xla"])
+def test_fused_bit_exact_vs_masked_ref(hit_rate, mode, weighted, backend):
+    rows, dim, batch, pooling = 64, 20, 6, 5       # D % 128 != 0, B % bb != 0
+    table, cache, hot, slots, idx = _world(rows, dim, batch, pooling,
+                                           hit_rate=hit_rate, seed=3)
+    w = (jnp.asarray(RNG.random((batch, pooling)).astype(np.float32))
+         if weighted else None)
+    res = _fused(cache, slots, idx, w, mode=mode, backend=backend)
+    ref = _masked_ref(table, idx, slots, w, mode=mode)
+    assert jnp.array_equal(res.pooled, ref), \
+        f"fused != masked ref (maxdiff " \
+        f"{float(jnp.abs(res.pooled - ref).max())})"
+
+
+@pytest.mark.parametrize("num_hot", [1, 8, 32])
+def test_fused_hot_block_bit_exact(num_hot):
+    """Hot-block rows served from the VMEM operand, warm from the cache
+    payload, misses zero — all three tiers in one launch."""
+    table, cache, hot, slots, idx = _world(64, 16, 8, 4, hit_rate=0.5,
+                                           num_hot=num_hot, seed=7)
+    for backend in ("pallas", "xla"):
+        res = _fused(cache, slots, idx, hot=hot, backend=backend)
+        ref = _masked_ref(table, idx, slots)
+        assert jnp.array_equal(res.pooled, ref), backend
+
+
+def test_fused_duplicate_indices():
+    """Duplicate ids inside a bag share residency; sums count each
+    occurrence."""
+    table, cache, hot, slots, idx = _world(32, 12, 5, 6, hit_rate=0.6,
+                                           dup=True, seed=11)
+    for mode in ("sum", "mean"):
+        res = _fused(cache, slots, idx, mode=mode)
+        ref = _masked_ref(table, idx, slots, mode=mode)
+        assert jnp.array_equal(res.pooled, ref), mode
+
+
+def test_fused_backends_agree_exactly():
+    """pallas (interpret) and xla produce identical bits AND identical
+    miss-lists — the backend choice is a pure deployment knob."""
+    table, cache, hot, slots, idx = _world(64, 24, 7, 5, hit_rate=0.4,
+                                           num_hot=8, seed=13)
+    w = jnp.asarray(RNG.random((7, 5)).astype(np.float32))
+    for mode in ("sum", "mean"):
+        a = _fused(cache, slots, idx, w, hot=hot, mode=mode,
+                   backend="pallas")
+        b = _fused(cache, slots, idx, w, hot=hot, mode=mode, backend="xla")
+        assert jnp.array_equal(a.pooled, b.pooled)
+        np.testing.assert_array_equal(a.miss_rows, b.miss_rows)
+        np.testing.assert_array_equal(a.miss_pos, b.miss_pos)
+
+
+@pytest.mark.parametrize("pooling", [0, 1, 2, 7])
+def test_fused_bag_sizes(pooling):
+    """L from empty bags (sum -> zeros) up through odd sizes."""
+    table, cache, hot, slots, idx = _world(32, 8, 6, pooling, hit_rate=0.5,
+                                           seed=17)
+    res = _fused(cache, slots, idx)
+    if pooling == 0:
+        assert res.pooled.shape == (6, 8)
+        assert not np.asarray(res.pooled).any()
+        assert res.fully_resident
+    else:
+        ref = _masked_ref(table, idx, slots)
+        assert jnp.array_equal(res.pooled, ref)
+
+
+def test_fused_batch_padding_exact():
+    """B % batch_block != 0: PAD dummy bags contribute nothing and emit
+    nothing, and the sliced output is bit-exact."""
+    for batch in (1, 3, 5, 9):
+        table, cache, hot, slots, idx = _world(32, 8, batch, 4,
+                                               hit_rate=0.5, seed=batch)
+        res = _fused(cache, slots, idx, bb=4)
+        ref = _masked_ref(table, idx, slots)
+        assert res.pooled.shape[0] == batch
+        assert jnp.array_equal(res.pooled, ref)
+        # PAD positions never leak into the miss-list
+        assert (res.miss_pos < batch * 4).all()
+
+
+def test_fused_zero_capacity_cache():
+    table, cache, hot, slots, idx = _world(32, 8, 4, 3, hit_rate=0.0,
+                                           seed=19)
+    assert cache.shape[0] == 0
+    res = _fused(cache, slots, idx)
+    assert not np.asarray(res.pooled).any()
+    np.testing.assert_array_equal(np.sort(np.unique(idx)), res.miss_rows)
+
+
+# ---------------------------------------------------------------------------
+# miss-list laws
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["pallas", "xla"])
+@pytest.mark.parametrize("hit_rate", [0.0, 0.3, 0.7, 1.0])
+def test_miss_list_is_exact_set_difference(backend, hit_rate):
+    table, cache, hot, slots, idx = _world(48, 8, 6, 4, hit_rate=hit_rate,
+                                           seed=23)
+    res = _fused(cache, slots, idx, backend=backend)
+    resident = set(np.asarray(idx).ravel()[np.asarray(slots).ravel() >= 0])
+    expect = np.setdiff1d(np.unique(idx), sorted(resident))
+    np.testing.assert_array_equal(res.miss_rows, expect)
+    # deduplicated + sorted
+    assert len(np.unique(res.miss_rows)) == len(res.miss_rows)
+    assert (np.diff(res.miss_rows) > 0).all() if len(res.miss_rows) else True
+    # occurrence positions: ascending flat b*L+i, exactly the MISS slots
+    np.testing.assert_array_equal(
+        res.miss_pos, np.flatnonzero(slots.ravel() == MISS))
+
+
+def test_miss_list_empty_at_full_residency():
+    table, cache, hot, slots, idx = _world(32, 8, 5, 4, hit_rate=1.0,
+                                           seed=29)
+    for backend in ("pallas", "xla"):
+        res = _fused(cache, slots, idx, backend=backend)
+        assert res.fully_resident
+        assert res.miss_rows.size == 0 and res.miss_pos.size == 0
+
+
+def test_miss_list_deterministic_across_runs():
+    table, cache, hot, slots, idx = _world(64, 8, 7, 5, hit_rate=0.4,
+                                           seed=31)
+    runs = [_fused(cache, slots, idx) for _ in range(3)]
+    for r in runs[1:]:
+        np.testing.assert_array_equal(runs[0].miss_rows, r.miss_rows)
+        np.testing.assert_array_equal(runs[0].miss_pos, r.miss_pos)
+        assert jnp.array_equal(runs[0].pooled, r.pooled)
+
+
+def test_miss_list_duplicate_occurrences_all_reported():
+    """A row missed twice in one bag appears ONCE in miss_rows but at BOTH
+    positions in miss_pos (the cold path recomputes whole bags, so it needs
+    every affected bag)."""
+    dim = 8
+    cache = jnp.zeros((0, dim), jnp.float32)
+    idx = np.array([[5, 5, 9], [9, 5, 9]])
+    slots = np.full_like(idx, MISS)
+    res = _fused(cache, slots, idx)
+    np.testing.assert_array_equal(res.miss_rows, [5, 9])
+    np.testing.assert_array_equal(res.miss_pos, np.arange(6))
+
+
+# ---------------------------------------------------------------------------
+# round-trip: fused partial + host cold completion == dense reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+@pytest.mark.parametrize("weighted", [False, True])
+@pytest.mark.parametrize("hit_rate", [0.0, 0.5])
+def test_round_trip_restores_bit_exactness(mode, weighted, hit_rate):
+    rows, dim, batch, pooling = 48, 20, 7, 4
+    table, cache, hot, slots, idx = _world(rows, dim, batch, pooling,
+                                           hit_rate=hit_rate, seed=37)
+    w = (jnp.asarray(RNG.random((batch, pooling)).astype(np.float32))
+         if weighted else None)
+    res = _fused(cache, slots, idx, w, mode=mode)
+    # host cold path: every bag containing >= 1 miss is recomputed whole
+    bags = np.unique(res.miss_pos // pooling)
+    full = complete_miss_bags(res.pooled, bags,
+                              np.asarray(table)[idx[bags]], w, mode=mode)
+    dense = embedding_bag_ref(table, jnp.asarray(idx), w, mode=mode)
+    assert jnp.array_equal(full, dense), \
+        f"round trip != dense (maxdiff {float(jnp.abs(full - dense).max())})"
+
+
+def test_complete_miss_bags_no_misses_is_identity():
+    pooled = jnp.asarray(RNG.random((4, 8)).astype(np.float32))
+    out = complete_miss_bags(pooled, np.empty(0, np.int64),
+                             np.zeros((0, 3, 8), np.float32))
+    assert out is pooled
+
+
+# ---------------------------------------------------------------------------
+# property-based sweeps (hypothesis; falls back to tests/_stubs)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(batch=st.integers(1, 10), pooling=st.integers(1, 6),
+       dim=st.sampled_from([4, 12, 20, 36]),     # never a multiple of 128
+       hit_pct=st.sampled_from([0, 30, 50, 80, 100]),
+       mode=st.sampled_from(["sum", "mean"]),
+       weighted=st.booleans(), seed=st.integers(0, 2**16))
+def test_prop_fused_bit_exact(batch, pooling, dim, hit_pct, mode, weighted,
+                              seed):
+    table, cache, hot, slots, idx = _world(32, dim, batch, pooling,
+                                           hit_rate=hit_pct / 100, seed=seed)
+    rng = np.random.default_rng(seed)
+    w = (jnp.asarray(rng.random((batch, pooling)).astype(np.float32))
+         if weighted else None)
+    res = _fused(cache, slots, idx, w, mode=mode)
+    ref = _masked_ref(table, idx, slots, w, mode=mode)
+    assert jnp.array_equal(res.pooled, ref)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), hit_pct=st.sampled_from([0, 40, 100]),
+       num_hot=st.sampled_from([0, 4, 16]))
+def test_prop_round_trip(seed, hit_pct, num_hot):
+    table, cache, hot, slots, idx = _world(48, 12, 6, 4,
+                                           hit_rate=hit_pct / 100,
+                                           num_hot=num_hot, seed=seed)
+    res = _fused(cache, slots, idx, hot=hot)
+    bags = np.unique(res.miss_pos // 4)
+    full = complete_miss_bags(res.pooled, bags,
+                              np.asarray(table)[idx[bags]])
+    dense = embedding_bag_ref(table, jnp.asarray(idx))
+    assert jnp.array_equal(full, dense)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), bb=st.sampled_from([2, 4, 8]),
+       distance=st.sampled_from([1, 3, 8]))
+def test_prop_pipeline_config_invariance(seed, bb, distance):
+    """batch_block / prefetch_distance are pure performance knobs: any
+    config produces the same bits and the same miss-list."""
+    table, cache, hot, slots, idx = _world(32, 8, 6, 5, hit_rate=0.5,
+                                           seed=seed)
+    base = _fused(cache, slots, idx, bb=4, distance=2)
+    other = _fused(cache, slots, idx, bb=bb, distance=distance)
+    assert jnp.array_equal(base.pooled, other.pooled)
+    np.testing.assert_array_equal(base.miss_rows, other.miss_rows)
+    np.testing.assert_array_equal(base.miss_pos, other.miss_pos)
+
+
+# ---------------------------------------------------------------------------
+# miss-list oracle sanity (the harness itself must be lawful)
+# ---------------------------------------------------------------------------
+
+def test_miss_list_oracle_ignores_pad():
+    slots = np.array([[3, MISS], [PAD, PAD]])
+    rows = np.array([[7, 9], [0, 0]])
+    mrows, mpos = _miss_list_from_slots(slots, rows)
+    np.testing.assert_array_equal(mrows, [9])
+    np.testing.assert_array_equal(mpos, [1])
+
+
+def test_vmem_budget_accounting():
+    opts = FusedLookupOpts(prefetch_distance=8, batch_block=8)
+    assert opts.vmem_bytes(pooling=5, dim=128) == (8 * 5 + 8) * 128 * 4
+
+
+# ---------------------------------------------------------------------------
+# roofline: the fused lookup must lower to a memory-dominant stage
+# ---------------------------------------------------------------------------
+
+def test_fused_xla_stage_is_memory_dominant():
+    """The fused dataflow is a gather + pooled reduce: its roofline must
+    land memory-bound (the paper's premise for the embedding stage)."""
+    from repro.roofline.analyze import roofline_terms
+    table, cache, hot, slots, idx = _world(4096, 128, 64, 16, hit_rate=1.0,
+                                           seed=41)
+
+    def stage(cache, slots, rows):
+        return fused_warm_lookup_xla(cache, slots, rows)
+
+    lowered = jax.jit(stage).lower(cache, jnp.asarray(slots),
+                                   jnp.asarray(idx))
+    hlo = lowered.compile().as_text()
+    terms = roofline_terms(hlo, num_chips=1)
+    assert terms["dominant"] == "memory"
+    assert terms["per_device_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# serving integration: DeviceWarmCache / ParameterServer / storage backends
+# ---------------------------------------------------------------------------
+
+def _mk_ps(tables, *, fused, hot_rows=4, warm_slots=12):
+    from repro.ps import ParameterServer, PSConfig
+    cfg = PSConfig(hot_rows=hot_rows, warm_slots=warm_slots,
+                   warm_backing="device", fused_lookup=fused)
+    return ParameterServer(tables, cfg)
+
+
+def test_device_warm_cache_lookup_fused():
+    """Cache-level fused lookup: hits from the device payload, misses on
+    the list, counters untouched (read-only like probe())."""
+    from repro.ps.warm_cache import DeviceWarmCache, WarmCache
+    assert not WarmCache(4, 8).supports_fused
+    cache = DeviceWarmCache(capacity=8, dim=8)
+    assert cache.supports_fused
+    table = RNG.normal(size=(32, 8)).astype(np.float32)
+    resident = np.array([3, 5, 7, 11])
+    cache.admit(resident, table[resident], np.ones(4, np.int64))
+    before = cache.stats()
+    rows = np.array([[3, 5, 9], [11, 20, 3]])
+    res = cache.lookup_fused(rows)
+    assert cache.stats() == before                 # read-only
+    np.testing.assert_array_equal(res.miss_rows, [9, 20])
+    np.testing.assert_array_equal(res.miss_pos, [2, 4])
+    masked = table[rows]
+    masked[np.isin(rows, resident, invert=True)] = 0.0
+    assert jnp.array_equal(res.pooled, jnp.asarray(masked.sum(axis=1)))
+
+
+@pytest.mark.parametrize("combine", ["sum", "mean"])
+@pytest.mark.parametrize("weighted", [False, True])
+def test_ps_lookup_fused_matches_unfused(combine, weighted):
+    """ParameterServer.lookup_fused == lookup + pool, bit-for-bit, with
+    IDENTICAL tier counters — across steps so warm admission/eviction and
+    hot hits all exercise."""
+    from repro.core.embedding import _pool_rows_core
+    rng = np.random.default_rng(43)
+    T, R, D, B, L = 3, 64, 12, 6, 4
+    tables = rng.normal(size=(T, R, D)).astype(np.float32)
+    ps_f = _mk_ps(tables, fused=True)
+    ps_u = _mk_ps(tables, fused=False)
+    assert ps_f.supports_fused() and not ps_u.supports_fused()
+    try:
+        for step in range(4):
+            idx = rng.integers(0, R, (B, T, L))
+            w = (rng.random((B, T, L)).astype(np.float32)
+                 if weighted else None)
+            fused = ps_f.lookup_fused(idx, w, combine=combine)
+            rows = ps_u.lookup(idx)
+            w_t = None if w is None else jnp.swapaxes(jnp.asarray(w), 0, 1)
+            pooled = _pool_rows_core(jnp.swapaxes(jnp.asarray(rows), 0, 1),
+                                     w_t, combine, L)
+            unfused = jnp.swapaxes(pooled, 0, 1)
+            assert jnp.array_equal(fused, unfused), f"step {step}"
+        sf, su = ps_f.stats(), ps_u.stats()
+        for k in ("total_accesses", "hot_hits", "warm_hits", "cold_misses",
+                  "insertions", "evictions", "warm_occupancy"):
+            assert sf[k] == su[k], (k, sf[k], su[k])
+    finally:
+        ps_f.close()
+        ps_u.close()
+
+
+def test_ps_lookup_fused_degraded_matches():
+    """Degraded (warm-only) serving: the fused kernel's zero-contribution
+    output IS the degraded answer — same bits, same L2-error accounting."""
+    rng = np.random.default_rng(47)
+    T, R, D, B, L = 2, 48, 8, 5, 3
+    tables = rng.normal(size=(T, R, D)).astype(np.float32)
+    ps_f = _mk_ps(tables, fused=True)
+    ps_u = _mk_ps(tables, fused=False)
+    try:
+        warm = rng.integers(0, R, (B, T, L))
+        ps_f.lookup_fused(warm)
+        ps_u.lookup(warm)
+        ps_f.set_degraded(True)
+        ps_u.set_degraded(True)
+        idx = rng.integers(0, R, (B, T, L))
+        fused = ps_f.lookup_fused(idx, combine="sum")
+        rows = ps_u.lookup(idx)
+        unfused = jnp.asarray(rows).sum(axis=2)
+        assert jnp.array_equal(fused, unfused)
+        sf, su = ps_f.stats(), ps_u.stats()
+        assert sf["degraded_rows"] == su["degraded_rows"]
+        assert np.isclose(sf["degraded_l2_sq"], su["degraded_l2_sq"])
+    finally:
+        ps_f.close()
+        ps_u.close()
+
+
+def test_ps_config_rejects_fused_without_device_backing():
+    from repro.ps import PSConfig
+    with pytest.raises(ValueError, match="device"):
+        PSConfig(warm_slots=4, fused_lookup=True, warm_backing="host")
+
+
+def test_ps_lookup_fused_requires_flag():
+    rng = np.random.default_rng(53)
+    tables = rng.normal(size=(2, 16, 8)).astype(np.float32)
+    ps = _mk_ps(tables, fused=False)
+    try:
+        with pytest.raises(RuntimeError, match="fused"):
+            ps.lookup_fused(rng.integers(0, 16, (2, 2, 2)))
+    finally:
+        ps.close()
+
+
+@pytest.mark.parametrize("storage", ["tiered", "sharded"])
+def test_storage_fused_flag_flips_capability_and_bits_match(storage):
+    """The backends advertise `fused_lookup` exactly when the flag + device
+    backing line up, and the fused lookup() output is bit-identical to the
+    per-row path."""
+    from repro.core.embedding import (EmbeddingBagCollection,
+                                      EmbeddingStageConfig)
+    from repro.ps import PSConfig
+    rng = np.random.default_rng(59)
+    T, R, D, B, L = 4, 48, 8, 6, 3
+
+    def build(fused):
+        cfg = EmbeddingStageConfig(num_tables=T, rows=R, dim=D, pooling=L,
+                                   combine="mean", storage=storage)
+        ebc = EmbeddingBagCollection(cfg)
+        params = ebc.init(jax.random.PRNGKey(0))
+        ps_cfg = PSConfig(hot_rows=4, warm_slots=8, warm_backing="device",
+                          fused_lookup=fused)
+        if storage == "sharded":
+            ebc.storage.build(params, ps_cfg, num_shards=2, parallel=False)
+        else:
+            ebc.storage.build(params, ps_cfg)
+        return ebc, params
+
+    ebc_f, params = build(True)
+    ebc_u, _ = build(False)
+    try:
+        assert ebc_f.storage.capabilities().fused_lookup
+        assert not ebc_u.storage.capabilities().fused_lookup
+        assert "fused_lookup" in ebc_f.storage.capabilities().describe()
+        for step in range(3):
+            idx = rng.integers(0, R, (B, T, L))
+            w = (rng.random((B, T, L)).astype(np.float32)
+                 if step % 2 else None)
+            a = ebc_f.storage.lookup(params, idx, w)
+            b = ebc_u.storage.lookup(params, idx, w)
+            assert jnp.array_equal(a, b), f"step {step}"
+    finally:
+        ebc_f.storage.close()
+        ebc_u.storage.close()

@@ -13,11 +13,15 @@ Compares a fresh `benchmarks/run.py --json` output against the checked-in
       the balanced placement's imbalance ratio must stay below contiguous,
       in the `sharded_migration` sweep load-aware replica routing must
       beat equal slicing (lower p99 AND a smaller slow-replica batch
-      share), and in the `slo_overload` sweep the SLO controller must earn
+      share), in the `slo_overload` sweep the SLO controller must earn
       its keep under a flash crowd (SLO-on windowed p99 recovers to the
       target after the spike while SLO-off's does not; the shed fraction
-      stays bounded; the armed-but-unloaded steady leg sheds nothing) —
-      all compared WITHIN the fresh run, so host speed never flakes them.
+      stays bounded; the armed-but-unloaded steady leg sheds nothing),
+      and in the `embedding_stage` sweep the fused warm-cache lookup
+      must be no slower per row than the per-row tier path on the
+      warm-hit leg (the leg the fusion exists for) and must lower
+      memory-dominant — all compared WITHIN the fresh run, so host
+      speed never flakes them.
   warnings (exit 0)      — numeric drift: timing metrics (units us/ms/s)
       outside a generous x`--timing-factor` band, other numerics (hit
       rates, overlap fractions — thread-race dependent) moving more than
@@ -26,8 +30,9 @@ Compares a fresh `benchmarks/run.py --json` output against the checked-in
 
 New records absent from the baseline are reported as info — refresh the
 baseline (`benchmarks/run.py --sweep storage_backends --sweep
-sharded_balance --sweep sharded_migration --sweep slo_overload --json
-benchmarks/baseline.json`) when adding sweeps.
+sharded_balance --sweep sharded_migration --sweep embedding_stage
+--sweep slo_overload --json benchmarks/baseline.json`) when adding
+sweeps.
 
 Stdlib only (runs before `pip install` in CI if need be).
 """
@@ -168,6 +173,26 @@ def compare(base: dict, new: dict, timing_factor: float,
         errors.append(f"slo_overload: armed controller shed "
                       f"{steady_shed:g} of a steady in-capacity trace — "
                       f"admission control must be invisible off-overload")
+
+    # semantic invariants: the fused warm-cache lookup must earn its keep
+    # on the leg it exists for (all-resident traffic served in one
+    # launch), and the stage must stay memory-bound — within the fresh
+    # run, so host speed never flakes them
+    def stage(records, leg, metric):
+        return records.get(("embedding_stage",
+                            f"embedding_stage/{leg}", metric))
+    f_us = stage(new, "warm_hit/fused", "row_us")
+    u_us = stage(new, "warm_hit/unfused", "row_us")
+    if f_us is not None and u_us is not None and not f_us <= u_us:
+        errors.append(f"embedding_stage: fused warm-hit lookup "
+                      f"{f_us:g}us/row is slower than the per-row path "
+                      f"{u_us:g}us/row — the fused kernel path regressed")
+    dominant = stage(new, "roofline", "dominant")
+    if dominant is not None and dominant != "memory":
+        errors.append(f"embedding_stage: fused stage lowered "
+                      f"{dominant!r}-dominant, expected 'memory' — the "
+                      f"lookup stopped being a bandwidth problem, which "
+                      f"means it stopped being an embedding gather")
     return errors, warnings
 
 
