@@ -767,6 +767,181 @@ def sharded_migration():
          f"imb_after={res.get('imbalance_after', 0.0):.4f}")
 
 
+def sharded_pool():
+    """Process-pool sharded serving (`PoolStorage`: worker processes behind
+    the framed pipe RPC, one shared host cold tier) vs the in-process
+    thread-sharded backend.
+
+    parity/    — the `sharded_balance` skewed mix on a balanced placement,
+                 served by both backends through `ServingSession`. Hard
+                 record: `bit_exact` (the RPC scatter/gather must reproduce
+                 the thread path row-for-row); `p99_ms` rides the timing
+                 band so pool work can't silently slow either path.
+
+    host_tier/ — the shared-host-tier dedup claim, measured. The same
+                 tables are built at 1/2/4 workers on placements whose
+                 units are contiguous runs (including replicated tables at
+                 W>=2): every worker serves zero-copy shm VIEWS, so
+                 `resident_cold_bytes` must stay ONE table copy however
+                 many processes map it — flat, not linear, in worker count
+                 (a within-run `check_bench` invariant) — while
+                 `host_view_bytes` (the sum of per-worker mapped views)
+                 grows past one copy as replicas stack up.
+
+    shift_*/   — a moving hot set: the shift trace's phase flip re-aimed at
+                 the table axis (the row-level `make_traffic("shift")`
+                 re-scatter moves rows WITHIN tables, which the table-load
+                 cost model is invariant to by construction — so the bench
+                 moves the per-table hotness mix instead). Phase A's skew
+                 is served on a contiguous split with a migration threshold
+                 armed; the live window trips it and the placement is
+                 migrated mid-serving. Phase B then coalesces the hot set
+                 onto the tables that landed together on shard 0 — the
+                 worst drift for the installed placement at ANY seed — and
+                 a second migration follows the hot set. Run on sharded AND
+                 pool: records imbalance before/after each swap and
+                 bit-exactness across every batch, including the
+                 cross-process build-before-teardown commit.
+    """
+    from repro.ps import PSConfig
+    from repro.serving import BatcherConfig, ServingSession
+    from repro.storage import ShardPlacement, plan_shard_placement
+    rows, dim, batch, pool = 2000, 16, 32, 10
+    hotness = ("one_item", "one_item", "high_hot", "high_hot",
+               "med_hot", "low_hot", "random", "random")
+    t_count = len(hotness)
+
+    def mk_pats(hot):
+        return [make_pattern(h, rows, seed=seeded(t))
+                for t, h in enumerate(hot)]
+
+    def mk(pats, seed):
+        return np.stack([p.sample(batch, pool, seed=seed * 100 + t)
+                         for t, p in enumerate(pats)],
+                        axis=1).astype(np.int32)
+
+    def mk_model(backend):
+        cfg = DLRMConfig(embedding=EmbeddingStageConfig(
+            num_tables=t_count, rows=rows, dim=dim, pooling=pool,
+            backend="xla", storage=backend),
+            bottom_mlp=(32, dim), top_mlp=(16, 1))
+        return DLRM(cfg)
+
+    def ps_cfg():
+        return PSConfig(hot_rows=rows // 10, warm_slots=rows // 10,
+                        window_batches=8, async_prefetch=True)
+
+    pats = mk_pats(hotness)
+    trace = np.concatenate([mk(pats, s) for s in range(2)], axis=0)
+    ref_model = mk_model("device")
+    params = ref_model.init(jax.random.PRNGKey(SEED))
+    rng = np.random.default_rng(SEED)
+
+    # -- parity: same traffic, thread shards vs worker processes ----------
+    balanced = plan_shard_placement(trace, 2, row_bytes=dim * 4)
+    for backend in ("sharded", "pool"):
+        model = mk_model(backend)
+        store = model.ebc.storage
+        build_kw = {"num_workers": 2} if backend == "pool" else {}
+        store.build(params, ps_cfg(), trace=trace, placement=balanced,
+                    **build_kw)
+        idx = jnp.asarray(mk(pats, 7))
+        exact = bool(np.array_equal(
+            np.asarray(model.embedding_only(params, idx)),
+            np.asarray(ref_model.embedding_only(params, idx))))
+        sess = ServingSession(
+            model, params,
+            batcher=BatcherConfig(max_batch=batch, max_wait_s=0.0),
+            sla_ms=1e6)
+        for b in range(4):
+            dense = rng.standard_normal(
+                (batch, model.cfg.dense_features)).astype(np.float32)
+            sess.submit_batch(dense, mk(pats, b + 10), qid0=b * batch)
+            if b >= 1:
+                sess.poll()
+        sess.drain()
+        sess.close()
+        pct = sess.percentiles()
+        emit(f"sharded_pool/parity_{backend}", "",
+             f"bit_exact={exact} served={pct['served']} "
+             f"p99_ms={pct['p99_ms']:.2f}")
+
+    # -- host tier: one shm copy of the cold rows, any worker count -------
+    # every solo table group below is an ascending contiguous run, so each
+    # worker's ColdStore is a zero-copy view into the ONE shared segment;
+    # replicating tables 0 and 7 onto every worker adds mapped views but
+    # no resident bytes
+    host_plcs = {
+        1: ShardPlacement.contiguous(t_count, 1),
+        2: ShardPlacement(num_tables=t_count, num_shards=2,
+                          replicas=((0, 1), (0,), (0,), (0,),
+                                    (1,), (1,), (1,), (0, 1)),
+                          loads=(1.0,) * t_count, strategy="replicated"),
+        4: ShardPlacement(num_tables=t_count, num_shards=4,
+                          replicas=((0, 1, 2, 3), (0,), (0,), (1,),
+                                    (2,), (3,), (3,), (0, 1, 2, 3)),
+                          loads=(1.0,) * t_count, strategy="replicated"),
+    }
+    for workers, plc in host_plcs.items():
+        model = mk_model("pool")
+        store = model.ebc.storage
+        store.build(params, ps_cfg(), trace=trace, placement=plc,
+                    num_workers=workers, num_shards=plc.num_shards)
+        idx = jnp.asarray(mk(pats, 8))
+        exact = bool(np.array_equal(
+            np.asarray(model.embedding_only(params, idx)),
+            np.asarray(ref_model.embedding_only(params, idx))))
+        acct = store.stats()["pool"]
+        store.close()
+        emit(f"sharded_pool/host_tier/workers{workers}", "",
+             f"bit_exact={exact} "
+             f"resident_cold_bytes={acct['resident_cold_bytes']} "
+             f"host_view_bytes={acct['host_view_bytes']} "
+             f"shared_host_bytes={acct['shared_host_bytes']}")
+
+    # -- shift replay: migration follows the moving hot set ---------------
+    for backend in ("sharded", "pool"):
+        model = mk_model(backend)
+        store = model.ebc.storage
+        build_kw = {"num_workers": 2} if backend == "pool" else {}
+        store.build(params, ps_cfg(), trace=trace, num_shards=2,
+                    placement="contiguous", migration_threshold=1.1,
+                    **build_kw)
+
+        def check(p, seed):
+            idx = jnp.asarray(mk(p, seed))
+            return bool(np.array_equal(
+                np.asarray(model.embedding_only(params, idx)),
+                np.asarray(ref_model.embedding_only(params, idx))))
+
+        # phase A: the heavy tables sit at the high end of the range
+        exact = all(check(pats, s) for s in range(4))    # fills the window
+        plan_a = store.plan_migration()
+        exact &= check(pats, 4)                          # plan pending
+        res_a = (store.install_migration(plan_a) if plan_a
+                 else {"migrated": False})
+        # phase B: the hot set coalesces onto shard 0's table group (the
+        # adversarial drift for whatever placement A installed); 8 batches
+        # turn the live window over entirely to the new mix
+        shard0 = set(store.placement.shard_tables[0])
+        pats_b = mk_pats(tuple("random" if t in shard0 else "one_item"
+                               for t in range(t_count)))
+        exact &= all(check(pats_b, s) for s in range(5, 13))
+        plan_b = store.plan_migration()
+        res_b = (store.install_migration(plan_b) if plan_b
+                 else {"migrated": False})
+        exact &= all(check(pats_b, s) for s in range(13, 16))
+        store.close()
+        emit(f"sharded_pool/shift_{backend}", "",
+             f"bit_exact={exact} "
+             f"migrated_a={res_a.get('migrated', False)} "
+             f"imb_a_before={res_a.get('imbalance_before', 0.0):.4f} "
+             f"imb_a_after={res_a.get('imbalance_after', 0.0):.4f} "
+             f"migrated_b={res_b.get('migrated', False)} "
+             f"imb_b_before={res_b.get('imbalance_before', 0.0):.4f} "
+             f"imb_b_after={res_b.get('imbalance_after', 0.0):.4f}")
+
+
 def embedding_stage():
     """Fused warm-cache lookup (hit-gather + pooled reduce + miss-list in
     one launch) vs the per-row tier path, per residency leg.
@@ -941,7 +1116,7 @@ ALL = [tab3_unique_access, fig5_coverage, fig1_embedding_contribution,
        fig14_gap, fig15_buffer_schemes, fig16_no_optmt, fig17_heterogeneous,
        tab45_microarch, tiered_ps_capacity_sweep, tiered_ps_sync_vs_async,
        tiered_ps_autotune, storage_backends, sharded_balance,
-       sharded_migration, embedding_stage, slo_overload]
+       sharded_migration, sharded_pool, embedding_stage, slo_overload]
 
 
 def main(argv: list[str] | None = None) -> None:

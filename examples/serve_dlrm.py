@@ -29,6 +29,7 @@ docs/serving.md "Serving under overload").
     PYTHONPATH=src python examples/serve_dlrm.py [--queries 256]
     PYTHONPATH=src python examples/serve_dlrm.py --storage tiered
     PYTHONPATH=src python examples/serve_dlrm.py --storage sharded --shards 4
+    PYTHONPATH=src python examples/serve_dlrm.py --storage pool --workers 2
     PYTHONPATH=src python examples/serve_dlrm.py --storage tiered --async \
         --auto-budget-kib 4096 --warm-backing device
     PYTHONPATH=src python examples/serve_dlrm.py --storage tiered --legacy
@@ -64,7 +65,11 @@ def parse_args():
                     default="device",
                     help="storage backend (repro.storage registry)")
     ap.add_argument("--shards", type=int, default=2,
-                    help="sharded: table-wise shard workers")
+                    help="sharded/pool: table-wise shard workers")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="pool: worker PROCESSES hosting the shards "
+                         "(per-worker device caches over one shared host "
+                         "cold tier)")
     ap.add_argument("--placement", choices=("contiguous", "balanced"),
                     default="contiguous",
                     help="sharded: table-to-shard assignment — legacy "
@@ -128,6 +133,8 @@ def build_storage(args, model, params, stream):
     if model.ebc.storage.capabilities().shardable:
         kw["num_shards"] = args.shards
         kw["placement"] = args.placement
+    if hasattr(model.ebc.storage, "worker_status"):    # process pool
+        kw["num_workers"] = args.workers
     if args.auto_budget_kib:
         # planner-driven tier sizing from the trace coverage curve
         return model.ebc.storage.build(
@@ -141,6 +148,22 @@ def build_storage(args, model, params, stream):
                  prefetch_depth=2, window_batches=16,
                  async_prefetch=args.async_mode,
                  warm_backing=args.warm_backing), **kw)
+
+
+def print_worker_status(storage) -> None:
+    """Pool backends: one operator liveness line per run — every worker
+    process, its pid, and whether the heartbeat answered."""
+    status_fn = getattr(storage, "worker_status", None)
+    if status_fn is None:
+        return
+    status = status_fn()
+    alive = sum(1 for w in status if w["alive"])
+    cells = " ".join(
+        f"w{w['worker']}:pid={w['pid']}"
+        + ("" if w["alive"] else "(dead)")
+        + (f":units={w['units']}" if w.get("units") is not None else "")
+        for w in status)
+    print(f"pool workers {alive}/{len(status)} alive  {cells}", flush=True)
 
 
 def run_session(args, hotness) -> tuple[dict, int, float]:
@@ -185,6 +208,7 @@ def run_session(args, hotness) -> tuple[dict, int, float]:
             if submitted > args.batch:
                 sess.poll()
         sess.drain()
+        print_worker_status(model.ebc.storage)   # before close() joins them
         sess.close()    # install any in-flight async refresh before reading
         pct, viol = sess.percentiles(), sess.sla_violations()
         emb_share = 0.0
@@ -258,6 +282,7 @@ def run_trace(args) -> None:
         rep = replay(sess, gen.queries(args.queries),
                      window_queries=window)
         reasons = dict(sess.stats.shed_reasons)
+        print_worker_status(sess.storage)
     finally:
         sess.close()
     print(f"trace={args.trace} base_qps={base:.0f} "

@@ -10,6 +10,10 @@ Public surface:
   `TieredStorage`       — `"tiered"`: hot/warm/cold `repro.ps` server.
   `ShardedStorage`      — `"sharded"`: table-wise partition of the tiered
                           store across shard workers, merged stats.
+  `PoolStorage`         — `"pool"`: the sharded decomposition lifted to
+                          worker PROCESSES — per-worker device caches over
+                          one shared host cold tier, crash respawn, and
+                          the same live migration/routing, bit-exact.
   `ShardPlacement` / `plan_shard_placement` / `estimate_table_loads`
                         — frequency-aware table-to-shard assignment (LPT
                           balancing + replication escape hatch).
@@ -34,10 +38,12 @@ from repro.storage.registry import (UnknownBackendError, available, create,
 from repro.storage.device import DeviceStorage
 from repro.storage.tiered import TieredStorage
 from repro.storage.sharded import ShardedStorage
+from repro.storage.pool import PoolStorage, WorkerDeadError
 
 __all__ = ["CapabilityError", "EmbeddingStorage", "StorageCapabilities",
            "require_capability", "UnknownBackendError", "available",
            "create", "register", "resolve", "unregister", "DeviceStorage",
-           "TieredStorage", "ShardedStorage", "ShardPlacement",
+           "TieredStorage", "ShardedStorage", "PoolStorage",
+           "WorkerDeadError", "ShardPlacement",
            "estimate_table_loads", "plan_shard_placement",
            "MigrationPlan", "ReplicaRouter", "plan_migration"]

@@ -1,0 +1,11 @@
+"""Multi-process shard pool: `ShardedStorage`'s unit decomposition served
+by worker processes over framed RPC, with one shared host cold tier per
+host and per-worker device caches. See `pool.py` for the backend,
+`worker.py` for the process side, `transport.py` for the wire."""
+from repro.storage.pool.pool import PoolStorage
+from repro.storage.pool.transport import (RemoteCallError, WorkerDeadError,
+                                          WorkerTransport)
+from repro.storage.pool.worker import worker_main
+
+__all__ = ["PoolStorage", "RemoteCallError", "WorkerDeadError",
+           "WorkerTransport", "worker_main"]

@@ -1,0 +1,877 @@
+"""`pool` backend — the sharded tiered store lifted to worker PROCESSES.
+
+`ShardedStorage` fans placement units out over a thread pool inside one
+process: shard count is bounded by one GIL and every replica duplicates
+its cold rows in the one host heap. `PoolStorage` keeps the exact same
+unit decomposition, placement machinery (`ShardPlacement`, migration,
+`ReplicaRouter`), and scatter/gather math — but each unit's
+`ParameterServer` lives in a real worker process behind the framed RPC of
+`repro.storage.pool.transport` (the NVIDIA GPU-specialized inference PS
+shape: per-worker device caches over one shared host tier).
+
+What crosses the process boundary, and what doesn't:
+
+  * cold tables — ONE `shared_memory` segment per host, created at
+    `build()`; workers map it read-only and contiguous table groups are
+    served as zero-copy views, so N workers replicating a hot table share
+    one host copy of its rows. Only the per-worker hot/warm device caches
+    duplicate — that is the dedup the `sharded_pool` bench sweep measures.
+  * lookups — per-unit index slices out, per-unit row blocks (or fused
+    pooled blocks) back; the pool scatters them into the same [B, T, L, D]
+    buffer `ShardedStorage` fills and runs the identical eager pooling
+    reduction, so `pool` is bit-exact vs `device`/`sharded`/`tiered` on
+    every placement, migration, and degraded path.
+  * routing & migration state — pool-side, unchanged from PR 4–5: routers
+    split replicated tables' batches by observed per-replica service cost
+    (timed inside the worker, so RPC overhead doesn't pollute the signal),
+    and `plan_migration` re-plans from the pool-side full-batch window.
+
+Cross-process build-before-teardown: `install_migration` constructs the
+new epoch's units as PENDING on every worker first (`construct_pending`),
+then commits everywhere; any construct failure — including a worker
+KILLED mid-swap — aborts the pending units on the survivors, respawns the
+dead worker with the CURRENT units, and leaves the old pool serving. A
+worker crash during normal serving is likewise absorbed: the dead worker
+is respawned from the shared tier (its caches restart cold; served values
+never change) and only its slice of the batch is retried.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import multiprocessing
+from collections import deque
+from typing import Any, Optional, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.storage.base import EmbeddingStorage, StorageCapabilities
+from repro.storage.placement import (DEFAULT_MIGRATION_THRESHOLD,
+                                     MigrationPlan, ReplicaRouter,
+                                     ShardPlacement, plan_migration)
+from repro.storage.pool.transport import (DEFAULT_TIMEOUT, RemoteCallError,
+                                          WorkerDeadError, create_segment,
+                                          spawn_worker)
+from repro.storage.registry import register
+from repro.storage.sharded import (_chunk_bounds, merge_shard_stats,
+                                   resolve_placement)
+from repro.storage.tiered import (_extract_tables, _reject_double_remap,
+                                  build_ps_config)
+
+
+@dataclasses.dataclass
+class _RemoteUnit:
+    """Pool-side mirror of one worker-hosted ParameterServer unit — the
+    same placement coordinates as `ShardedStorage._Unit`, with the PS
+    replaced by (worker, unit_id) routing."""
+    unit_id: int
+    shard: int
+    worker: int
+    table_ids: np.ndarray                 # global table ids, ascending
+    chunk: Optional[tuple[int, int]] = None
+    service_s: float = 0.0                # replica units: window lookup time
+    served_rows: int = 0                  # replica units: window batch rows
+
+    def spec(self) -> dict:
+        """The construction descriptor shipped to the worker."""
+        return {"unit_id": self.unit_id, "shard": self.shard,
+                "table_ids": self.table_ids, "chunk": self.chunk}
+
+
+def _plan_units(plc: ShardPlacement, num_workers: int
+                ) -> tuple[list[_RemoteUnit], list[list[_RemoteUnit]]]:
+    """Enumerate placement units in `ShardedStorage._construct_units`
+    order and assign each to a worker by shard (`shard % num_workers`).
+    Replicas of one table live on distinct shards by placement invariant,
+    so with workers >= shards they land on distinct processes."""
+    units: list[_RemoteUnit] = []
+    by_worker: list[list[_RemoteUnit]] = [[] for _ in range(num_workers)]
+
+    def add(shard: int, ids, chunk) -> None:
+        u = _RemoteUnit(unit_id=len(units), shard=shard,
+                        worker=shard % num_workers,
+                        table_ids=np.asarray(ids, np.int64), chunk=chunk)
+        units.append(u)
+        by_worker[u.worker].append(u)
+
+    for s, tabs in enumerate(plc.shard_tables):
+        solo = [t for t in tabs if len(plc.replicas[t]) == 1]
+        if solo:
+            add(s, solo, None)
+    for t in plc.replicated_tables:
+        owners = plc.replicas[t]
+        for k, s in enumerate(owners):
+            add(s, [t], (k, len(owners)))
+    return units, by_worker
+
+
+@register("pool")
+class PoolStorage(EmbeddingStorage):
+    """Process-pool sharded tiered storage: N worker processes over one
+    shared host cold tier, one merged report."""
+
+    def __init__(self, ebc):
+        super().__init__(ebc)
+        _reject_double_remap(self.cfg, "pool")
+        self.placement: Optional[ShardPlacement] = None
+        self.migration_threshold: Optional[float] = None
+        self._transports: list = []
+        self._units: list[_RemoteUnit] = []
+        self._worker_units: list[list[_RemoteUnit]] = []
+        self._routers: dict[int, ReplicaRouter] = {}
+        self._valid_hint: Optional[int] = None
+        self._rpc_pool: Optional[concurrent.futures.ThreadPoolExecutor] = None
+        self._closed = False
+        self._epoch = 0
+        self._segment = None                  # shared cold-table segment
+        self._seg_meta: Optional[tuple] = None    # (name, dtype str, shape)
+        self._dtype = None
+        self._ps_cfg = None
+        self._hot_plans: Optional[dict] = None    # table -> HotPlan
+        self._replicate_factor = 0.0
+        self._degraded = False
+        self._prefetch_depth = 0
+        self._depth_override: Optional[int] = None
+        self._timeout = DEFAULT_TIMEOUT
+        self._ctx = None
+        # backend-level sliding traffic window — migration plans from FULL
+        # batches, exactly as in ShardedStorage
+        self.window: deque = deque(maxlen=16)
+
+    # -- descriptor ---------------------------------------------------------
+    def capabilities(self) -> StorageCapabilities:
+        # derived pool-side without an RPC: worker prefetch depth only
+        # moves through set_prefetch_depth (tracked), and fused support is
+        # a pure function of the shared PSConfig
+        live = bool(self._units) and not self._closed
+        stageable = live and self._prefetch_depth > 0
+        return StorageCapabilities(
+            device_resident=False,
+            stageable=stageable,
+            async_prefetch=stageable and self._ps_cfg.async_prefetch,
+            refreshable=True,
+            shardable=True,
+            tunable=live,
+            migratable=live,
+            degradable=live,
+            fused_lookup=live and self._ps_cfg.fused_lookup)
+
+    @property
+    def num_shards(self) -> int:
+        return 0 if self.placement is None else self.placement.num_shards
+
+    @property
+    def num_workers(self) -> int:
+        return len(self._transports)
+
+    # -- construction -------------------------------------------------------
+    def _plan_hot(self, ps_cfg, trace: Optional[np.ndarray]
+                  ) -> Optional[dict]:
+        """Per-table hot plans, computed ONCE pool-side — identical to the
+        plans each trace-fed ParameterServer would derive for its slice
+        (`plan_from_trace(trace[:, t])` is per-table), and reusable
+        verbatim when a crashed worker respawns."""
+        k = min(ps_cfg.hot_rows, self.cfg.rows)
+        if trace is None or k <= 0:
+            return None
+        from repro.core import hot_cache
+        return {t: hot_cache.plan_from_trace(trace[:, t], self.cfg.rows, k)
+                for t in range(self.cfg.num_tables)}
+
+    def _spawn_and_construct(self, num_workers: int,
+                             by_worker: list[list[_RemoteUnit]],
+                             seg_meta: tuple) -> list:
+        """Spawn `num_workers` processes and construct their units; on ANY
+        failure every new process is destroyed and the (new) segment is
+        left for the caller to reclaim — live state is never touched."""
+        if self._ctx is None:
+            self._ctx = multiprocessing.get_context("spawn")
+        transports = [spawn_worker(w, self._ctx)
+                      for w in range(num_workers)]
+        name, dtype, shape = seg_meta
+
+        def boot(w: int) -> None:
+            t = transports[w]
+            t.call("attach_tables",
+                   {"name": name, "dtype": dtype, "shape": shape},
+                   timeout=self._timeout)
+            t.call("construct",
+                   {"units": [u.spec() for u in by_worker[w]],
+                    "ps_cfg": self._ps_cfg,
+                    "plans_by_table": self._hot_plans,
+                    "degraded": self._degraded,
+                    "prefetch_depth": self._depth_override},
+                   timeout=self._timeout)
+
+        try:
+            with concurrent.futures.ThreadPoolExecutor(
+                    max_workers=num_workers) as ex:
+                list(ex.map(boot, range(num_workers)))
+        except BaseException:
+            for t in transports:
+                t.destroy()
+            raise
+        return transports
+
+    def build(self, params: dict, ps_cfg=None,
+              trace: Optional[np.ndarray] = None, *,
+              num_workers: int = 2,
+              num_shards: Optional[int] = None,
+              placement: Union[str, ShardPlacement, None] = None,
+              device_budget_bytes: Optional[int] = None,
+              migration_threshold: Optional[float] = None,
+              replicate_factor: float = 0.0,
+              rpc_timeout: float = DEFAULT_TIMEOUT,
+              **ps_cfg_overrides) -> "PoolStorage":
+        """Spawn the worker pool and install the placement's units on it.
+
+        `num_shards` defaults to `num_workers` (one shard per process);
+        `placement`/`migration_threshold`/`replicate_factor` carry the
+        exact `ShardedStorage.build` semantics. The cold tables are copied
+        ONCE into a host shared-memory segment; workers map it read-only.
+
+        Rebuild-safe across processes: on a live backend the new workers
+        are spawned and fully constructed BEFORE the old pool tears down,
+        so a spawn or constructor failure leaves the old workers serving.
+        """
+        cfg = self.cfg
+        if num_workers < 1:
+            raise ValueError(f"num_workers must be >= 1, got {num_workers}")
+        if num_shards is None:
+            num_shards = num_workers
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        num_shards = min(num_shards, cfg.num_tables)
+        ps_cfg = build_ps_config(trace, cfg.rows, cfg.dim,
+                                 cfg.jnp_dtype.itemsize, ps_cfg,
+                                 device_budget_bytes, **ps_cfg_overrides)
+        tables = np.ascontiguousarray(
+            _extract_tables(params, cfg.num_tables))
+        plc = resolve_placement(cfg, placement, num_shards, trace)
+        num_workers = min(num_workers, plc.num_shards)
+
+        # everything that can raise runs BEFORE the old pool is touched
+        old_ps_cfg, old_plans = self._ps_cfg, self._hot_plans
+        old_degraded, old_depth = self._degraded, self._depth_override
+        old_timeout = self._timeout
+        self._ps_cfg = ps_cfg
+        self._timeout = float(rpc_timeout)
+        self._hot_plans = self._plan_hot(ps_cfg, trace)
+        self._degraded = False        # a full (re)build starts exact
+        self._depth_override = None
+        seg = create_segment(tables.nbytes)
+        np.ndarray(tables.shape, tables.dtype, buffer=seg.buf)[...] = tables
+        seg_meta = (seg.name, tables.dtype.str, tables.shape)
+        units, by_worker = _plan_units(plc, num_workers)
+        try:
+            transports = self._spawn_and_construct(num_workers, by_worker,
+                                                   seg_meta)
+        except BaseException:
+            seg.close()
+            seg.unlink()
+            self._ps_cfg, self._hot_plans = old_ps_cfg, old_plans
+            self._degraded, self._depth_override = old_degraded, old_depth
+            self._timeout = old_timeout
+            raise
+
+        # swap: new pool serves, then the old one tears down
+        old_transports, old_seg = self._transports, self._segment
+        old_rpc_pool = self._rpc_pool
+        self._transports = transports
+        self._segment, self._seg_meta = seg, seg_meta
+        self._dtype = tables.dtype
+        self._install(plc, units)
+        self.migration_threshold = migration_threshold
+        self._replicate_factor = float(replicate_factor)
+        self._prefetch_depth = ps_cfg.prefetch_depth
+        self.window = deque(maxlen=ps_cfg.window_batches)
+        self._valid_hint = None
+        self._closed = False
+        self._rpc_pool = (concurrent.futures.ThreadPoolExecutor(
+            max_workers=num_workers, thread_name_prefix="pool-rpc")
+            if num_workers > 1 else None)
+        for t in old_transports:
+            t.shutdown()
+        if old_rpc_pool is not None:
+            old_rpc_pool.shutdown(wait=True)
+        if old_seg is not None:
+            old_seg.close()
+            old_seg.unlink()
+        return self
+
+    def _install(self, plc: ShardPlacement,
+                 units: list[_RemoteUnit]) -> None:
+        """Pool-side half of the swap (workers already serve `units`):
+        placement, routing, epoch. All-or-nothing — router construction
+        runs before the first assignment."""
+        routers = {t: ReplicaRouter(len(plc.replicas[t]))
+                   for t in plc.replicated_tables}
+        self.placement = plc
+        self._units = units
+        by_worker: list[list[_RemoteUnit]] = \
+            [[] for _ in range(len(self._transports))]
+        for u in units:
+            by_worker[u.worker].append(u)
+        self._worker_units = by_worker
+        self._routers = routers
+        self._epoch += 1
+
+    def _require_built(self) -> None:
+        if self._closed:
+            raise RuntimeError(
+                "storage='pool' backend is closed (its worker processes "
+                "are joined) — build() it again before serving")
+        if not self._units:
+            raise RuntimeError(
+                "storage='pool' needs its worker pool: call "
+                "ebc.storage.build(params, ps_cfg, num_workers=N) first")
+
+    # -- worker fan-out & crash recovery ------------------------------------
+    def _map_workers(self, fn, workers: Optional[list[int]] = None
+                     ) -> tuple[dict, dict]:
+        """Apply fn(worker_index) across workers (RPC pool when one
+        exists), collecting `WorkerDeadError`/`RemoteCallError` per worker
+        instead of raising — the caller decides between retry-after-
+        respawn (dead) and propagate (remote bug)."""
+        targets = list(range(len(self._transports))) \
+            if workers is None else workers
+        outs: dict[int, Any] = {}
+        errs: dict[int, Exception] = {}
+
+        def guarded(w):
+            try:
+                return w, fn(w), None
+            except (WorkerDeadError, RemoteCallError) as e:
+                return w, None, e
+
+        if self._rpc_pool is None:
+            results = [guarded(w) for w in targets]
+        else:
+            results = list(self._rpc_pool.map(guarded, targets))
+        for w, out, err in results:
+            if err is None:
+                outs[w] = out
+            else:
+                errs[w] = err
+        return outs, errs
+
+    def _call(self, w: int, verb: str, payload: dict | None = None):
+        return self._transports[w].call(verb, payload,
+                                        timeout=self._timeout)
+
+    def _respawn_worker(self, w: int) -> None:
+        """Replace a dead worker process with a fresh one serving the SAME
+        units, rebuilt from the shared host tier with the build-time hot
+        plans. Caches restart cold and per-worker counters restart at
+        zero; served values never change (every tier re-copies the same
+        authoritative bytes)."""
+        self._transports[w].destroy()
+        if self._ctx is None:
+            self._ctx = multiprocessing.get_context("spawn")
+        t = spawn_worker(w, self._ctx)
+        try:
+            name, dtype, shape = self._seg_meta
+            t.call("attach_tables",
+                   {"name": name, "dtype": dtype, "shape": shape},
+                   timeout=self._timeout)
+            t.call("construct",
+                   {"units": [u.spec() for u in self._worker_units[w]],
+                    "ps_cfg": self._ps_cfg,
+                    "plans_by_table": self._hot_plans,
+                    "degraded": self._degraded,
+                    "prefetch_depth": self._depth_override},
+                   timeout=self._timeout)
+        except BaseException:
+            t.destroy()
+            raise
+        self._transports[w] = t
+
+    def _recover(self, errs: dict) -> None:
+        """Respawn every worker that died; re-raise the first non-crash
+        (remote bug) error — those must surface, not retry."""
+        remote = [e for e in errs.values()
+                  if not isinstance(e, WorkerDeadError)]
+        if remote:
+            raise remote[0]
+        for w in errs:
+            self._respawn_worker(w)
+
+    def _fan_out_retry(self, fn, what: str) -> dict:
+        """Run fn across all workers; dead workers are respawned and ONLY
+        their slice re-runs (survivors' results are kept). A second
+        consecutive death on the same slice propagates."""
+        outs, errs = self._map_workers(fn)
+        if errs:
+            self._recover(errs)
+            outs2, errs2 = self._map_workers(fn, list(errs))
+            if errs2:
+                raise next(iter(errs2.values()))
+            outs.update(outs2)
+        return outs
+
+    # -- data path ----------------------------------------------------------
+    def _unit_bounds(self, u: _RemoteUnit, batch: int) -> tuple[int, int]:
+        """Identical law to `ShardedStorage._unit_bounds`: full batch for
+        solo units, the router's cut (or the equal `np.array_split` law)
+        for replica units."""
+        if u.chunk is None:
+            return 0, batch
+        k, r = u.chunk
+        router = self._routers.get(int(u.table_ids[0]))
+        if router is not None:
+            b = router.bounds(batch)
+            return int(b[k]), int(b[k + 1])
+        return _chunk_bounds(batch, r, k)
+
+    def _lookup_work(self, w: int, idx: np.ndarray, w_np, valid,
+                     fused: bool) -> tuple[list, list]:
+        """Cut worker `w`'s per-unit request items + scatter metadata."""
+        B = idx.shape[0]
+        work, meta = [], []
+        for u in self._worker_units[w]:
+            lo, hi = self._unit_bounds(u, B)
+            if lo == hi:
+                continue
+            item = {"unit_id": u.unit_id,
+                    "idx": idx[lo:hi][:, u.table_ids]}
+            if valid is not None:
+                item["valid"] = int(np.clip(valid - lo, 0, hi - lo))
+            if fused and w_np is not None:
+                item["weights"] = w_np[lo:hi][:, u.table_ids]
+            work.append(item)
+            meta.append((u, lo, hi))
+        return work, meta
+
+    def lookup(self, params: dict, indices, weights=None, *,
+               pre_remapped: bool = False):
+        """Fan the [B, T, L] lookup out across worker processes, join,
+        scatter the per-unit blocks, pool — bit-identical to the sharded
+        (and single-server tiered) path: same bounds law, same scatter,
+        same eager pooling reduction. A worker that dies mid-batch is
+        respawned from the shared tier and only ITS slice re-runs."""
+        from repro.core.embedding import _pool_rows_core
+        self._require_built()
+        idx = np.asarray(indices)
+        B, T, L = idx.shape
+        dim = self.cfg.dim
+        valid, self._valid_hint = self._valid_hint, None
+        real = idx if valid is None else idx[:valid]
+        if real.shape[0]:
+            self.window.append(real)
+        fused = self._ps_cfg.fused_lookup
+        w_np = None if weights is None else np.asarray(weights)
+
+        def run_worker(w: int):
+            work, meta = self._lookup_work(w, idx, w_np, valid, fused)
+            if not work:
+                return []
+            res = self._call(w, "lookup", {"work": work, "fused": fused,
+                                           "combine": self.cfg.combine})
+            return list(zip(meta, res["results"]))
+
+        outs = self._fan_out_retry(run_worker, "lookup")
+
+        if fused:
+            pooled_out = np.empty((B, T, dim), self._dtype)
+            for results in outs.values():
+                for (u, lo, hi), r in results:
+                    pooled_out[lo:hi, u.table_ids] = r["block"]
+                    u.service_s += r["service_s"]
+                    u.served_rows += r["served"]
+            return jnp.asarray(pooled_out)
+
+        out = np.empty((B, T, L, dim), self._dtype)
+        for results in outs.values():
+            for (u, lo, hi), r in results:
+                out[lo:hi, u.table_ids] = r["block"]
+                u.service_s += r["service_s"]
+                u.served_rows += r["served"]
+        rows_t = jnp.swapaxes(jnp.asarray(out), 0, 1)   # [T, B, L, D]
+        w_t = (None if weights is None
+               else jnp.swapaxes(jnp.asarray(weights), 0, 1))
+        # eager on purpose — same 1-ULP rationale as tiered/sharded
+        pooled = _pool_rows_core(rows_t, w_t, self.cfg.combine,
+                                 self.cfg.pooling)
+        return jnp.swapaxes(pooled, 0, 1)               # [B, T, D]
+
+    # -- prefetch -----------------------------------------------------------
+    def can_stage(self) -> bool:
+        """All-units backpressure, asked of every worker (a staged batch
+        is resident on all units or on none). A dead worker answers False
+        this round; it is respawned before the next."""
+        if not self._units or self._closed:
+            return False
+        outs, errs = self._map_workers(
+            lambda w: self._call(w, "can_stage")["ok"])
+        if errs:
+            self._recover(errs)
+            return False
+        return all(outs.values())
+
+    def stage(self, next_indices: np.ndarray) -> bool:
+        self._require_built()
+        idx = np.asarray(next_indices)
+
+        def run_worker(w: int) -> bool:
+            work, _ = self._lookup_work(w, idx, None, None, False)
+            if not work:
+                return True
+            return self._call(w, "stage", {"work": work})["ok"]
+
+        outs, errs = self._map_workers(run_worker)
+        if errs:
+            # staging is correctness-neutral: recover and report failure
+            self._recover(errs)
+            return False
+        return all(outs.values())
+
+    def hint_valid(self, n: int) -> None:
+        self._valid_hint = int(n)
+
+    # -- degraded (warm-cache-only) overload mode ----------------------------
+    def degraded(self) -> bool:
+        return self._degraded
+
+    def set_degraded(self, on: bool) -> bool:
+        """Lockstep across every worker; the pool-level flag survives
+        migration swaps AND worker respawns (both re-apply it)."""
+        if not self._units:
+            return False
+        self._degraded = bool(on)
+        self._fan_out_retry(
+            lambda w: self._call(w, "set_degraded", {"on": bool(on)}),
+            "set_degraded")
+        return True
+
+    # -- refresh ------------------------------------------------------------
+    def refresh_window(self) -> dict:
+        """Pool-side snapshot: the full-batch traffic window (migration
+        re-planning) and the epoch guard. Per-unit windows stay inside
+        the workers — hot-set re-planning runs worker-side."""
+        return {"traffic": list(self.window), "epoch": self._epoch}
+
+    def plan_refresh(self, window=None):
+        """Hot-set plans come from each worker's live per-unit windows
+        (the window never crosses the pipe); placement re-planning runs
+        pool-side from the full-batch window, as in ShardedStorage.
+        Helper-thread safe: worker RPCs serialize against serving calls
+        on the per-transport lock."""
+        self._require_built()
+        if window is None:
+            window = self.refresh_window()
+        unit_plans = None
+        if window["epoch"] == self._epoch:
+            outs = self._fan_out_retry(
+                lambda w: self._call(w, "plan_refresh")["plans"],
+                "plan_refresh")
+            merged = {}
+            for plans in outs.values():
+                merged.update(plans)
+            if any(p is not None for p in merged.values()):
+                unit_plans = merged
+        migration = None
+        if self.migration_threshold is not None:
+            migration = self.plan_migration(window)
+        if unit_plans is None and migration is None:
+            return None
+        return {"units": unit_plans, "migration": migration,
+                "epoch": window["epoch"]}
+
+    def install_refresh(self, plan) -> dict:
+        self._require_built()
+        if plan is not None and plan.get("migration") is not None:
+            result = self.install_migration(plan["migration"])
+            result["replanned"] = result.get("migrated", False)
+            result.setdefault("refreshes", 0)
+            return result
+        if plan is not None and (
+                plan["epoch"] != self._epoch or plan["units"] is None):
+            # planned against units that no longer exist: drop it
+            plan = None
+        unit_plans = {} if plan is None else plan["units"]
+
+        def run_worker(w: int) -> dict:
+            mine = {u.unit_id: unit_plans.get(u.unit_id)
+                    for u in self._worker_units[w]}
+            return self._call(w, "install_refresh", {"plans": mine})
+
+        outs = self._fan_out_retry(run_worker, "install_refresh")
+        return {"replanned": any(r["replanned"] for r in outs.values()),
+                "refreshes": max((r["refreshes"] for r in outs.values()),
+                                 default=0)}
+
+    def refresh(self) -> dict:
+        return self.install_refresh(self.plan_refresh())
+
+    # -- live migration & routing -------------------------------------------
+    def update_routing(self) -> Optional[dict]:
+        """Identical to the sharded law — the per-replica service costs
+        were timed INSIDE the workers, so RPC overhead never pollutes the
+        routing signal. A table whose published split moved gets its
+        replica units' staged batches flushed worker-side."""
+        if not self._routers:
+            return None
+        self._require_built()
+        changed_tables = []
+        fractions = {}
+        for t, router in self._routers.items():
+            units = sorted((u for u in self._units
+                            if u.chunk is not None
+                            and int(u.table_ids[0]) == t),
+                           key=lambda u: u.chunk[0])
+            costs = np.array([u.service_s / u.served_rows
+                              if u.served_rows else np.nan for u in units])
+            for u in units:
+                u.service_s, u.served_rows = 0.0, 0
+            if router.observe(costs):
+                changed_tables.append(t)
+            fractions[t] = [round(float(f), 4) for f in router.fractions()]
+        if changed_tables:
+            stale: dict[int, list[int]] = {}
+            for u in self._units:
+                if u.chunk is not None and \
+                        int(u.table_ids[0]) in changed_tables:
+                    stale.setdefault(u.worker, []).append(u.unit_id)
+            outs, errs = self._map_workers(
+                lambda w: self._call(w, "flush_prefetch",
+                                     {"unit_ids": stale[w]}),
+                list(stale))
+            if errs:
+                self._recover(errs)
+        return {"changed": bool(changed_tables), "fractions": fractions}
+
+    def plan_migration(self, window: Any = None, *,
+                       threshold: Optional[float] = None
+                       ) -> Optional[dict]:
+        """Pure pool-side re-planning from the full-batch window — the
+        verbatim ShardedStorage law (thresholded imbalance, material-gain
+        gate, hot plans from the same window)."""
+        self._require_built()
+        if window is None:
+            window = {"traffic": list(self.window), "epoch": self._epoch}
+        traffic = window["traffic"] if isinstance(window, dict) else window
+        if not traffic:
+            return None
+        trace = np.concatenate(
+            [w.reshape(w.shape[0], w.shape[1], -1) for w in traffic],
+            axis=0)                                       # [N, T, L]
+        if threshold is None:
+            threshold = (self.migration_threshold
+                         if self.migration_threshold is not None
+                         else DEFAULT_MIGRATION_THRESHOLD)
+        mig = plan_migration(
+            self.placement, trace,
+            row_bytes=self.cfg.dim * self.cfg.jnp_dtype.itemsize,
+            threshold=threshold,
+            replicate_factor=self._replicate_factor)
+        if mig is None:
+            return None
+        hot_plans = None
+        k = min(self._ps_cfg.hot_rows, self.cfg.rows)
+        if k > 0:
+            from repro.core import hot_cache
+            hot_plans = {t: hot_cache.plan_from_trace(trace[:, t],
+                                                      self.cfg.rows, k)
+                         for t in range(self.cfg.num_tables)}
+        return {"migration": mig, "hot_plans": hot_plans}
+
+    def install_migration(self, plan: Optional[dict]) -> dict:
+        """Apply a migration plan build-before-teardown ACROSS PROCESSES:
+
+        phase 1 constructs the new units as pending on every worker (the
+        old units keep serving); any failure — a constructor error or a
+        worker killed mid-swap — aborts the survivors' pending units and
+        respawns the dead workers with the CURRENT units, so the old pool
+        is still serving, bit-exactly. Only when every worker holds its
+        pending units does phase 2 commit them everywhere (worker-local
+        swap, old units closed after); a death during commit rolls
+        FORWARD — the respawn rebuilds the new placement."""
+        self._require_built()
+        if plan is None:
+            return {"migrated": False}
+        mig: MigrationPlan = plan["migration"]
+        if mig.old.replicas != self.placement.replicas or \
+                mig.old.num_shards != self.placement.num_shards:
+            return {"migrated": False, "stale_plan": True}
+        hot_plans = plan.get("hot_plans")
+        units, by_worker = _plan_units(mig.new, len(self._transports))
+
+        # phase 1: construct pending everywhere, serving untouched
+        def construct(w: int):
+            return self._call(w, "construct_pending",
+                              {"units": [u.spec() for u in by_worker[w]],
+                               "ps_cfg": self._ps_cfg,
+                               "plans_by_table": hot_plans})
+
+        outs, errs = self._map_workers(construct)
+        if errs:
+            dead = [w for w, e in errs.items()
+                    if isinstance(e, WorkerDeadError)]
+            live = [w for w in range(len(self._transports))
+                    if w not in dead]
+            self._map_workers(
+                lambda w: self._call(w, "abort_pending"), live)
+            for w in dead:
+                self._respawn_worker(w)       # rebuilds the CURRENT units
+            remote = [e for e in errs.values()
+                      if not isinstance(e, WorkerDeadError)]
+            if remote:
+                raise remote[0]
+            return {"migrated": False, "rolled_back": True,
+                    "respawned_workers": dead}
+
+        # phase 2: commit everywhere; the swap is now declared, so a death
+        # here rolls forward (the respawn constructs the NEW units)
+        self._install(mig.new, units)
+        self._hot_plans = hot_plans if hot_plans is not None \
+            else self._hot_plans
+        outs, errs = self._map_workers(
+            lambda w: self._call(w, "commit_pending",
+                                 {"prefetch_depth": self._depth_override}))
+        if errs:
+            self._recover(errs)
+        return {"migrated": True,
+                "moved_tables": list(mig.moved_tables),
+                "replica_changes": list(mig.replica_changes),
+                "imbalance_before": round(mig.imbalance_before, 4),
+                "imbalance_after": round(mig.imbalance_after, 4)}
+
+    # -- runtime tuning ------------------------------------------------------
+    def prefetch_depth(self) -> int:
+        return self._prefetch_depth if self._units else 0
+
+    def set_prefetch_depth(self, depth: int) -> bool:
+        if not self._units:
+            return False
+        self._depth_override = int(depth)
+        outs = self._fan_out_retry(
+            lambda w: self._call(w, "set_prefetch_depth",
+                                 {"depth": int(depth)})["depth"],
+            "set_prefetch_depth")
+        self._prefetch_depth = max(outs.values(), default=0)
+        return True
+
+    def take_prefetch_window_peak(self) -> int:
+        if not self._units or self._closed:
+            return 0
+        outs = self._fan_out_retry(
+            lambda w: self._call(w, "take_window_peak")["peak"],
+            "take_window_peak")
+        return max(outs.values(), default=0)
+
+    def retune_capacities(self, budget_bytes: int) -> Optional[dict]:
+        """Budget split by table count pool-side (same law as sharded);
+        each worker retunes its own units from their live windows."""
+        self._require_built()
+        total_tables = sum(len(u.table_ids) for u in self._units)
+
+        def run_worker(w: int) -> dict:
+            shares = {u.unit_id: int(budget_bytes * len(u.table_ids)
+                                     / total_tables)
+                      for u in self._worker_units[w]}
+            if not shares:
+                return {}
+            return self._call(w, "retune", {"shares": shares})["results"]
+
+        outs = self._fan_out_retry(run_worker, "retune")
+        done = [r for res in outs.values() for r in res.values()
+                if r is not None]
+        if not done:
+            return None
+        return {"retuned_units": len(done),
+                "hot_rows": max(r["hot_rows"] for r in done),
+                "warm_slots": max(r["warm_slots"] for r in done),
+                "budget_bytes": int(budget_bytes)}
+
+    # -- stats & hygiene ----------------------------------------------------
+    def worker_status(self) -> list[dict]:
+        """Liveness heartbeat of every worker process — the operator (and
+        `examples/serve_dlrm.py --storage pool`) summary line."""
+        out = []
+        for w, t in enumerate(self._transports):
+            entry = {"worker": w, "pid": t.pid, "alive": not t.dead}
+            if not t.dead:
+                try:
+                    entry.update(t.ping(timeout=self._timeout))
+                    entry["alive"] = True
+                except (WorkerDeadError, RemoteCallError):
+                    entry["alive"] = False
+            out.append(entry)
+        return out
+
+    def stats(self) -> dict:
+        """One merged report under the exact `merge_shard_stats` law
+        (`per_shard` holds one pre-merged entry per SHARD, multi-unit
+        shards folded first), plus the pool's own accounting under
+        `"pool"`: shared-host-tier bytes counted ONCE per host vs the
+        per-worker private copies — the dedup headline."""
+        self._require_built()
+        outs = self._fan_out_retry(lambda w: self._call(w, "stats"),
+                                   "stats")
+        by_shard: dict[int, list[dict]] = {}
+        host_bytes = private_bytes = 0
+        for res in outs.values():
+            host_bytes += res["host_tier_bytes"]
+            private_bytes += res["private_tier_bytes"]
+            for entry in res["units"].values():
+                by_shard.setdefault(entry["shard"], []).append(
+                    entry["stats"])
+        per_shard = []
+        for s in sorted(by_shard):
+            group = by_shard[s]
+            if len(group) == 1:
+                per_shard.append(group[0])
+            else:
+                merged = merge_shard_stats(group)
+                merged.pop("per_shard", None)
+                merged.pop("num_shards", None)
+                per_shard.append(merged)
+        merged = merge_shard_stats(per_shard)
+        shared = int(self._segment.size) if self._segment is not None else 0
+        merged["pool"] = {
+            "num_workers": len(self._transports),
+            # the host's ONE shared cold-tier copy (counted once, however
+            # many workers map it) + what workers privately duplicated
+            "shared_host_bytes": shared,
+            "host_view_bytes": int(host_bytes),
+            "private_cold_bytes": int(private_bytes),
+            "resident_cold_bytes": shared + int(private_bytes),
+        }
+        return merged
+
+    def reset_stats(self) -> None:
+        self._fan_out_retry(lambda w: self._call(w, "reset_stats"),
+                            "reset_stats")
+        for u in self._units:
+            u.service_s, u.served_rows = 0.0, 0
+
+    def flush(self) -> None:
+        if self._units and not self._closed:
+            self._fan_out_retry(lambda w: self._call(w, "flush"), "flush")
+        self.window.clear()
+
+    def close(self) -> None:
+        """Stop every worker process, reclaim the shared segment, and
+        clear the unit lists so a closed backend fails `_require_built`
+        with a clear error. Idempotent; `build()` re-opens."""
+        for t in self._transports:
+            t.shutdown()
+        if self._rpc_pool is not None:
+            self._rpc_pool.shutdown(wait=True)
+            self._rpc_pool = None
+        if self._segment is not None:
+            self._segment.close()
+            try:
+                self._segment.unlink()
+            except FileNotFoundError:
+                pass
+            self._segment = None
+        if self._transports:
+            self._closed = True
+        self._transports = []
+        self._units = []
+        self._worker_units = []
+        self._routers = {}
+        self._degraded = False
+        self.window.clear()

@@ -1,0 +1,344 @@
+"""Pool worker process: ParameterServer units behind the framed RPC.
+
+`worker_main` is the spawn target. One worker hosts one `ParameterServer`
+per placement unit assigned to it (a shard's non-replicated table group,
+or one replica of a replicated table — the same unit decomposition
+`ShardedStorage` runs on threads) and speaks the full `EmbeddingStorage`
+verb set over the pipe, plus lifecycle verbs:
+
+  attach_tables      — map the host's ONE shared-memory copy of the cold
+                       tables (created by the pool at build()).
+  construct          — build this worker's units and start serving them.
+  construct_pending / commit_pending / abort_pending
+                     — the two halves of the cross-process
+                       build-before-teardown swap: a migration's new units
+                       are fully constructed on every worker FIRST
+                       (serving untouched), then committed everywhere —
+                       or aborted everywhere, leaving the old units live.
+  ping / shutdown    — heartbeat and clean exit.
+
+Shared host cold tier: a unit whose table ids form one ascending
+contiguous run is served a zero-copy VIEW into the shared segment
+(`ColdStore` keeps contiguous input as-is), so its cold tier costs this
+worker nothing — N workers replicating a hot table share ONE host copy of
+its rows, and only the per-worker hot/warm device caches duplicate.
+Non-contiguous table groups fall back to a private gather copy; `stats`
+reports both byte counts so the dedup is measurable.
+
+Errors: a verb that raises is answered with an `err` frame (type, message,
+traceback) and the worker keeps serving — only pipe loss or `shutdown`
+ends the loop.
+"""
+from __future__ import annotations
+
+import os
+import time
+import traceback
+
+import numpy as np
+
+from repro.storage.pool.transport import (attach_segment, decode_payload,
+                                          encode_payload, release_segments)
+
+
+class _WorkerUnit:
+    """One hosted ParameterServer + its placement coordinates."""
+
+    def __init__(self, unit_id: int, shard: int, table_ids: np.ndarray,
+                 chunk, ps, host_bytes: int, private_bytes: int):
+        self.unit_id = unit_id
+        self.shard = shard
+        self.table_ids = table_ids
+        self.chunk = chunk
+        self.ps = ps
+        self.host_bytes = host_bytes          # cold tier served as shm view
+        self.private_bytes = private_bytes    # cold tier privately copied
+
+
+def _is_contiguous_run(ids: np.ndarray) -> bool:
+    return bool(ids.size) and ids[-1] - ids[0] + 1 == ids.size and \
+        bool(np.all(np.diff(ids) == 1))
+
+
+class _WorkerState:
+    def __init__(self, worker: int):
+        self.worker = worker
+        self.units: dict[int, _WorkerUnit] = {}
+        self.pending: dict[int, _WorkerUnit] | None = None
+        self.segment = None                   # shared cold-table segment
+        self.tables = None                    # [T, R, D] view over it
+        self.degraded = False
+
+    # -- lifecycle ----------------------------------------------------------
+    def do_ping(self):
+        return {"worker": self.worker, "pid": os.getpid(),
+                "units": sorted(self.units),
+                "shards": sorted({u.shard for u in self.units.values()}),
+                "degraded": self.degraded}
+
+    def do_attach_tables(self, name, dtype, shape):
+        if self.segment is not None:
+            self.segment.close()
+        self.segment = attach_segment(name)
+        self.tables = np.ndarray(tuple(shape), np.dtype(dtype),
+                                 buffer=self.segment.buf)
+        self.tables.flags.writeable = False   # the cold tier is read-only
+        return {"attached": name, "nbytes": int(self.tables.nbytes)}
+
+    def _build_units(self, unit_specs, ps_cfg, plans_by_table):
+        """Construct ParameterServers for `unit_specs` without touching the
+        serving units; on any failure, close what was built and re-raise."""
+        from repro.ps import ParameterServer
+        if self.tables is None:
+            raise RuntimeError(f"worker {self.worker}: attach_tables must "
+                               f"run before construct")
+        built: dict[int, _WorkerUnit] = {}
+        try:
+            for spec in unit_specs:
+                ids = np.asarray(spec["table_ids"], np.int64)
+                if _is_contiguous_run(ids):
+                    # zero-copy slice of the shared host tier: ColdStore
+                    # keeps contiguous input as-is, so the cold rows are
+                    # never duplicated into this process
+                    tabs = self.tables[int(ids[0]):int(ids[-1]) + 1]
+                    host, priv = int(tabs.nbytes), 0
+                else:
+                    tabs = self.tables[ids]   # private gather copy
+                    host, priv = 0, int(tabs.nbytes)
+                if plans_by_table is not None:
+                    ps = ParameterServer(
+                        tabs, ps_cfg,
+                        plans=[plans_by_table[int(t)] for t in ids])
+                else:
+                    ps = ParameterServer(tabs, ps_cfg)
+                built[int(spec["unit_id"])] = _WorkerUnit(
+                    int(spec["unit_id"]), int(spec["shard"]), ids,
+                    spec["chunk"], ps, host, priv)
+        except BaseException:
+            for u in built.values():
+                u.ps.close()
+            raise
+        return built
+
+    def do_construct(self, units, ps_cfg, plans_by_table=None,
+                     degraded=False, prefetch_depth=None):
+        """Build + immediately serve (initial build / crash respawn)."""
+        built = self._build_units(units, ps_cfg, plans_by_table)
+        old = self.units
+        self.units = built
+        self.degraded = bool(degraded)
+        for u in built.values():
+            if self.degraded:
+                u.ps.set_degraded(True)
+            if prefetch_depth is not None:
+                u.ps.set_prefetch_depth(int(prefetch_depth))
+        for u in old.values():
+            u.ps.close()
+        return {"units": sorted(self.units)}
+
+    def do_construct_pending(self, units, ps_cfg, plans_by_table=None):
+        """Phase 1 of the cross-process swap: build the next epoch's units
+        while the current ones keep serving."""
+        if self.pending is not None:
+            for u in self.pending.values():
+                u.ps.close()
+        self.pending = self._build_units(units, ps_cfg, plans_by_table)
+        return {"pending": sorted(self.pending)}
+
+    def do_commit_pending(self, prefetch_depth=None):
+        """Phase 2: atomically swap pending in, close the old units LAST
+        (the worker-local leg of build-before-teardown)."""
+        if self.pending is None:
+            raise RuntimeError(f"worker {self.worker}: commit without a "
+                               f"pending construct")
+        old, self.units, self.pending = self.units, self.pending, None
+        for u in self.units.values():
+            if self.degraded:    # swap must come up in the published mode
+                u.ps.set_degraded(True)
+            if prefetch_depth is not None:
+                u.ps.set_prefetch_depth(int(prefetch_depth))
+        for u in old.values():
+            u.ps.close()
+        return {"units": sorted(self.units)}
+
+    def do_abort_pending(self):
+        if self.pending is not None:
+            for u in self.pending.values():
+                u.ps.close()
+            self.pending = None
+        return {"aborted": True}
+
+    def do_sleep(self, seconds):
+        """Failure-injection aid: a synthetic straggler/hung worker (the
+        transport-timeout tests drive `WorkerDeadError` through it)."""
+        time.sleep(float(seconds))
+        return {"slept": float(seconds)}
+
+    def do_shutdown(self):
+        for u in self.units.values():
+            u.ps.close()
+        if self.pending is not None:
+            for u in self.pending.values():
+                u.ps.close()
+        self.units, self.pending = {}, None
+        return {"worker": self.worker, "stopped": True}
+
+    # -- data path ----------------------------------------------------------
+    def do_lookup(self, work, fused=False, combine="sum"):
+        """Serve this worker's slice of one batch.
+
+        `work`: per-unit dicts {unit_id, idx [b, t_u, L], weights|None,
+        valid|None}. Units run serially (each PS keeps its single-caller
+        contract). Replica units are timed — service seconds over served
+        rows feed the pool-side `ReplicaRouter`. Returns per-unit raw row
+        blocks ([b, t_u, L, D]) or fused pooled blocks ([b, t_u, D])."""
+        out = []
+        for item in work:
+            u = self.units[int(item["unit_id"])]
+            idx = item["idx"]
+            if item.get("valid") is not None:
+                u.ps.hint_valid(int(item["valid"]))
+            timed = u.chunk is not None
+            t0 = time.perf_counter() if timed else 0.0
+            if fused:
+                block = np.asarray(u.ps.lookup_fused(
+                    idx, item.get("weights"), combine=combine))
+            else:
+                block = u.ps.lookup(idx)
+            service = time.perf_counter() - t0 if timed else 0.0
+            out.append({"unit_id": u.unit_id, "block": block,
+                        "service_s": service,
+                        "served": int(idx.shape[0]) if timed else 0})
+        return {"results": out}
+
+    def do_stage(self, work):
+        ok = True
+        for item in work:
+            u = self.units[int(item["unit_id"])]
+            ok &= bool(u.ps.stage(item["idx"]))
+        return {"ok": ok}
+
+    def do_can_stage(self):
+        return {"ok": all(u.ps.can_stage() for u in self.units.values())}
+
+    # -- refresh ------------------------------------------------------------
+    def do_plan_refresh(self):
+        """Per-unit hot-set re-planning from each PS's own live window
+        (worker-side planning: the window never crosses the pipe)."""
+        return {"plans": {u.unit_id: u.ps.plan_refresh()
+                          for u in self.units.values()}}
+
+    def do_install_refresh(self, plans):
+        results = [u.ps.install_refresh(plans.get(uid))
+                   for uid, u in self.units.items()]
+        return {"replanned": any(r["replanned"] for r in results),
+                "refreshes": max((r["refreshes"] for r in results),
+                                 default=0)}
+
+    # -- degraded / tuning --------------------------------------------------
+    def do_set_degraded(self, on):
+        self.degraded = bool(on)
+        for u in self.units.values():
+            u.ps.set_degraded(on)
+        return {"degraded": self.degraded}
+
+    def do_set_prefetch_depth(self, depth):
+        for u in self.units.values():
+            u.ps.set_prefetch_depth(int(depth))
+        return {"depth": max((u.ps.prefetch.depth
+                              for u in self.units.values()), default=0)}
+
+    def do_prefetch_depth(self):
+        return {"depth": max((u.ps.prefetch.depth
+                              for u in self.units.values()), default=0)}
+
+    def do_take_window_peak(self):
+        return {"peak": max((u.ps.prefetch.take_window_peak()
+                             for u in self.units.values()), default=0)}
+
+    def do_retune(self, shares):
+        """Per-unit budget shares (pool-computed, by table count)."""
+        results = {}
+        for uid, share in shares.items():
+            u = self.units.get(int(uid))
+            if u is not None:
+                results[int(uid)] = u.ps.retune(int(share))
+        return {"results": results}
+
+    def do_flush(self):
+        for u in self.units.values():
+            u.ps.flush()
+        return {"flushed": True}
+
+    def do_flush_prefetch(self, unit_ids):
+        """Targeted staged-batch flush (a routing move invalidated these
+        units' staged slices; others keep theirs)."""
+        for uid in unit_ids:
+            u = self.units.get(int(uid))
+            if u is not None:
+                u.ps.prefetch.flush()
+        return {"flushed": sorted(int(u) for u in unit_ids)}
+
+    # -- stats --------------------------------------------------------------
+    def do_stats(self):
+        return {
+            "units": {u.unit_id: {"shard": u.shard, "stats": u.ps.stats()}
+                      for u in self.units.values()},
+            "host_tier_bytes": sum(u.host_bytes
+                                   for u in self.units.values()),
+            "private_tier_bytes": sum(u.private_bytes
+                                      for u in self.units.values()),
+        }
+
+    def do_reset_stats(self):
+        for u in self.units.values():
+            u.ps.reset_stats()
+        return {"reset": True}
+
+    def cleanup(self):
+        self.do_shutdown()
+        if self.segment is not None:
+            self.tables = None
+            try:
+                self.segment.close()
+            except BufferError:
+                pass                # a live view outlived us; exit anyway
+            self.segment = None
+
+
+def worker_main(worker: int, conn) -> None:
+    """Worker process entry: decode → dispatch → encode, until shutdown or
+    pipe loss (parent died). Never unlinks the shared table segment — the
+    pool created it and reclaims it."""
+    state = _WorkerState(worker)
+    try:
+        while True:
+            try:
+                seq, verb, payload = conn.recv()
+            except (EOFError, OSError):
+                break
+            try:
+                handler = getattr(state, f"do_{verb}", None)
+                if handler is None:
+                    raise ValueError(f"unknown verb {verb!r}")
+                kwargs = decode_payload(payload) or {}
+                result = handler(**kwargs)
+                status = "ok"
+            except BaseException as e:
+                status = "err"
+                result = {"type": type(e).__name__, "msg": str(e),
+                          "traceback": traceback.format_exc()}
+            segments: list = []
+            try:
+                conn.send((seq, status, encode_payload(result, segments)))
+            except (BrokenPipeError, OSError):
+                break
+            release_segments(segments)
+            if verb == "shutdown" and status == "ok":
+                break
+    finally:
+        state.cleanup()
+        try:
+            conn.close()
+        except OSError:
+            pass

@@ -139,6 +139,34 @@ def _chunk_bounds(batch: int, num_chunks: int, k: int) -> tuple[int, int]:
     return lo, lo + base + (1 if k < extra else 0)
 
 
+def resolve_placement(cfg, placement, num_shards: int,
+                      trace: Optional[np.ndarray]) -> ShardPlacement:
+    """Turn a `placement=` build argument ('contiguous' / 'balanced' / an
+    explicit `ShardPlacement` / None) into a validated `ShardPlacement`
+    for `cfg`'s table geometry — shared by the sharded and pool backends."""
+    row_bytes = cfg.dim * cfg.jnp_dtype.itemsize
+    if placement is None or placement == "contiguous":
+        from repro.storage.placement import estimate_table_loads
+        loads = (None if trace is None
+                 else estimate_table_loads(trace, row_bytes))
+        return ShardPlacement.contiguous(cfg.num_tables, num_shards,
+                                         loads=loads)
+    if placement == "balanced":
+        if trace is None:
+            raise ValueError("placement='balanced' needs a trace= to "
+                             "estimate per-table loads from (or pass a "
+                             "pre-planned ShardPlacement)")
+        return plan_shard_placement(trace, num_shards, row_bytes=row_bytes)
+    if isinstance(placement, ShardPlacement):
+        if placement.num_tables != cfg.num_tables:
+            raise ValueError(
+                f"placement plans {placement.num_tables} tables but the "
+                f"collection has {cfg.num_tables}")
+        return placement
+    raise ValueError(f"placement must be 'contiguous', 'balanced', or a "
+                     f"ShardPlacement, got {placement!r}")
+
+
 @dataclasses.dataclass
 class _Unit:
     """One ParameterServer worth of placement: a shard's non-replicated
@@ -212,29 +240,7 @@ class ShardedStorage(EmbeddingStorage):
     # -- construction -------------------------------------------------------
     def _resolve_placement(self, placement, num_shards: int,
                            trace: Optional[np.ndarray]) -> ShardPlacement:
-        cfg = self.cfg
-        row_bytes = cfg.dim * cfg.jnp_dtype.itemsize
-        if placement is None or placement == "contiguous":
-            from repro.storage.placement import estimate_table_loads
-            loads = (None if trace is None
-                     else estimate_table_loads(trace, row_bytes))
-            return ShardPlacement.contiguous(cfg.num_tables, num_shards,
-                                             loads=loads)
-        if placement == "balanced":
-            if trace is None:
-                raise ValueError("placement='balanced' needs a trace= to "
-                                 "estimate per-table loads from (or pass a "
-                                 "pre-planned ShardPlacement)")
-            return plan_shard_placement(trace, num_shards,
-                                        row_bytes=row_bytes)
-        if isinstance(placement, ShardPlacement):
-            if placement.num_tables != cfg.num_tables:
-                raise ValueError(
-                    f"placement plans {placement.num_tables} tables but the "
-                    f"collection has {cfg.num_tables}")
-            return placement
-        raise ValueError(f"placement must be 'contiguous', 'balanced', or a "
-                         f"ShardPlacement, got {placement!r}")
+        return resolve_placement(self.cfg, placement, num_shards, trace)
 
     def _construct_units(self, plc: ShardPlacement, tables: np.ndarray,
                          ps_cfg, trace: Optional[np.ndarray] = None,

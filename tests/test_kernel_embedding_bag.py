@@ -134,6 +134,7 @@ def test_ragged_ref_matches_dense_when_uniform():
 small = st.integers(min_value=1, max_value=16)
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(batch=small, pooling=small, seed=st.integers(0, 2**16))
 def test_prop_linearity_in_table(batch, pooling, seed):
@@ -151,6 +152,7 @@ def test_prop_linearity_in_table(batch, pooling, seed):
                                atol=1e-4)
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(seed=st.integers(0, 2**16), pooling=st.integers(2, 10))
 def test_prop_bag_order_invariance(seed, pooling):
@@ -171,6 +173,7 @@ def test_prop_bag_order_invariance(seed, pooling):
                                atol=1e-5)
 
 
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(seed=st.integers(0, 2**16), num_hot=st.integers(0, 64))
 def test_prop_hot_split_invariance(seed, num_hot):

@@ -171,6 +171,7 @@ def test_fused_bag_sizes(pooling):
         assert jnp.array_equal(res.pooled, ref)
 
 
+@pytest.mark.slow
 def test_fused_batch_padding_exact():
     """B % batch_block != 0: PAD dummy bags contribute nothing and emit
     nothing, and the sliced output is bit-exact."""
@@ -287,6 +288,7 @@ def test_complete_miss_bags_no_misses_is_identity():
        hit_pct=st.sampled_from([0, 30, 50, 80, 100]),
        mode=st.sampled_from(["sum", "mean"]),
        weighted=st.booleans(), seed=st.integers(0, 2**16))
+@pytest.mark.slow
 def test_prop_fused_bit_exact(batch, pooling, dim, hit_pct, mode, weighted,
                               seed):
     table, cache, hot, slots, idx = _world(32, dim, batch, pooling,
@@ -302,6 +304,7 @@ def test_prop_fused_bit_exact(batch, pooling, dim, hit_pct, mode, weighted,
 @settings(max_examples=15, deadline=None)
 @given(seed=st.integers(0, 2**16), hit_pct=st.sampled_from([0, 40, 100]),
        num_hot=st.sampled_from([0, 4, 16]))
+@pytest.mark.slow
 def test_prop_round_trip(seed, hit_pct, num_hot):
     table, cache, hot, slots, idx = _world(48, 12, 6, 4,
                                            hit_rate=hit_pct / 100,
@@ -317,6 +320,7 @@ def test_prop_round_trip(seed, hit_pct, num_hot):
 @settings(max_examples=15, deadline=None)
 @given(seed=st.integers(0, 2**16), bb=st.sampled_from([2, 4, 8]),
        distance=st.sampled_from([1, 3, 8]))
+@pytest.mark.slow
 def test_prop_pipeline_config_invariance(seed, bb, distance):
     """batch_block / prefetch_distance are pure performance knobs: any
     config produces the same bits and the same miss-list."""

@@ -17,10 +17,15 @@ Compares a fresh `benchmarks/run.py --json` output against the checked-in
       its keep under a flash crowd (SLO-on windowed p99 recovers to the
       target after the spike while SLO-off's does not; the shed fraction
       stays bounded; the armed-but-unloaded steady leg sheds nothing),
-      and in the `embedding_stage` sweep the fused warm-cache lookup
+      in the `embedding_stage` sweep the fused warm-cache lookup
       must be no slower per row than the per-row tier path on the
       warm-hit leg (the leg the fusion exists for) and must lower
-      memory-dominant — all compared WITHIN the fresh run, so host
+      memory-dominant, and in the `sharded_pool` sweep every leg must
+      stay bit-exact, the shared host cold tier must stay ONE resident
+      table copy however many worker processes map it (flat — not
+      linear — in worker count), and both backends' migrations must
+      follow the moving hot set (each swap lands below the imbalance it
+      started from) — all compared WITHIN the fresh run, so host
       speed never flakes them.
   warnings (exit 0)      — numeric drift: timing metrics (units us/ms/s)
       outside a generous x`--timing-factor` band, other numerics (hit
@@ -30,9 +35,9 @@ Compares a fresh `benchmarks/run.py --json` output against the checked-in
 
 New records absent from the baseline are reported as info — refresh the
 baseline (`benchmarks/run.py --sweep storage_backends --sweep
-sharded_balance --sweep sharded_migration --sweep embedding_stage
---sweep slo_overload --json benchmarks/baseline.json`) when adding
-sweeps.
+sharded_balance --sweep sharded_migration --sweep sharded_pool
+--sweep embedding_stage --sweep slo_overload --json
+benchmarks/baseline.json`) when adding sweeps.
 
 Stdlib only (runs before `pip install` in CI if need be).
 """
@@ -193,6 +198,55 @@ def compare(base: dict, new: dict, timing_factor: float,
                       f"{dominant!r}-dominant, expected 'memory' — the "
                       f"lookup stopped being a bandwidth problem, which "
                       f"means it stopped being an embedding gather")
+
+    # semantic invariants: the process pool must serve bit-exactly on
+    # every leg, keep ONE resident host copy of the cold tables however
+    # many worker processes map them, and migrate after the hot set on
+    # both backends — within the fresh run, so host speed never flakes
+    # them
+    for (sweep, name, metric), v in sorted(new.items()):
+        if sweep == "sharded_pool" and metric == "bit_exact" and v is not True:
+            errors.append(f"sharded_pool: {name} bit_exact={v!r} — the "
+                          f"RPC scatter/gather diverged from the dense "
+                          f"reference")
+
+    def pool_ht(records, workers, metric):
+        return records.get(("sharded_pool",
+                            f"sharded_pool/host_tier/workers{workers}",
+                            metric))
+    r1 = pool_ht(new, 1, "resident_cold_bytes")
+    r4 = pool_ht(new, 4, "resident_cold_bytes")
+    if r1 is not None and r4 is not None and not r4 < 2 * r1:
+        errors.append(f"sharded_pool: resident cold bytes grew from "
+                      f"{r1:g} at 1 worker to {r4:g} at 4 — the shared "
+                      f"host tier stopped deduplicating (each worker is "
+                      f"carrying a private copy)")
+    v1 = pool_ht(new, 1, "host_view_bytes")
+    v4 = pool_ht(new, 4, "host_view_bytes")
+    if v1 is not None and v4 is not None and not v4 > v1:
+        errors.append(f"sharded_pool: mapped view bytes {v4:g} at 4 "
+                      f"workers not above {v1:g} at 1 — the replicated "
+                      f"tables are no longer being served by extra "
+                      f"workers, the dedup claim is vacuous")
+
+    def pool_shift(records, backend, metric):
+        return records.get(("sharded_pool",
+                            f"sharded_pool/shift_{backend}", metric))
+    for backend in ("sharded", "pool"):
+        for phase in ("a", "b"):
+            mig = pool_shift(new, backend, f"migrated_{phase}")
+            ib = pool_shift(new, backend, f"imb_{phase}_before")
+            ia = pool_shift(new, backend, f"imb_{phase}_after")
+            if mig is not None and mig is not True:
+                errors.append(f"sharded_pool: shift_{backend} phase "
+                              f"{phase.upper()} did not migrate — the "
+                              f"{backend} backend stopped following the "
+                              f"moving hot set")
+            elif ib is not None and ia is not None and not ia < ib:
+                errors.append(f"sharded_pool: shift_{backend} phase "
+                              f"{phase.upper()} migration left imbalance "
+                              f"{ia:g} not below {ib:g} — the swap no "
+                              f"longer rebalances")
     return errors, warnings
 
 
