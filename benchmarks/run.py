@@ -1034,13 +1034,20 @@ def slo_overload():
     that SLO-on recovers its windowed p99 to the target after the spike
     while SLO-off does not, that the spike's shed fraction stays bounded,
     and that the steady leg sheds nothing.
+
+    A second leg pair (`bigbatch_off/on`) exercises the ladder's
+    batch-shrink rung on the failure mode it exists for: a latency-bound
+    misconfiguration (oversized batching window, load deep in capacity)
+    where shedding would be the wrong fix — the armed controller must
+    shrink the batch quantum until the windowed p99 fits the target,
+    while the unarmed leg keeps breaching.
     """
     from repro.ps import PSConfig
     from repro.serving import BatcherConfig, ServingSession, SLOConfig
     from repro.traffic import VirtualClock, make_traffic, replay
     rows, dim, batch, pool, t_count = 2000, 16, 32, 10, 4
 
-    def mk_session(slo):
+    def mk_session(slo, batcher=None):
         cfg = DLRMConfig(embedding=EmbeddingStageConfig(
             num_tables=t_count, rows=rows, dim=dim, pooling=pool,
             backend="xla", storage="tiered"),
@@ -1058,7 +1065,8 @@ def slo_overload():
             trace=trace)
         return ServingSession(
             model, params,
-            batcher=BatcherConfig(max_batch=batch, max_wait_s=0.002),
+            batcher=batcher or BatcherConfig(max_batch=batch,
+                                             max_wait_s=0.002),
             slo=slo, clock=VirtualClock())
 
     # calibrate: real batch service time -> offered load in service-rate
@@ -1085,7 +1093,8 @@ def slo_overload():
 
     def leg(kind, slo_on, n, qps):
         slo = (SLOConfig(target_p99_ms=target_ms, shed_deadline_frac=0.4,
-                         window_queries=256) if slo_on else None)
+                         window_queries=256)
+               if slo_on else None)
         sess = mk_session(slo)
         gen = make_traffic(kind, base_qps=qps, spike_qps=spike_qps,
                            spike_start_s=spike_start, spike_len_s=spike_len,
@@ -1106,8 +1115,166 @@ def slo_overload():
                 f"shed_frac={rep.shed_frac:.3f} answered={rep.served}")
         if on:
             line += (f" breaches={pct.get('slo_breaches', 0)} "
-                     f"degraded_batches={pct.get('slo_degraded_batches', 0)}")
+                     f"degraded_batches={pct.get('slo_degraded_batches', 0)} "
+                     f"shrinks={pct.get('slo_batch_shrinks', 0)}")
         emit(f"slo_overload/{name}", "", line)
+
+    # batch-shrink rung: a LATENCY-bound misconfiguration (the batching
+    # window itself blows the target — offered load is deep in capacity,
+    # so shedding/degrading would be the wrong fix). The shrink rung
+    # halves max_batch (scaling the window) until the formation wait fits
+    # under the target; shedding is disarmed (shed_deadline_frac=0) so
+    # the rung is the only mechanism in play, and recover_frac is set low
+    # enough that the controller holds the shrunken quantum instead of
+    # regrowing back into the breach.
+    big_wait_s = 8.0 * t_b
+    big_target_ms = 5.0 * t_b * 1e3
+    big_qps = 0.125 * svc_qps          # fill time for a full batch ~ window
+    n_big = 24 * batch
+    for name, slo in (
+            ("bigbatch_off", None),
+            ("bigbatch_on", SLOConfig(
+                target_p99_ms=big_target_ms, window_queries=64,
+                check_every_batches=2, recover_frac=0.2, degrade=False,
+                shed_deadline_frac=0.0, min_batch=batch // 4))):
+        sess = mk_session(slo, batcher=BatcherConfig(max_batch=batch,
+                                                     max_wait_s=big_wait_s))
+        gen = make_traffic("steady", base_qps=big_qps, num_tables=t_count,
+                           rows=rows, pooling=pool, seed=seeded(2))
+        rep = replay(sess, gen.queries(n_big), window_queries=64)
+        pct = rep.percentiles
+        sess.close()
+        post_p99 = rep.final_windowed_p99_ms() or 0.0
+        line = (f"post_p99_ms={post_p99:.2f} target_ms={big_target_ms:.2f} "
+                f"shed_frac={rep.shed_frac:.3f} answered={rep.served}")
+        if slo is not None:
+            line += (f" breaches={pct.get('slo_breaches', 0)} "
+                     f"degraded_batches={pct.get('slo_degraded_batches', 0)} "
+                     f"shrinks={pct.get('slo_batch_shrinks', 0)}")
+        emit(f"slo_overload/{name}", "", line)
+
+
+def multi_tenant():
+    """Multi-tenant serving: two tenants over ONE shared sharded backend.
+
+    A steady tenant and a flash-crowd neighbor replay through one
+    `TenantManager` on a virtual clock, twice: fair scheduling with the
+    fair-share arbiter ON vs fifo scheduling with it OFF. All time
+    quantities are multiples of the MEASURED shared batch service time
+    `t_b` (and the query counts are fixed multiples of the batch size),
+    so the legs are host-independent. `tools/check_bench.py` enforces,
+    within the fresh run: containment (with the arbiter the flash crowd
+    may not push the steady tenant's p99 past the SLO bound; without it,
+    it must — else the comparison is vacuous), per-tenant bit-exactness
+    vs a fresh device-storage reference, and arbiter budget conservation
+    (every round's split sums to <= the one shared budget).
+    """
+    from repro.ps import PSConfig
+    from repro.serving import (ArbiterConfig, BatcherConfig, TenantManager,
+                               TenantSpec, configure)
+    from repro.traffic import VirtualClock, make_traffic, replay_tenants
+    rows, dim, batch, t_count = 1000, 16, 16, 3
+    poolings = {"steady": 4, "flash": 4}
+
+    def specs():
+        out = []
+        for i, name in enumerate(("steady", "flash")):
+            cfg = DLRMConfig(embedding=EmbeddingStageConfig(
+                num_tables=t_count, rows=rows, dim=dim,
+                pooling=poolings[name], backend="xla", storage="device"),
+                bottom_mlp=(32, dim), top_mlp=(16, 1))
+            model = DLRM(cfg)
+            out.append((TenantSpec(
+                name=name, model=model,
+                params=model.init(jax.random.PRNGKey(seeded(i)))), cfg))
+        return out
+
+    def mk_manager(scheduling, arbiter, max_wait_s):
+        built = specs()
+        mgr = TenantManager(
+            [s for s, _ in built], backend="sharded",
+            batcher=BatcherConfig(max_batch=batch, max_wait_s=max_wait_s),
+            controllers=configure(
+                arbiter=(ArbiterConfig(every_batches=8,
+                                       budget_fallback_bytes=32 << 20)
+                         if arbiter else None)),
+            scheduling=scheduling, clock=VirtualClock(),
+            num_shards=2,
+            ps_cfg=PSConfig(hot_rows=rows // 10, warm_slots=rows // 10,
+                            prefetch_depth=2, window_batches=8))
+        return mgr, built
+
+    # calibrate the shared batch service time once (probe, not traffic)
+    mgr, _ = mk_manager("fair", False, 0.002)
+    sess = mgr.session("steady")
+    dense = np.zeros((batch, 13), np.float32)
+    idx = np.zeros((batch, t_count, poolings["steady"]), np.int32)
+    t0 = time.perf_counter()
+    for _ in range(5):
+        np.asarray(sess._forward(dense, idx))
+    t_b = (time.perf_counter() - t0) / 5
+    mgr.close()
+    svc_qps = batch / t_b
+    # the containment bound sits at the log-midpoint of the two regimes:
+    # fair+arbiter keeps the steady tenant's p99 around ~10 t_b (batching
+    # window + a few interleaved service quanta), fifo queues it behind
+    # the whole flash backlog (~100 t_b) — 30 t_b separates them with
+    # comfortable margin on both sides on any host
+    target_ms = 30.0 * t_b * 1e3
+    base_qps = 0.25 * svc_qps                 # per tenant: 0.5x combined
+    spike_start, spike_len, post = 8.0 * t_b, 12.0 * t_b, 16.0 * t_b
+    n_steady = int(base_qps * (spike_start + spike_len + post))
+    n_flash = int(base_qps * (spike_start + post)
+                  + 4.0 * svc_qps * spike_len)
+
+    def leg(name, scheduling, arbiter):
+        mgr, built = mk_manager(scheduling, arbiter, max_wait_s=2.0 * t_b)
+        try:
+            streams = {
+                "steady": make_traffic(
+                    "steady", base_qps=base_qps, num_tables=t_count,
+                    rows=rows, pooling=poolings["steady"],
+                    seed=seeded(2)).queries(n_steady),
+                "flash": make_traffic(
+                    "flash", base_qps=base_qps, spike_qps=4.0 * svc_qps,
+                    spike_start_s=spike_start, spike_len_s=spike_len,
+                    num_tables=t_count, rows=rows,
+                    pooling=poolings["flash"],
+                    seed=seeded(3)).queries(n_flash),
+            }
+            reports = replay_tenants(mgr, streams, window_queries=64)
+            pct = mgr.percentiles()
+            rng = np.random.default_rng(seeded(4))
+            for (spec, cfg), rep_name in zip(built, ("steady", "flash")):
+                rep, tp = reports[rep_name], pct["tenants"][rep_name]
+                # bit-exactness probe: tenant forward vs a fresh
+                # device-storage model on the same params
+                d = rng.normal(size=(8, cfg.dense_features)).astype(
+                    np.float32)
+                i = rng.integers(0, rows, size=(
+                    8, t_count, poolings[rep_name])).astype(np.int32)
+                got = np.asarray(spec.model.forward(spec.params, d, i))
+                ref = np.asarray(DLRM(cfg).forward(
+                    jax.tree_util.tree_map(np.asarray, spec.params), d, i))
+                emit(f"multi_tenant/{name}/{rep_name}", "",
+                     f"p99_ms={tp['p99_ms']:.2f} target_ms={target_ms:.2f} "
+                     f"answered={rep.served} shed_frac={rep.shed_frac:.3f} "
+                     f"bit_exact={np.array_equal(got, ref)}")
+            st = mgr.stats()
+            line = (f"num_tenants={st['shared']['num_tenants']} "
+                    f"device_bytes={st['shared']['device_bytes']}")
+            if mgr.arbiter is not None:
+                conserved = all(
+                    sum(ev["budgets"].values()) <= ev["budget_bytes"]
+                    for ev in mgr.arbiter.events)
+                line += (f" arbiter_rounds={len(mgr.arbiter.events)} "
+                         f"conserved={conserved}")
+            emit(f"multi_tenant/{name}/shared", "", line)
+        finally:
+            mgr.close()
+
+    leg("fair_arbiter", "fair", True)
+    leg("fifo_static", "fifo", False)
 
 
 ALL = [tab3_unique_access, fig5_coverage, fig1_embedding_contribution,
@@ -1116,7 +1283,8 @@ ALL = [tab3_unique_access, fig5_coverage, fig1_embedding_contribution,
        fig14_gap, fig15_buffer_schemes, fig16_no_optmt, fig17_heterogeneous,
        tab45_microarch, tiered_ps_capacity_sweep, tiered_ps_sync_vs_async,
        tiered_ps_autotune, storage_backends, sharded_balance,
-       sharded_migration, sharded_pool, embedding_stage, slo_overload]
+       sharded_migration, sharded_pool, embedding_stage, slo_overload,
+       multi_tenant]
 
 
 def main(argv: list[str] | None = None) -> None:

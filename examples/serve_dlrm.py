@@ -10,11 +10,16 @@ hot/warm/cold parameter server — beyond-HBM serving), or `sharded`
 (table-wise partition of the tiered store across `--shards` workers, one
 merged stats report). The `ServingSession` facade owns batcher + engine +
 storage and drives prefetch/refresh generically through the protocol, so
-the cache/overlap columns appear for any async-capable backend. `--legacy`
-exercises the deprecated PR-2 shim path (`build_parameter_server` +
-`InferenceServer(ps=...)`) instead — same traffic, same numbers, one
-DeprecationWarning. See docs/serving.md for the operator guide and the
-old→new migration table.
+the cache/overlap columns appear for any async-capable backend. (The PR-2
+shim path — `build_parameter_server` + `InferenceServer(ps=...)` — is
+gone; see the docs/serving.md migration table for the replacements.)
+
+`--tenants N` switches to multi-tenant serving: N independent DLRMs
+bound to ONE shared sharded/pool backend through a `TenantManager`, each
+with its own stats namespace and SLO controller, a fair-share arbiter
+re-splitting device budget and prefetch depth from live per-tenant load.
+Per-tenant traffic replays through `replay_tenants` on one virtual
+clock, so tenants contend for real serving time.
 
 `--trace` switches to timestamped-trace replay (repro.traffic): queries
 arrive on a virtual clock following a named rate profile (steady Zipf,
@@ -32,7 +37,7 @@ docs/serving.md "Serving under overload").
     PYTHONPATH=src python examples/serve_dlrm.py --storage pool --workers 2
     PYTHONPATH=src python examples/serve_dlrm.py --storage tiered --async \
         --auto-budget-kib 4096 --warm-backing device
-    PYTHONPATH=src python examples/serve_dlrm.py --storage tiered --legacy
+    PYTHONPATH=src python examples/serve_dlrm.py --tenants 2
     PYTHONPATH=src python examples/serve_dlrm.py --storage tiered \
         --trace flash --slo-p99-ms 20
 """
@@ -48,8 +53,7 @@ from repro.core import EmbeddingStageConfig
 from repro.data import DLRMQueryStream
 from repro.models.dlrm import DLRM, DLRMConfig
 from repro.ps import AutoTuneConfig, PSConfig
-from repro.serving import (BatcherConfig, InferenceServer, Query,
-                           ServingSession)
+from repro.serving import BatcherConfig, ServingSession
 
 HOTNESS = ("one_item", "high_hot", "med_hot", "low_hot", "random")
 
@@ -108,9 +112,10 @@ def parse_args():
                          "device budget (overrides --hot-rows/--warm-slots)")
     ap.add_argument("--hotness", choices=HOTNESS + ("all",), default="all",
                     help="run one hotness level (CI smoke) or the sweep")
-    ap.add_argument("--legacy", action="store_true",
-                    help="drive the deprecated build_parameter_server + "
-                         "InferenceServer(ps=...) shim path")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="serve N tenant DLRMs over ONE shared "
+                         "sharded/pool backend (TenantManager + fair-share "
+                         "arbiter; 0 = single-tenant modes)")
     ap.add_argument("--trace", choices=("steady", "diurnal", "flash",
                                         "shift"), default=None,
                     help="replay a timestamped trace on a virtual clock "
@@ -309,74 +314,121 @@ def run_trace(args) -> None:
     print(line, flush=True)
 
 
-def run_legacy(args, hotness) -> tuple[dict, int, float]:
-    """The deprecated PR-2 wiring, kept exercising the shims: manual
-    warmup, build_parameter_server(), InferenceServer(ps=...)."""
-    cfg = DLRMConfig(embedding=EmbeddingStageConfig(
-        num_tables=args.tables, rows=args.rows, dim=128,
-        pooling=args.pooling, storage=args.storage))
-    model = DLRM(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    stream = DLRMQueryStream(num_tables=args.tables, rows=args.rows,
-                             pooling=args.pooling, batch_size=args.batch,
-                             hotness=hotness, seed=0)
-    ps = model.ebc.build_parameter_server(
-        params,
-        PSConfig(hot_rows=args.hot_rows, warm_slots=args.warm_slots,
-                 prefetch_depth=2, window_batches=16,
-                 async_prefetch=args.async_mode,
-                 warm_backing=args.warm_backing),
-        trace=stream.sample_trace(2))
-    rest = jax.jit(lambda d, p: model.forward_from_pooled(params, d, p))
+def run_tenants(args) -> None:
+    """Multi-tenant serving: N DLRM tenants over ONE shared backend.
 
-    def fwd(dense, idx):
-        pooled = model.ebc.apply(params, idx)   # host PS + device pool
-        return rest(jnp.asarray(dense), pooled)
-
-    wd = np.zeros((args.batch, cfg.dense_features), np.float32)
-    wi = np.zeros((args.batch, args.tables, args.pooling), np.int32)
-    jax.block_until_ready(fwd(wd, wi))
-    ps.flush()          # warmup batch is not traffic
-    ps.reset_stats()
-    srv = InferenceServer(fwd, BatcherConfig(max_batch=args.batch,
-                                             max_wait_s=0.0), sla_ms=500,
-                          ps=ps, refresh_every_batches=args.refresh_every,
-                          async_refresh=args.async_mode)
-    submitted = 0
-    while submitted < args.queries:
-        b = stream.next_batch()
-        for i in range(args.batch):
-            srv.submit(Query(qid=submitted + i, dense=b.dense[i],
-                             indices=b.indices[i]))
-        submitted += args.batch
-        if submitted > args.batch:
-            srv.poll()
-    srv.drain()
-    srv.close()         # install any in-flight async refresh
-    pct, viol = srv.stats.percentiles(), srv.sla_violations()
-    ps.close()
-    return pct, viol, 0.0
+    Each tenant gets its own traffic stream; `replay_tenants` merges them
+    on one virtual clock through the manager's fair scheduler, the arbiter
+    re-splits device budget + prefetch depth from live per-tenant load.
+    Prints one line per tenant and the shared-backend summary."""
+    from repro.serving import (ArbiterConfig, SLOConfig, TenantManager,
+                               TenantSpec, configure)
+    from repro.traffic import VirtualClock, make_traffic, replay_tenants
+    backend = args.storage
+    if backend not in ("sharded", "pool"):
+        print(f"tenants share one storage backend; storage={backend!r} "
+              "is single-tenant — using 'sharded'", flush=True)
+        backend = "sharded"
+    specs, tenant_cfg = [], {}
+    for t in range(args.tenants):
+        # same rows/dim (shared-axis geometry), per-tenant pooling/tables
+        pooling = max(2, args.pooling - 2 * t)
+        cfg = DLRMConfig(embedding=EmbeddingStageConfig(
+            num_tables=args.tables, rows=args.rows, dim=128,
+            pooling=pooling, storage="device"))
+        model = DLRM(cfg)
+        specs.append(TenantSpec(name=f"t{t}", model=model,
+                                params=model.init(jax.random.PRNGKey(t))))
+        tenant_cfg[f"t{t}"] = cfg
+    build_kw = dict(
+        ps_cfg=PSConfig(hot_rows=args.hot_rows, warm_slots=args.warm_slots,
+                        prefetch_depth=2, window_batches=16,
+                        async_prefetch=args.async_mode,
+                        warm_backing=args.warm_backing),
+        num_shards=args.shards)
+    if backend == "pool":
+        build_kw["num_workers"] = args.workers
+    mgr = TenantManager(
+        specs, backend=backend,
+        batcher=BatcherConfig(max_batch=args.batch, max_wait_s=0.002),
+        sla_ms=500, refresh_every_batches=args.refresh_every,
+        controllers=configure(
+            slo=(SLOConfig(target_p99_ms=args.slo_p99_ms,
+                           min_batch=max(2, args.batch // 8))
+                 if args.slo_p99_ms else None),
+            arbiter=ArbiterConfig(every_batches=8,
+                                  budget_fallback_bytes=64 << 20)),
+        scheduling="fair", clock=VirtualClock(), **build_kw)
+    try:
+        # calibrate offered load to the measured shared service rate
+        first = mgr.session(mgr.names[0])
+        dense = np.zeros((args.batch, tenant_cfg["t0"].dense_features),
+                         np.float32)
+        idx = np.zeros((args.batch, args.tables,
+                        tenant_cfg["t0"].embedding.pooling), np.int32)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            np.asarray(first._forward(dense, idx))
+        t_b = (time.perf_counter() - t0) / 3
+        first.storage.reset_stats()   # probe batches are not traffic
+        svc_qps = args.batch / t_b
+        per_tenant = (args.base_qps or 0.5 * svc_qps) / args.tenants
+        streams = {}
+        for t, spec in enumerate(specs):
+            cfg = tenant_cfg[spec.name]
+            streams[spec.name] = make_traffic(
+                "steady", base_qps=per_tenant,
+                dense_features=cfg.dense_features,
+                num_tables=args.tables, rows=args.rows,
+                pooling=cfg.embedding.pooling,
+                seed=t).queries(args.queries // args.tenants)
+        reports = replay_tenants(mgr, streams)
+        pct = mgr.percentiles()
+        print(f"tenants={args.tenants} backend={backend} "
+              f"per_tenant_qps={per_tenant:.0f} "
+              f"({args.tenants * per_tenant / svc_qps:.2f}x service rate)")
+        for name in mgr.names:
+            rep, tp = reports[name], pct["tenants"][name]
+            print(f"  {name}: submitted={rep.submitted} "
+                  f"served={rep.served} shed={rep.shed} "
+                  f"p50={tp['p50_ms']:.1f}ms p99={tp['p99_ms']:.1f}ms",
+                  flush=True)
+        shared = pct["shared"]
+        total = sum(pct["tenants"][n]["served"] for n in mgr.names)
+        line = (f"shared: served={total} "
+                f"tenants={shared['num_tenants']}")
+        st = mgr.stats()
+        line += f" device_bytes={st['shared']['device_bytes']}"
+        if mgr.arbiter is not None and mgr.arbiter.last_shares:
+            shares = " ".join(f"{n}={s:.2f}"
+                              for n, s in mgr.arbiter.last_shares.items())
+            line += (f" arbiter_rounds={len(mgr.arbiter.events)} "
+                     f"shares[{shares}]")
+        print(line, flush=True)
+        print_worker_status(mgr.shared)
+    finally:
+        mgr.close()
 
 
 def main():
     args = parse_args()
-    if args.legacy and args.storage != "tiered":
-        raise SystemExit("--legacy exercises the tiered "
-                         "build_parameter_server shim; use "
-                         "--storage tiered")
-    if args.slo_p99_ms and not args.trace:
-        raise SystemExit("--slo-p99-ms needs --trace: the SLO controller "
-                         "watches windowed p99 over a timestamped replay")
+    if args.slo_p99_ms and not (args.trace or args.tenants):
+        raise SystemExit("--slo-p99-ms needs --trace or --tenants: the SLO "
+                         "controller watches windowed p99 over a "
+                         "timestamped replay")
+    if args.tenants:
+        if args.trace:
+            raise SystemExit("--tenants replays per-tenant steady streams; "
+                             "drop --trace (the multi_tenant bench sweep "
+                             "covers mixed profiles)")
+        run_tenants(args)
+        return
     if args.trace:
-        if args.legacy:
-            raise SystemExit("--trace replays through ServingSession; "
-                             "drop --legacy")
         run_trace(args)
         return
     levels = HOTNESS if args.hotness == "all" else (args.hotness,)
     for hotness in levels:
-        pct, viol, emb_share = (run_legacy(args, hotness) if args.legacy
-                                else run_session(args, hotness))
+        pct, viol, emb_share = run_session(args, hotness)
         line = (f"{hotness:9s} served={pct['served']:4d} "
                 f"p50={pct['p50_ms']:.1f}ms p99={pct['p99_ms']:.1f}ms "
                 f"batch={pct['mean_batch_ms']:.1f}ms "

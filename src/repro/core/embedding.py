@@ -24,7 +24,6 @@ exercised in launch/steps.py as the optimized path).
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Optional
 
 import jax
@@ -98,26 +97,18 @@ class EmbeddingBagCollection:
     `self.storage` is the bound `repro.storage.EmbeddingStorage` backend
     (created from `cfg.storage` via the registry); host-backed backends are
     materialized with `ebc.storage.build(params, ...)` before the first
-    `apply()`. The legacy `build_parameter_server(...)` / `ps=` surface
-    keeps working as a deprecation shim over the tiered backend.
+    `apply()`. (The PR 1–2 `build_parameter_server(...)` / `ps=` shims are
+    gone — see the docs/serving.md migration table for the replacements.)
     """
 
     def __init__(self, cfg: EmbeddingStageConfig,
-                 plans: Optional[list[hot_cache.HotPlan]] = None,
-                 ps=None):
+                 plans: Optional[list[hot_cache.HotPlan]] = None):
         self.cfg = cfg
         # Resolve the backend FIRST: unknown names and invalid
         # storage/pinned_rows combinations fail before any plan/remap
         # allocation happens. Lazy import: storage imports core.embedding.
         from repro import storage as storage_registry
         self.storage = storage_registry.create(cfg.storage, self)
-        if ps is not None:
-            warnings.warn(
-                "EmbeddingBagCollection(ps=...) is deprecated; build the "
-                "backend instead: ebc.storage.build(params, ps_cfg) "
-                "(see docs/serving.md migration table)",
-                DeprecationWarning, stacklevel=2)
-            self._attach_ps(ps)
         # One plan per table; identity when pinning is off.
         if plans is None:
             plans = [hot_cache.identity_plan(cfg.rows, cfg.pinned_rows)
@@ -128,48 +119,6 @@ class EmbeddingBagCollection:
         self._remap = (
             np.stack([p.inv_perm for p in plans]).astype(np.int32)
             if cfg.pinned_rows > 0 else None)
-
-    # -- legacy parameter-server surface (deprecation shims) ----------------
-    def _attach_ps(self, ps) -> None:
-        if not hasattr(self.storage, "ps"):
-            raise TypeError(
-                f"storage backend {self.cfg.storage!r} does not wrap a "
-                f"ParameterServer; use storage='tiered'")
-        self.storage.ps = ps
-
-    @property
-    def ps(self):
-        """The wrapped `ParameterServer` (tiered backend), or None."""
-        return getattr(self.storage, "ps", None)
-
-    @ps.setter
-    def ps(self, value) -> None:
-        self._attach_ps(value)
-
-    def build_parameter_server(self, params: dict, ps_cfg=None,
-                               trace: Optional[np.ndarray] = None, *,
-                               device_budget_bytes: Optional[int] = None,
-                               **ps_cfg_overrides):
-        """DEPRECATED shim — use `ebc.storage.build(params, ...)`.
-
-        Kept so PR 1–2 call sites keep working unchanged: moves the
-        initialized tables into a tiered ParameterServer (explicit
-        `ps_cfg`, or trace + `device_budget_bytes` auto-tuning) and
-        returns the server. Emits a single DeprecationWarning."""
-        warnings.warn(
-            "EmbeddingBagCollection.build_parameter_server() is "
-            "deprecated; use ebc.storage.build(params, ps_cfg, trace=...) "
-            "and the ServingSession facade (see docs/serving.md migration "
-            "table)", DeprecationWarning, stacklevel=2)
-        if not hasattr(self.storage, "build") or not hasattr(self.storage,
-                                                             "ps"):
-            raise TypeError(
-                f"storage backend {self.cfg.storage!r} has no parameter "
-                f"server to build; use storage='tiered'")
-        self.storage.build(params, ps_cfg, trace,
-                           device_budget_bytes=device_budget_bytes,
-                           **ps_cfg_overrides)
-        return self.storage.ps
 
     # -- params -------------------------------------------------------------
     def init(self, rng: jax.Array) -> dict:

@@ -216,9 +216,14 @@ class PrefetchQueue(_PrefetchBase):
         self.queue.clear()
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class _Job:
-    """One double-buffer slot; see the module docstring for ownership."""
+    """One double-buffer slot; see the module docstring for ownership.
+
+    `eq=False`: jobs are identity objects. A generated `__eq__` would compare
+    `StagedBatch` ndarray fields, and `deque.remove()` in `consume()` then
+    broadcasts differently-shaped queued batches against each other (e.g.
+    after the SLO ladder shrinks the batch size mid-stream)."""
     batch: StagedBatch
     ready: threading.Event = dataclasses.field(
         default_factory=threading.Event)

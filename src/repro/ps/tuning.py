@@ -42,6 +42,19 @@ inert):
 `ServingSession(auto_tune=AutoTuneConfig(...))` drives all four; see
 docs/serving.md for the operator guide (what the signals mean, how to pin
 a depth manually).
+
+Under multi-tenant serving one more controller sits ABOVE the per-tenant
+sessions: the `BudgetArbiter` (driven by `serving.TenantManager`). It
+generalizes the capacity leg across tenants sharing ONE backend: every
+`every_batches` executed batches it turns each tenant's live access-count
+delta into a demand share (floored at `min_share` so an idle tenant is
+never starved to zero, then normalized so the shares sum to one), splits
+the live device-budget estimate by those shares, and retunes each
+tenant's hot/warm capacities — so Σ tenant budgets never exceeds the one
+shared budget. Optionally it also re-splits prefetch depth by the same
+shares, skipping tenants whose SLO controller is currently engaged (the
+breach handler owns that knob during a breach, exactly like
+`depth_suspended` above).
 """
 from __future__ import annotations
 
@@ -266,3 +279,129 @@ class AutoTuner:
             out["routing_updates"] = sum(e["kind"] == "routing"
                                          for e in self.events)
         return out
+
+@dataclasses.dataclass(frozen=True)
+class ArbiterConfig:
+    """How the multi-tenant `BudgetArbiter` re-splits shared resources.
+
+    `every_batches` counts EXECUTED batches across all tenants (the
+    manager steps the arbiter once per executed batch, whichever tenant
+    it belonged to), so a busy tenant naturally triggers re-arbitration
+    sooner. 0 disables the arbiter entirely.
+    """
+
+    # re-arbitrate every N executed batches across all tenants (0 = off)
+    every_batches: int = 16
+    # fraction of the estimated free device bytes split across tenants
+    budget_fraction: float = 0.5
+    # static fallback when the runtime exposes no memory stats; None
+    # skips arbitration in that case (CPU backends should set this)
+    budget_fallback_bytes: Optional[int] = None
+    # demand-share floor: even a fully idle tenant keeps this fraction of
+    # the budget, so a flash-crowd neighbor can squeeze but never starve
+    # it (shares are re-normalized to sum to 1 after flooring)
+    min_share: float = 0.1
+    # also re-split prefetch depth by the same shares (SLO-engaged
+    # tenants are skipped: their breach handler owns the depth knob)
+    retune_depth: bool = True
+    depth_min: int = 1
+    depth_max: int = 8
+
+    def __post_init__(self):
+        if not (0.0 <= self.min_share <= 1.0):
+            raise ValueError("need 0 <= min_share <= 1")
+        if not (1 <= self.depth_min <= self.depth_max):
+            raise ValueError("need 1 <= depth_min <= depth_max")
+
+
+class BudgetArbiter:
+    """Fair-share controller over N tenant views of one shared backend.
+
+    Holds one access-counter snapshot per tenant; `step()` (called by the
+    manager after every executed batch, any tenant) re-arbitrates at each
+    interval boundary:
+
+      demand_t = max(0, total_accesses_t - last_t)        (the live load)
+      share_t  = normalize(max(demand_t / sum, min_share))
+      budget_t = share_t * estimate_device_budget(...)    -> retune
+      depth_t  = clamp(share_t * pool, depth_min, depth_max)
+
+    where the depth pool is `num_tenants * (depth_min + depth_max) / 2`:
+    equal shares land every tenant at the midpoint, a flash-crowd tenant
+    climbs toward `depth_max` while the squeezed neighbor floors at
+    `depth_min` — never below, so containment (the bench invariant) holds
+    by construction. Because the shares sum to exactly 1 and each budget
+    is floored to an int, Σ budget_t <= the one shared budget: the
+    conservation law `tests/test_tenants.py` pins down.
+    """
+
+    def __init__(self, cfg: ArbiterConfig, views: dict):
+        if not views:
+            raise ValueError("BudgetArbiter needs at least one tenant view")
+        self.cfg = cfg
+        self.views = dict(views)
+        self.enabled = bool(cfg.every_batches) and all(
+            v.capabilities().tunable for v in self.views.values())
+        self.batches = 0
+        self.events: list[dict] = []
+        self.last_shares: dict[str, float] = {}
+        self._last = {n: self._accesses(v)
+                      for n, v in self.views.items()} if self.enabled else {}
+
+    @staticmethod
+    def _accesses(view) -> int:
+        return int(view.stats().get("total_accesses", 0))
+
+    def step(self, engaged=frozenset()) -> None:
+        """One executed batch somewhere; `engaged` names tenants whose
+        SLO controller currently owns their depth knob."""
+        if not self.enabled:
+            return
+        self.batches += 1
+        if self.batches % self.cfg.every_batches:
+            return
+        self._arbitrate(frozenset(engaged))
+
+    def _arbitrate(self, engaged: frozenset) -> None:
+        from repro.core.plan import estimate_device_budget
+        budget = estimate_device_budget(
+            fraction=self.cfg.budget_fraction,
+            fallback_bytes=self.cfg.budget_fallback_bytes)
+        if budget is None:
+            return
+        now = {n: self._accesses(v) for n, v in self.views.items()}
+        demand = {n: max(0, now[n] - self._last.get(n, 0)) for n in now}
+        self._last = now
+        total = sum(demand.values())
+        if total <= 0:      # idle interval: everyone is "equally loaded"
+            raw = {n: 1.0 / len(self.views) for n in self.views}
+        else:
+            raw = {n: demand[n] / total for n in demand}
+        floored = {n: max(s, self.cfg.min_share) for n, s in raw.items()}
+        norm = sum(floored.values())
+        shares = {n: s / norm for n, s in floored.items()}
+        self.last_shares = shares
+        depth_pool = len(self.views) * (self.cfg.depth_min
+                                        + self.cfg.depth_max) / 2.0
+        budgets, depths = {}, {}
+        for name, view in self.views.items():
+            budgets[name] = int(budget * shares[name])
+            view.retune_capacities(budgets[name])
+            if self.cfg.retune_depth and name not in engaged:
+                want = max(self.cfg.depth_min,
+                           min(self.cfg.depth_max,
+                               round(shares[name] * depth_pool)))
+                if view.prefetch_depth() != want and \
+                        view.set_prefetch_depth(want):
+                    depths[name] = want
+        self.events.append({"kind": "arbiter", "batch": self.batches,
+                            "budget_bytes": int(budget), "shares": shares,
+                            "budgets": budgets, "depths": depths,
+                            "skipped_engaged": sorted(engaged)})
+
+    def summary(self) -> dict:
+        """Merged into the manager's `percentiles()` shared section."""
+        if not self.enabled:
+            return {}
+        return {"arbiter_rounds": len(self.events),
+                "arbiter_shares": dict(self.last_shares)}

@@ -3,19 +3,34 @@
 `ServingSession` is the front door — it owns batcher + engine + storage
 and drives prefetch/refresh through the `repro.storage` protocol.
 `InferenceServer`/`Batcher` remain the inner loop for callers that wire
-their own engines. Runtime auto-tuning (`AutoTuneConfig`, re-exported from
-`repro.ps.tuning`) hangs off `ServingSession(auto_tune=...)`; the SLO
-outer loop (`SLOConfig`/`SLOController`, admission shedding via
-`BatcherConfig.max_queue`/`deadline_ms` + `QueryShedError`) hangs off
-`ServingSession(slo=...)`.
+their own engines.
+
+Controllers compose through ONE spec: `configure(auto_tune=..., slo=...,
+arbiter=...)` -> `ServingControllers`, passed as
+`ServingSession(controllers=...)` / `TenantManager(controllers=...)`.
+The per-controller kwargs (`auto_tune=`, `slo=`) remain as exact aliases
+— passing both surfaces at once is a ValueError. The SLO outer loop
+(`SLOConfig`/`SLOController`) escalates widen -> batch-shrink
+(`min_batch`) -> degraded, with admission shedding via
+`BatcherConfig.max_queue`/`deadline_ms` + `QueryShedError`.
+
+Multi-tenant serving: `TenantManager([TenantSpec(...), ...])` hosts N
+models over ONE shared sharded/pool backend — per-tenant sessions, SLOs
+and stats namespaces, with the shared device budget re-split live by the
+`BudgetArbiter` (`ArbiterConfig`, re-exported from `repro.ps.tuning`).
 """
-from repro.ps.tuning import AutoTuneConfig, QueueDepthController
+from repro.ps.tuning import (ArbiterConfig, AutoTuneConfig, BudgetArbiter,
+                             QueueDepthController)
+from repro.serving.config import ServingControllers, configure
 from repro.serving.server import (Batcher, BatcherConfig, InferenceServer,
                                   Query, QueryShedError, ServeStats)
 from repro.serving.session import ServingSession
 from repro.serving.slo import SLOConfig, SLOController, windowed_p99_ms
+from repro.serving.tenants import TenantManager, TenantSpec
 
 __all__ = ["Batcher", "BatcherConfig", "InferenceServer", "Query",
            "QueryShedError", "ServeStats", "ServingSession",
            "AutoTuneConfig", "QueueDepthController", "SLOConfig",
-           "SLOController", "windowed_p99_ms"]
+           "SLOController", "windowed_p99_ms", "ServingControllers",
+           "configure", "ArbiterConfig", "BudgetArbiter", "TenantManager",
+           "TenantSpec"]

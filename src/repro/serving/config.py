@@ -1,0 +1,75 @@
+"""One composition point for every serving-loop controller.
+
+The controllers grew one kwarg at a time across PRs — `auto_tune=` (PR
+4's inner tuners), `slo=` (PR 8's outer loop), and now the multi-tenant
+arbiter — leaving callers to thread three loosely-related arguments
+through every constructor. `ServingControllers` is the single spec that
+names all three:
+
+    controllers = serving.configure(
+        auto_tune=AutoTuneConfig(capacity_every_batches=32),
+        slo=SLOConfig(target_p99_ms=8.0, min_batch=8),
+        arbiter=ArbiterConfig(every_batches=16),      # TenantManager only
+    )
+    ServingSession(model, params, controllers=controllers)
+    TenantManager(specs, controllers=controllers)
+
+The old per-controller kwargs (`ServingSession(auto_tune=..., slo=...)`)
+remain as thin aliases — they build the same `ServingControllers` under
+the hood, and passing both surfaces at once is a `ValueError`, not a
+silent precedence rule. The `arbiter` field is meaningful only for
+`TenantManager` (it arbitrates ACROSS tenants); a plain single-model
+session rejects it for the same fail-fast reason.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+from repro.ps.tuning import ArbiterConfig, AutoTuneConfig
+from repro.serving.slo import SLOConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingControllers:
+    """The full controller stack for a session (or every tenant of a
+    manager): inner auto-tuners, SLO outer loop, cross-tenant arbiter.
+    Any field left None leaves that controller off."""
+
+    auto_tune: Union[AutoTuneConfig, bool, None] = None
+    slo: Optional[SLOConfig] = None
+    arbiter: Optional[ArbiterConfig] = None
+
+    def __post_init__(self):
+        # normalize the auto_tune=True shorthand here so every consumer
+        # sees a real config (or None) — one coercion point, not three
+        if self.auto_tune is True:
+            object.__setattr__(self, "auto_tune", AutoTuneConfig())
+        elif self.auto_tune is False:
+            object.__setattr__(self, "auto_tune", None)
+
+
+def configure(*, auto_tune: Union[AutoTuneConfig, bool, None] = None,
+              slo: Optional[SLOConfig] = None,
+              arbiter: Optional[ArbiterConfig] = None) -> ServingControllers:
+    """Build a `ServingControllers` spec (keyword-only, so call sites
+    read like the config they produce)."""
+    return ServingControllers(auto_tune=auto_tune, slo=slo, arbiter=arbiter)
+
+
+def resolve_controllers(controllers: Optional[ServingControllers],
+                        auto_tune: Union[AutoTuneConfig, bool, None],
+                        slo: Optional[SLOConfig],
+                        *, where: str) -> ServingControllers:
+    """Fold the legacy per-controller kwargs and the unified spec into
+    ONE `ServingControllers`, refusing ambiguity: legacy kwargs are exact
+    aliases, so mixing them with `controllers=` has no sane precedence."""
+    legacy = auto_tune is not None or slo is not None
+    if controllers is not None:
+        if legacy:
+            raise ValueError(
+                f"{where} got both controllers= and the legacy "
+                "auto_tune=/slo= kwargs — pass ONE surface (the legacy "
+                "kwargs are aliases for serving.configure(...))")
+        return controllers
+    return ServingControllers(auto_tune=auto_tune, slo=slo)

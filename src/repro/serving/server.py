@@ -21,8 +21,9 @@ gets the two overlap mechanisms for free:
     path too.
 
 Prefer the `repro.serving.session.ServingSession` facade, which wires the
-forward engine, warmup, and storage lifecycle around this loop. Passing a
-raw `ParameterServer` as `ps=` still works as a deprecation shim.
+forward engine, warmup, and storage lifecycle around this loop. (The PR-2
+`ps=` deprecation shim is gone: pass `storage=ebc.storage`, or a
+`TieredStorage.adopt(ps)` wrapper for a raw server.)
 """
 from __future__ import annotations
 
@@ -31,7 +32,6 @@ import concurrent.futures
 import dataclasses
 import itertools
 import time
-import warnings
 from typing import Callable, Optional
 
 import numpy as np
@@ -228,28 +228,16 @@ class InferenceServer:
     when `async_refresh=True` — and (c) mirrors the backend's cache +
     overlap counters into `stats.percentiles()`. All of it goes through
     the protocol verbs, so backends that cannot stage or refresh degrade
-    to no-ops instead of needing special cases here.
-
-    `ps=` (a raw `ParameterServer`) is the deprecated PR-2 spelling; it is
-    wrapped in the tiered backend adapter and keeps working.
+    to no-ops instead of needing special cases here. (The PR-2 `ps=`
+    spelling is gone; pass `storage=ebc.storage` — docs/serving.md has
+    the migration table.)
     """
 
     def __init__(self, forward: Callable, batcher_cfg: BatcherConfig,
-                 sla_ms: float = 50.0, ps=None, storage=None,
+                 sla_ms: float = 50.0, storage=None,
                  refresh_every_batches: int = 0,
                  async_refresh: bool = False,
                  clock: Optional[Callable] = None):
-        if ps is not None and storage is not None:
-            raise ValueError("pass either storage= (preferred) or the "
-                             "deprecated ps=, not both")
-        if ps is not None:
-            warnings.warn(
-                "InferenceServer(ps=...) is deprecated; pass the storage "
-                "backend instead: InferenceServer(storage=ebc.storage) or "
-                "use ServingSession (see docs/serving.md migration table)",
-                DeprecationWarning, stacklevel=2)
-            from repro.storage import TieredStorage
-            storage = TieredStorage.adopt(ps)
         self.forward = forward
         # `clock` abstracts serving time: None = real time.perf_counter;
         # a replay harness passes a `repro.traffic.VirtualClock` (callable
@@ -271,11 +259,6 @@ class InferenceServer:
         self._refresh_pool: Optional[
             concurrent.futures.ThreadPoolExecutor] = None
         self._refresh_future: Optional[concurrent.futures.Future] = None
-
-    @property
-    def ps(self):
-        """Deprecated accessor: the wrapped ParameterServer, if any."""
-        return getattr(self.storage, "ps", None)
 
     def submit(self, q: Query) -> None:
         """Admit or shed one query. A shed query raises `QueryShedError`

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.ps.tuning import AutoTuneConfig, AutoTuner
+from repro.serving.config import ServingControllers, resolve_controllers
 from repro.serving.server import (BatcherConfig, InferenceServer, Query,
                                   QueryShedError)
 from repro.serving.slo import SLOConfig, SLOController
@@ -56,8 +57,19 @@ class ServingSession:
                  async_refresh: bool = False,
                  auto_tune: Union[AutoTuneConfig, bool, None] = None,
                  slo: Optional[SLOConfig] = None,
+                 controllers: Optional[ServingControllers] = None,
                  clock: Optional[Callable] = None,
                  warmup: bool = True):
+        # auto_tune=/slo= are exact aliases for controllers=configure(...)
+        # — one surface per call, never both (ValueError)
+        spec = resolve_controllers(controllers, auto_tune, slo,
+                                   where="ServingSession")
+        if spec.arbiter is not None:
+            raise ValueError(
+                "the arbiter re-splits shared capacity ACROSS tenants; a "
+                "single-model ServingSession has nothing to arbitrate — "
+                "pass ArbiterConfig through TenantManager(controllers=...)")
+        auto_tune, slo = spec.auto_tune, spec.slo
         self.model = model
         self.params = params
         self.storage = model.ebc.storage
@@ -85,7 +97,16 @@ class ServingSession:
         self._closed = False
         self._next_qid = 0
         if warmup:
-            self._warmup(batcher.max_batch)
+            sizes = [batcher.max_batch]
+            if slo is not None and slo.min_batch > 0:
+                # the shrink rung re-sizes the batch quantum mid-overload;
+                # pre-compile every rung shape now so engaging the ladder
+                # never stalls a breached window on XLA compilation
+                b = batcher.max_batch
+                while b > slo.min_batch:
+                    b = max(slo.min_batch, b // 2)
+                    sizes.append(b)
+            self._warmup(sizes)
         # runtime auto-tuning (queue depth / tier capacity): driven from
         # poll() through protocol verbs only. Backends that do not report
         # `tunable` (device) leave the tuner permanently inert — asking for
@@ -97,11 +118,13 @@ class ServingSession:
         self.tuner: Optional[AutoTuner] = (
             AutoTuner(auto_tune, self.storage) if auto_tune else None)
         # SLO outer loop (serving/slo.py): windowed-p99 watcher + overload
-        # escalation ladder. Also created after warmup, and handed the
-        # tuner so it can suspend the queue-depth leg while engaged.
+        # escalation ladder. Also created after warmup, handed the tuner
+        # so it can suspend the queue-depth leg while engaged, and the
+        # live Batcher so the shrink rung (min_batch > 0) can re-size it.
         self.slo: Optional[SLOController] = (
             SLOController(slo, self.storage, self.server.stats,
-                          tuner=self.tuner) if slo is not None else None)
+                          tuner=self.tuner, batcher=self.server.batcher)
+            if slo is not None else None)
 
     # -- engine -------------------------------------------------------------
     def _build_engine(self, caps):
@@ -117,15 +140,17 @@ class ServingSession:
             return rest(jnp.asarray(dense), pooled)  # jitted remainder
         return forward
 
-    def _warmup(self, batch: int) -> None:
-        """Compile the engine on a zero batch, then drop the synthetic
-        traffic's footprint (warm-cache entries, refresh-window batch) and
-        its counters so measurements start clean."""
+    def _warmup(self, batch_sizes) -> None:
+        """Compile the engine on a zero batch per armed batch size, then
+        drop the synthetic traffic's footprint (warm-cache entries,
+        refresh-window batch) and its counters so measurements start
+        clean."""
         cfg = self.model.cfg
-        dense = np.zeros((batch, cfg.dense_features), np.float32)
-        idx = np.zeros((batch, cfg.embedding.num_tables,
-                        cfg.embedding.pooling), np.int32)
-        jax.block_until_ready(self._forward(dense, idx))
+        for batch in batch_sizes:
+            dense = np.zeros((batch, cfg.dense_features), np.float32)
+            idx = np.zeros((batch, cfg.embedding.num_tables,
+                            cfg.embedding.pooling), np.int32)
+            jax.block_until_ready(self._forward(dense, idx))
         self.storage.flush()
         self.storage.reset_stats()
 

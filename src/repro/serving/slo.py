@@ -16,7 +16,13 @@ module is that outer loop:
                        and refresh replica routing (`update_routing`) so
                        a slow replica sheds load NOW instead of at the
                        next auto-tune interval;
-              level 2: warm-cache-only degraded serving
+              shrink : with `min_batch > 0` and a batcher handle, halve
+                       the batcher's `max_batch` (and its batching window
+                       proportionally) one rung per breached check down
+                       to the floor — smaller batches clear the queue in
+                       shorter service quanta, trading throughput for
+                       tail latency BEFORE any answer quality is touched;
+              degrade: warm-cache-only degraded serving
                        (`storage.set_degraded(True)`) — zero-filled cold
                        misses with a measured accuracy delta, the
                        cache-only answer tier of GPU-specialized
@@ -83,6 +89,10 @@ class SLOConfig:
     route_on_breach: bool = True
     # default Batcher deadline budget = frac * target (0 = don't arm)
     shed_deadline_frac: float = 1.0
+    # batch-shrink rung: on a sustained breach, halve the batcher's
+    # max_batch (scaling its wait window proportionally) down to this
+    # floor BEFORE the degraded rung — 0 disables the rung entirely
+    min_batch: int = 0
 
     def __post_init__(self):
         if self.target_p99_ms <= 0:
@@ -90,6 +100,9 @@ class SLOConfig:
         if not (0.0 < self.recover_frac < 1.0):
             raise ValueError("recover_frac must be in (0, 1) — it is the "
                              "hysteresis band below the target")
+        if self.min_batch < 0:
+            raise ValueError("min_batch must be >= 0 (0 disables the "
+                             "batch-shrink rung)")
 
 
 class SLOController:
@@ -102,18 +115,27 @@ class SLOController:
     no-ops there — the controller still measures and logs breaches.
     """
 
-    def __init__(self, cfg: SLOConfig, storage, stats, tuner=None):
+    def __init__(self, cfg: SLOConfig, storage, stats, tuner=None,
+                 batcher=None):
         self.cfg = cfg
         self.storage = storage
         self.stats = stats
         self.tuner = tuner              # AutoTuner to suspend, if any
+        self.batcher = batcher          # Batcher to shrink, if any
         caps = storage.capabilities()
         self._tunable = caps.tunable
         self._degradable = caps.degradable and cfg.degrade
         self._base_depth = storage.prefetch_depth()
-        self.level = 0                  # 0 healthy, 1 widened, 2 degraded
+        # ladder: 0 healthy, 1 widened, [2 shrunken,] top rung degraded.
+        # The shrink rung exists only when armed (min_batch > 0 AND a
+        # batcher handle), so the degraded rung's level depends on it.
+        self._shrinkable = cfg.min_batch > 0 and batcher is not None
+        self._base_batch_cfg = batcher.cfg if batcher is not None else None
+        self._degrade_level = 3 if self._shrinkable else 2
+        self.level = 0
         self.batches = 0
         self.breaches = 0
+        self.batch_shrinks = 0
         self.degraded_batches = 0
         self.events: list[dict] = []
 
@@ -129,7 +151,7 @@ class SLOController:
         """One executed batch. Cheap off-boundary (two increments); on the
         check boundary, evaluate the window and move at most ONE rung."""
         self.batches += 1
-        if self.level >= 2:
+        if self.level >= self._degrade_level:
             self.degraded_batches += 1
         # ownership must be published every batch, not just on check
         # boundaries: the depth leg's own interval is independent of ours
@@ -170,18 +192,44 @@ class SLOController:
         if self.level == 0:
             self.level = 1
             self._log("widen", p99)
-        elif self.level == 1 and self._degradable:
+            return
+        if self._shrinkable and self.level in (1, 2):
             self.level = 2
+            if self._shrink():          # keep halving toward the floor
+                self._log("shrink", p99)
+                return
+            # already at the floor: fall through to the degraded rung
+        if self.level == self._degrade_level - 1 and self._degradable:
+            self.level = self._degrade_level
             self.storage.set_degraded(True)
             self._log("degrade", p99)
-        # level 2 with a sustained breach: already at the last rung —
-        # admission shedding (Batcher deadline) is what sheds the rest
+        # at the top rung with a sustained breach: admission shedding
+        # (Batcher deadline) is what sheds the rest
+
+    def _shrink(self) -> bool:
+        """Halve the batcher's max_batch toward the floor, scaling the
+        batching window proportionally (a half-size batch should not wait
+        a full-size window to fill). The batcher reads its cfg live, so
+        the very next `next_batch` serves the smaller quantum."""
+        cfg = self.batcher.cfg
+        want = max(self.cfg.min_batch, cfg.max_batch // 2)
+        if want >= cfg.max_batch:
+            return False
+        scale = want / cfg.max_batch
+        self.batcher.cfg = dataclasses.replace(
+            cfg, max_batch=want, max_wait_s=cfg.max_wait_s * scale)
+        self.batch_shrinks += 1
+        return True
 
     def _deescalate(self, p99: float) -> None:
-        if self.level == 2:
-            self.level = 1
+        if self.level == self._degrade_level:
+            self.level -= 1
             self.storage.set_degraded(False)
             self._log("restore_exact", p99)
+        elif self._shrinkable and self.level == 2:
+            self.level = 1
+            self.batcher.cfg = self._base_batch_cfg
+            self._log("regrow", p99)
         elif self.level == 1:
             self.level = 0
             if self._tunable and self._base_depth > 0:
@@ -194,4 +242,5 @@ class SLOController:
         return {"slo_target_p99_ms": self.cfg.target_p99_ms,
                 "slo_level": self.level,
                 "slo_breaches": self.breaches,
+                "slo_batch_shrinks": self.batch_shrinks,
                 "slo_degraded_batches": self.degraded_batches}

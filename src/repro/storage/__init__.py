@@ -23,6 +23,12 @@ Public surface:
                           backend) and cost-proportional replica routing.
   `require_capability` / `CapabilityError`
                         — fail fast on capability mismatch.
+  `TenantNamespace` / `TenantStorage`
+                        — multi-tenant mode: contiguous per-tenant table
+                          namespaces over ONE shared sharded/pool backend
+                          (`build(..., tenants={name: count})`) and the
+                          per-tenant `EmbeddingStorage` facade that
+                          `ServingSession` binds to, unchanged.
 
 See docs/architecture.md for the layer map and docs/serving.md for the
 operator guide + old→new API migration table.
@@ -34,6 +40,7 @@ from repro.storage.placement import (MigrationPlan, ReplicaRouter,
                                      plan_migration, plan_shard_placement)
 from repro.storage.registry import (UnknownBackendError, available, create,
                                     register, resolve, unregister)
+from repro.storage.tenancy import TenantNamespace, TenantStorage
 # importing the backend modules registers them
 from repro.storage.device import DeviceStorage
 from repro.storage.tiered import TieredStorage
@@ -46,4 +53,5 @@ __all__ = ["CapabilityError", "EmbeddingStorage", "StorageCapabilities",
            "TieredStorage", "ShardedStorage", "PoolStorage",
            "WorkerDeadError", "ShardPlacement",
            "estimate_table_loads", "plan_shard_placement",
-           "MigrationPlan", "ReplicaRouter", "plan_migration"]
+           "MigrationPlan", "ReplicaRouter", "plan_migration",
+           "TenantNamespace", "TenantStorage"]

@@ -56,6 +56,7 @@ from repro.storage.pool.transport import (DEFAULT_TIMEOUT, RemoteCallError,
 from repro.storage.registry import register
 from repro.storage.sharded import (_chunk_bounds, merge_shard_stats,
                                    resolve_placement)
+from repro.storage.tenancy import TenantNamespace, resolve_tenants
 from repro.storage.tiered import (_extract_tables, _reject_double_remap,
                                   build_ps_config)
 
@@ -64,7 +65,9 @@ from repro.storage.tiered import (_extract_tables, _reject_double_remap,
 class _RemoteUnit:
     """Pool-side mirror of one worker-hosted ParameterServer unit — the
     same placement coordinates as `ShardedStorage._Unit`, with the PS
-    replaced by (worker, unit_id) routing."""
+    replaced by (worker, unit_id) routing. Under tenancy a unit is
+    tenant-pure: `tenant` names its owner and `cols` maps `table_ids`
+    onto the caller-batch columns (tenant-local for tenant units)."""
     unit_id: int
     shard: int
     worker: int
@@ -72,37 +75,68 @@ class _RemoteUnit:
     chunk: Optional[tuple[int, int]] = None
     service_s: float = 0.0                # replica units: window lookup time
     served_rows: int = 0                  # replica units: window batch rows
+    tenant: Optional[str] = None
+    cols: Optional[np.ndarray] = None     # caller-batch columns
+
+    def __post_init__(self):
+        if self.cols is None:
+            self.cols = self.table_ids
 
     def spec(self) -> dict:
-        """The construction descriptor shipped to the worker."""
+        """The construction descriptor shipped to the worker (tenancy is
+        a pool-side concept — the worker only needs global table ids for
+        its shared-segment views)."""
         return {"unit_id": self.unit_id, "shard": self.shard,
                 "table_ids": self.table_ids, "chunk": self.chunk}
 
 
-def _plan_units(plc: ShardPlacement, num_workers: int
+def _plan_units(plc: ShardPlacement, num_workers: int,
+                tenants: Optional[dict] = None
                 ) -> tuple[list[_RemoteUnit], list[list[_RemoteUnit]]]:
     """Enumerate placement units in `ShardedStorage._construct_units`
     order and assign each to a worker by shard (`shard % num_workers`).
     Replicas of one table live on distinct shards by placement invariant,
-    so with workers >= shards they land on distinct processes."""
+    so with workers >= shards they land on distinct processes.
+
+    With `tenants` ({name: TenantNamespace}) each shard's solo group
+    splits per tenant (a ParameterServer asserts full-table coverage, so
+    tenant-independent serving needs tenant-pure units); replica units
+    are single-table and just get tagged."""
     units: list[_RemoteUnit] = []
     by_worker: list[list[_RemoteUnit]] = [[] for _ in range(num_workers)]
 
-    def add(shard: int, ids, chunk) -> None:
+    def owner_of(t: int) -> Optional[TenantNamespace]:
+        if not tenants:
+            return None
+        for ns in tenants.values():
+            if ns.owns(t):
+                return ns
+        raise ValueError(f"table {t} belongs to no tenant namespace")
+
+    def add(shard: int, ids, chunk, ns=None) -> None:
+        ids = np.asarray(ids, np.int64)
         u = _RemoteUnit(unit_id=len(units), shard=shard,
                         worker=shard % num_workers,
-                        table_ids=np.asarray(ids, np.int64), chunk=chunk)
+                        table_ids=ids, chunk=chunk,
+                        tenant=None if ns is None else ns.name,
+                        cols=None if ns is None else ns.local(ids))
         units.append(u)
         by_worker[u.worker].append(u)
 
     for s, tabs in enumerate(plc.shard_tables):
         solo = [t for t in tabs if len(plc.replicas[t]) == 1]
-        if solo:
+        if tenants:
+            groups: dict[str, list[int]] = {}
+            for t in solo:
+                groups.setdefault(owner_of(t).name, []).append(t)
+            for name, ids in groups.items():
+                add(s, ids, None, tenants[name])
+        elif solo:
             add(s, solo, None)
     for t in plc.replicated_tables:
         owners = plc.replicas[t]
         for k, s in enumerate(owners):
-            add(s, [t], (k, len(owners)))
+            add(s, [t], (k, len(owners)), owner_of(t))
     return units, by_worker
 
 
@@ -133,6 +167,10 @@ class PoolStorage(EmbeddingStorage):
         self._degraded = False
         self._prefetch_depth = 0
         self._depth_override: Optional[int] = None
+        self._tenants: dict[str, TenantNamespace] = {}
+        self._tenant_hints: dict[str, int] = {}
+        self._tenant_degraded: dict[str, bool] = {}
+        self._tenant_depth: dict[str, int] = {}   # respawn re-applies
         self._timeout = DEFAULT_TIMEOUT
         self._ctx = None
         # backend-level sliding traffic window — migration plans from FULL
@@ -222,6 +260,7 @@ class PoolStorage(EmbeddingStorage):
               device_budget_bytes: Optional[int] = None,
               migration_threshold: Optional[float] = None,
               replicate_factor: float = 0.0,
+              tenants: Optional[dict] = None,
               rpc_timeout: float = DEFAULT_TIMEOUT,
               **ps_cfg_overrides) -> "PoolStorage":
         """Spawn the worker pool and install the placement's units on it.
@@ -234,6 +273,12 @@ class PoolStorage(EmbeddingStorage):
         Rebuild-safe across processes: on a live backend the new workers
         are spawned and fully constructed BEFORE the old pool tears down,
         so a spawn or constructor failure leaves the old workers serving.
+
+        `tenants` ({name: table_count}) turns on multi-tenant mode with
+        the `ShardedStorage` semantics (tenant-pure units, `tenant_*`
+        verbs, tenant-shaped stats, migration disabled). Pool tenancy is
+        STATIC — `attach_tenant` mid-serving would have to re-carve the
+        shared host segment; rebuild with the full tenant set instead.
         """
         cfg = self.cfg
         if num_workers < 1:
@@ -248,6 +293,12 @@ class PoolStorage(EmbeddingStorage):
                                  device_budget_bytes, **ps_cfg_overrides)
         tables = np.ascontiguousarray(
             _extract_tables(params, cfg.num_tables))
+        spaces = (resolve_tenants(tenants, cfg.num_tables)
+                  if tenants else {})
+        if spaces and migration_threshold is not None:
+            raise ValueError("migration is disabled under tenancy (the "
+                             "arbiter re-splits capacity instead) — drop "
+                             "migration_threshold or tenants")
         plc = resolve_placement(cfg, placement, num_shards, trace)
         num_workers = min(num_workers, plc.num_shards)
 
@@ -263,7 +314,8 @@ class PoolStorage(EmbeddingStorage):
         seg = create_segment(tables.nbytes)
         np.ndarray(tables.shape, tables.dtype, buffer=seg.buf)[...] = tables
         seg_meta = (seg.name, tables.dtype.str, tables.shape)
-        units, by_worker = _plan_units(plc, num_workers)
+        units, by_worker = _plan_units(plc, num_workers,
+                                       tenants=spaces or None)
         try:
             transports = self._spawn_and_construct(num_workers, by_worker,
                                                    seg_meta)
@@ -282,6 +334,10 @@ class PoolStorage(EmbeddingStorage):
         self._segment, self._seg_meta = seg, seg_meta
         self._dtype = tables.dtype
         self._install(plc, units)
+        self._tenants = spaces
+        self._tenant_hints = {}
+        self._tenant_degraded = {name: False for name in spaces}
+        self._tenant_depth = {}
         self.migration_threshold = migration_threshold
         self._replicate_factor = float(replicate_factor)
         self._prefetch_depth = ps_cfg.prefetch_depth
@@ -326,6 +382,33 @@ class PoolStorage(EmbeddingStorage):
             raise RuntimeError(
                 "storage='pool' needs its worker pool: call "
                 "ebc.storage.build(params, ps_cfg, num_workers=N) first")
+
+    def _reject_under_tenancy(self, verb: str) -> None:
+        if self._tenants:
+            raise RuntimeError(
+                f"this backend has tenants attached "
+                f"({sorted(self._tenants)}) — whole-backend {verb}() is "
+                f"undefined under tenancy; serve each tenant through its "
+                f"TenantStorage view (tenant_{verb})")
+
+    def _ns(self, name: str) -> TenantNamespace:
+        try:
+            return self._tenants[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown tenant {name!r}; attached tenants: "
+                f"{sorted(self._tenants)}") from None
+
+    def _tenant_units(self, name: str) -> list[_RemoteUnit]:
+        self._ns(name)
+        return [u for u in self._units if u.tenant == name]
+
+    def _tenant_worker_ids(self, name: str) -> dict[int, list[int]]:
+        """worker -> this tenant's unit ids on it (only nonempty)."""
+        out: dict[int, list[int]] = {}
+        for u in self._tenant_units(name):
+            out.setdefault(u.worker, []).append(u.unit_id)
+        return out
 
     # -- worker fan-out & crash recovery ------------------------------------
     def _map_workers(self, fn, workers: Optional[list[int]] = None
@@ -386,6 +469,22 @@ class PoolStorage(EmbeddingStorage):
             t.destroy()
             raise
         self._transports[w] = t
+        # per-tenant mode/depth are pool-side state the fresh worker does
+        # not know — re-apply them to its slice of each tenant's units
+        for name, on in self._tenant_degraded.items():
+            if on:
+                ids = [u.unit_id for u in self._worker_units[w]
+                       if u.tenant == name]
+                if ids:
+                    t.call("set_degraded", {"on": True, "unit_ids": ids},
+                           timeout=self._timeout)
+        for name, depth in self._tenant_depth.items():
+            ids = [u.unit_id for u in self._worker_units[w]
+                   if u.tenant == name]
+            if ids:
+                t.call("set_prefetch_depth",
+                       {"depth": int(depth), "unit_ids": ids},
+                       timeout=self._timeout)
 
     def _recover(self, errs: dict) -> None:
         """Respawn every worker that died; re-raise the first non-crash
@@ -425,45 +524,47 @@ class PoolStorage(EmbeddingStorage):
         return _chunk_bounds(batch, r, k)
 
     def _lookup_work(self, w: int, idx: np.ndarray, w_np, valid,
-                     fused: bool) -> tuple[list, list]:
-        """Cut worker `w`'s per-unit request items + scatter metadata."""
+                     fused: bool, only: Optional[set] = None
+                     ) -> tuple[list, list]:
+        """Cut worker `w`'s per-unit request items + scatter metadata.
+        `u.cols` maps each unit's tables onto the caller-batch columns
+        (global ids normally, namespace-local under tenancy); `only`
+        restricts to a tenant's unit ids."""
         B = idx.shape[0]
         work, meta = [], []
         for u in self._worker_units[w]:
+            if only is not None and u.unit_id not in only:
+                continue
             lo, hi = self._unit_bounds(u, B)
             if lo == hi:
                 continue
             item = {"unit_id": u.unit_id,
-                    "idx": idx[lo:hi][:, u.table_ids]}
+                    "idx": idx[lo:hi][:, u.cols]}
             if valid is not None:
                 item["valid"] = int(np.clip(valid - lo, 0, hi - lo))
             if fused and w_np is not None:
-                item["weights"] = w_np[lo:hi][:, u.table_ids]
+                item["weights"] = w_np[lo:hi][:, u.cols]
             work.append(item)
             meta.append((u, lo, hi))
         return work, meta
 
-    def lookup(self, params: dict, indices, weights=None, *,
-               pre_remapped: bool = False):
-        """Fan the [B, T, L] lookup out across worker processes, join,
+    def _fan_lookup(self, idx: np.ndarray, weights, valid: Optional[int],
+                    T: int, pooling: int, only: Optional[set] = None):
+        """Fan a [B, T, L] lookup out across worker processes, join,
         scatter the per-unit blocks, pool — bit-identical to the sharded
         (and single-server tiered) path: same bounds law, same scatter,
         same eager pooling reduction. A worker that dies mid-batch is
-        respawned from the shared tier and only ITS slice re-runs."""
+        respawned from the shared tier and only ITS slice re-runs.
+        `only` restricts the fan-out to a tenant's unit ids."""
         from repro.core.embedding import _pool_rows_core
-        self._require_built()
-        idx = np.asarray(indices)
-        B, T, L = idx.shape
+        B, _, L = idx.shape
         dim = self.cfg.dim
-        valid, self._valid_hint = self._valid_hint, None
-        real = idx if valid is None else idx[:valid]
-        if real.shape[0]:
-            self.window.append(real)
         fused = self._ps_cfg.fused_lookup
         w_np = None if weights is None else np.asarray(weights)
 
         def run_worker(w: int):
-            work, meta = self._lookup_work(w, idx, w_np, valid, fused)
+            work, meta = self._lookup_work(w, idx, w_np, valid, fused,
+                                           only=only)
             if not work:
                 return []
             res = self._call(w, "lookup", {"work": work, "fused": fused,
@@ -476,7 +577,7 @@ class PoolStorage(EmbeddingStorage):
             pooled_out = np.empty((B, T, dim), self._dtype)
             for results in outs.values():
                 for (u, lo, hi), r in results:
-                    pooled_out[lo:hi, u.table_ids] = r["block"]
+                    pooled_out[lo:hi, u.cols] = r["block"]
                     u.service_s += r["service_s"]
                     u.served_rows += r["served"]
             return jnp.asarray(pooled_out)
@@ -484,16 +585,29 @@ class PoolStorage(EmbeddingStorage):
         out = np.empty((B, T, L, dim), self._dtype)
         for results in outs.values():
             for (u, lo, hi), r in results:
-                out[lo:hi, u.table_ids] = r["block"]
+                out[lo:hi, u.cols] = r["block"]
                 u.service_s += r["service_s"]
                 u.served_rows += r["served"]
         rows_t = jnp.swapaxes(jnp.asarray(out), 0, 1)   # [T, B, L, D]
         w_t = (None if weights is None
                else jnp.swapaxes(jnp.asarray(weights), 0, 1))
         # eager on purpose — same 1-ULP rationale as tiered/sharded
-        pooled = _pool_rows_core(rows_t, w_t, self.cfg.combine,
-                                 self.cfg.pooling)
+        pooled = _pool_rows_core(rows_t, w_t, self.cfg.combine, pooling)
         return jnp.swapaxes(pooled, 0, 1)               # [B, T, D]
+
+    def lookup(self, params: dict, indices, weights=None, *,
+               pre_remapped: bool = False):
+        """Whole-backend [B, T, L] lookup; undefined under tenancy —
+        serve through the per-tenant views instead."""
+        self._require_built()
+        self._reject_under_tenancy("lookup")
+        idx = np.asarray(indices)
+        valid, self._valid_hint = self._valid_hint, None
+        real = idx if valid is None else idx[:valid]
+        if real.shape[0]:
+            self.window.append(real)
+        return self._fan_lookup(idx, weights, valid, idx.shape[1],
+                                self.cfg.pooling)
 
     # -- prefetch -----------------------------------------------------------
     def can_stage(self) -> bool:
@@ -509,12 +623,11 @@ class PoolStorage(EmbeddingStorage):
             return False
         return all(outs.values())
 
-    def stage(self, next_indices: np.ndarray) -> bool:
-        self._require_built()
-        idx = np.asarray(next_indices)
-
+    def _fan_stage(self, idx: np.ndarray,
+                   only: Optional[set] = None) -> bool:
         def run_worker(w: int) -> bool:
-            work, _ = self._lookup_work(w, idx, None, None, False)
+            work, _ = self._lookup_work(w, idx, None, None, False,
+                                        only=only)
             if not work:
                 return True
             return self._call(w, "stage", {"work": work})["ok"]
@@ -525,6 +638,11 @@ class PoolStorage(EmbeddingStorage):
             self._recover(errs)
             return False
         return all(outs.values())
+
+    def stage(self, next_indices: np.ndarray) -> bool:
+        self._require_built()
+        self._reject_under_tenancy("stage")
+        return self._fan_stage(np.asarray(next_indices))
 
     def hint_valid(self, n: int) -> None:
         self._valid_hint = int(n)
@@ -542,6 +660,8 @@ class PoolStorage(EmbeddingStorage):
         self._fan_out_retry(
             lambda w: self._call(w, "set_degraded", {"on": bool(on)}),
             "set_degraded")
+        for name in self._tenant_degraded:   # keep per-tenant flags honest
+            self._tenant_degraded[name] = bool(on)
         return True
 
     # -- refresh ------------------------------------------------------------
@@ -648,6 +768,9 @@ class PoolStorage(EmbeddingStorage):
         verbatim ShardedStorage law (thresholded imbalance, material-gain
         gate, hot plans from the same window)."""
         self._require_built()
+        if self._tenants:
+            # under tenancy fairness is the arbiter's job — see sharded
+            return None
         if window is None:
             window = {"traffic": list(self.window), "epoch": self._epoch}
         traffic = window["traffic"] if isinstance(window, dict) else window
@@ -784,6 +907,280 @@ class PoolStorage(EmbeddingStorage):
                 "warm_slots": max(r["warm_slots"] for r in done),
                 "budget_bytes": int(budget_bytes)}
 
+    def device_bytes(self) -> int:
+        """Total device-resident cache bytes across every worker's units
+        (hot blocks + warm payloads; the shared host cold tier does not
+        count)."""
+        if not self._units or self._closed:
+            return 0
+        outs = self._fan_out_retry(lambda w: self._call(w, "stats"),
+                                   "stats")
+        return sum(e["device_bytes"] for res in outs.values()
+                   for e in res["units"].values())
+
+    # -- tenancy ------------------------------------------------------------
+    @property
+    def tenants(self) -> dict:
+        """Attached tenant namespaces, {name: TenantNamespace} (copy)."""
+        return dict(self._tenants)
+
+    def tenant_lookup(self, name: str, indices, weights=None):
+        """One tenant's [B, T_tenant, L] lookup over its own units — the
+        same fan-out/scatter/pool as `lookup()` restricted to tenant-pure
+        units with namespace-local columns; pooling divides by THIS
+        batch's L."""
+        self._require_built()
+        only = {u.unit_id for u in self._tenant_units(name)}
+        idx = np.asarray(indices)
+        valid = self._tenant_hints.pop(name, None)
+        return self._fan_lookup(idx, weights, valid, idx.shape[1],
+                                idx.shape[2], only=only)
+
+    def tenant_stage(self, name: str, next_indices) -> bool:
+        self._require_built()
+        only = {u.unit_id for u in self._tenant_units(name)}
+        return self._fan_stage(np.asarray(next_indices), only=only)
+
+    def tenant_can_stage(self, name: str) -> bool:
+        if not self._units or self._closed:
+            return False
+        by_w = self._tenant_worker_ids(name)
+        if not by_w:
+            return False
+        outs, errs = self._map_workers(
+            lambda w: self._call(w, "can_stage",
+                                 {"unit_ids": by_w[w]})["ok"],
+            list(by_w))
+        if errs:
+            self._recover(errs)
+            return False
+        return all(outs.values())
+
+    def tenant_hint_valid(self, name: str, n: int) -> None:
+        self._ns(name)
+        self._tenant_hints[name] = int(n)
+
+    def tenant_refresh_window(self, name: str) -> dict:
+        # per-unit windows live inside the workers (as for the whole-pool
+        # refresh); the snapshot is just the epoch guard
+        self._ns(name)
+        return {"epoch": self._epoch}
+
+    def tenant_plan_refresh(self, name: str, window=None):
+        self._require_built()
+        if window is None:
+            window = self.tenant_refresh_window(name)
+        if window["epoch"] != self._epoch:
+            return None
+        by_w = self._tenant_worker_ids(name)
+
+        def run_worker(w: int) -> dict:
+            if w not in by_w:
+                return {}
+            return self._call(w, "plan_refresh",
+                              {"unit_ids": by_w[w]})["plans"]
+
+        outs = self._fan_out_retry(run_worker, "plan_refresh")
+        merged = {}
+        for plans in outs.values():
+            merged.update(plans)
+        if not any(p is not None for p in merged.values()):
+            return None
+        return {"units": merged, "epoch": window["epoch"]}
+
+    def tenant_install_refresh(self, name: str, plan) -> dict:
+        self._require_built()
+        by_w = self._tenant_worker_ids(name)
+        stale = (plan is None or plan["epoch"] != self._epoch
+                 or plan["units"] is None)
+        unit_plans = {} if stale else plan["units"]
+
+        def run_worker(w: int) -> dict:
+            if w not in by_w:
+                return {"replanned": False, "refreshes": 0}
+            mine = {uid: unit_plans.get(uid) for uid in by_w[w]}
+            return self._call(w, "install_refresh",
+                              {"plans": mine, "unit_ids": by_w[w]})
+
+        outs = self._fan_out_retry(run_worker, "install_refresh")
+        return {"replanned": any(r["replanned"] for r in outs.values()),
+                "refreshes": max((r["refreshes"] for r in outs.values()),
+                                 default=0)}
+
+    def tenant_prefetch_depth(self, name: str) -> int:
+        by_w = self._tenant_worker_ids(name)
+
+        def run_worker(w: int) -> int:
+            if w not in by_w:
+                return 0
+            return self._call(w, "prefetch_depth",
+                              {"unit_ids": by_w[w]})["depth"]
+
+        outs = self._fan_out_retry(run_worker, "prefetch_depth")
+        return max(outs.values(), default=0)
+
+    def tenant_set_prefetch_depth(self, name: str, depth: int) -> bool:
+        by_w = self._tenant_worker_ids(name)
+        if not by_w:
+            return False
+        self._tenant_depth[name] = int(depth)   # respawn re-applies
+
+        def run_worker(w: int):
+            if w not in by_w:
+                return None
+            return self._call(w, "set_prefetch_depth",
+                              {"depth": int(depth),
+                               "unit_ids": by_w[w]})
+
+        self._fan_out_retry(run_worker, "set_prefetch_depth")
+        return True
+
+    def tenant_take_prefetch_window_peak(self, name: str) -> int:
+        by_w = self._tenant_worker_ids(name)
+
+        def run_worker(w: int) -> int:
+            if w not in by_w:
+                return 0
+            return self._call(w, "take_window_peak",
+                              {"unit_ids": by_w[w]})["peak"]
+
+        outs = self._fan_out_retry(run_worker, "take_window_peak")
+        return max(outs.values(), default=0)
+
+    def tenant_retune_capacities(self, name: str,
+                                 budget_bytes: int) -> Optional[dict]:
+        """Re-split one tenant's slice of the shared budget across its
+        units (by table count — the whole-backend law scoped down)."""
+        self._require_built()
+        units = self._tenant_units(name)
+        total_tables = sum(len(u.table_ids) for u in units)
+        if not total_tables:
+            return None
+        share_of = {u.unit_id: int(budget_bytes * len(u.table_ids)
+                                   / total_tables) for u in units}
+        by_w = self._tenant_worker_ids(name)
+
+        def run_worker(w: int) -> dict:
+            if w not in by_w:
+                return {}
+            shares = {uid: share_of[uid] for uid in by_w[w]}
+            return self._call(w, "retune", {"shares": shares})["results"]
+
+        outs = self._fan_out_retry(run_worker, "retune")
+        done = [r for res in outs.values() for r in res.values()
+                if r is not None]
+        if not done:
+            return None
+        return {"tenant": name,
+                "retuned_units": len(done),
+                "hot_rows": max(r["hot_rows"] for r in done),
+                "warm_slots": max(r["warm_slots"] for r in done),
+                "budget_bytes": int(budget_bytes)}
+
+    def tenant_device_bytes(self, name: str) -> int:
+        by_w = self._tenant_worker_ids(name)
+
+        def run_worker(w: int):
+            if w not in by_w:
+                return {"units": {}}
+            return self._call(w, "stats", {"unit_ids": by_w[w]})
+
+        outs = self._fan_out_retry(run_worker, "stats")
+        return sum(e["device_bytes"] for res in outs.values()
+                   for e in res["units"].values())
+
+    def tenant_degraded(self, name: str) -> bool:
+        self._ns(name)
+        return self._tenant_degraded.get(name, False)
+
+    def tenant_set_degraded(self, name: str, on: bool) -> bool:
+        by_w = self._tenant_worker_ids(name)
+        if not by_w:
+            return False
+        self._tenant_degraded[name] = bool(on)   # respawn re-applies
+
+        def run_worker(w: int):
+            if w not in by_w:
+                return None
+            return self._call(w, "set_degraded",
+                              {"on": bool(on), "unit_ids": by_w[w]})
+
+        self._fan_out_retry(run_worker, "set_degraded")
+        return True
+
+    def _merge_tenant_entries(self, name: str, entries: list[dict]) -> dict:
+        """Fold one tenant's per-unit worker stats entries (shard-grouped
+        first, exactly like the whole-pool report) into its report."""
+        by_shard: dict[int, list[dict]] = {}
+        dev = 0
+        for e in entries:
+            by_shard.setdefault(e["shard"], []).append(e["stats"])
+            dev += e["device_bytes"]
+        per_shard = []
+        for s in sorted(by_shard):
+            group = by_shard[s]
+            if len(group) == 1:
+                per_shard.append(group[0])
+            else:
+                m = merge_shard_stats(group)
+                m.pop("per_shard", None)
+                m.pop("num_shards", None)
+                per_shard.append(m)
+        out = merge_shard_stats(per_shard)
+        out["tenant"] = name
+        out["device_bytes"] = int(dev)
+        return out
+
+    def tenant_stats(self, name: str) -> dict:
+        self._require_built()
+        by_w = self._tenant_worker_ids(name)
+
+        def run_worker(w: int):
+            if w not in by_w:
+                return {"units": {}}
+            return self._call(w, "stats", {"unit_ids": by_w[w]})
+
+        outs = self._fan_out_retry(run_worker, "stats")
+        entries = [e for res in outs.values()
+                   for e in res["units"].values()]
+        return self._merge_tenant_entries(name, entries)
+
+    def tenant_reset_stats(self, name: str) -> None:
+        by_w = self._tenant_worker_ids(name)
+
+        def run_worker(w: int):
+            if w not in by_w:
+                return None
+            return self._call(w, "reset_stats", {"unit_ids": by_w[w]})
+
+        self._fan_out_retry(run_worker, "reset_stats")
+        for u in self._tenant_units(name):
+            u.service_s, u.served_rows = 0.0, 0
+
+    def tenant_flush(self, name: str) -> None:
+        by_w = self._tenant_worker_ids(name)
+
+        def run_worker(w: int):
+            if w not in by_w:
+                return None
+            return self._call(w, "flush", {"unit_ids": by_w[w]})
+
+        self._fan_out_retry(run_worker, "flush")
+
+    def attach_tenant(self, name: str, tables, *, trace=None):
+        raise RuntimeError(
+            "pool tenancy is static: admitting a tenant would have to "
+            "re-carve the shared host segment across live worker "
+            "processes — rebuild the pool with the full tenant set "
+            "(build(..., tenants={...})), or serve elastic tenant sets "
+            "from the 'sharded' backend, whose attach_tenant is live")
+
+    def detach_tenant(self, name: str):
+        raise RuntimeError(
+            "pool tenancy is static: rebuild the pool with the reduced "
+            "tenant set (build(..., tenants={...})), or serve elastic "
+            "tenant sets from the 'sharded' backend")
+
     # -- stats & hygiene ----------------------------------------------------
     def worker_status(self) -> list[dict]:
         """Liveness heartbeat of every worker process — the operator (and
@@ -838,7 +1235,23 @@ class PoolStorage(EmbeddingStorage):
             "private_cold_bytes": int(private_bytes),
             "resident_cold_bytes": shared + int(private_bytes),
         }
-        return merged
+        if not self._tenants:
+            return merged
+        # tenant-scoped shape, split from the SAME worker snapshots so
+        # shared == fold of the tenant reports (the merge law, tenant axis)
+        unit_tenant = {u.unit_id: u.tenant for u in self._units}
+        entries: dict[str, list[dict]] = {n: [] for n in self._tenants}
+        for res in outs.values():
+            for uid, entry in res["units"].items():
+                owner = unit_tenant.get(int(uid))
+                if owner is not None:
+                    entries[owner].append(entry)
+        tenants = {name: self._merge_tenant_entries(name, entries[name])
+                   for name in self._tenants}
+        merged["device_bytes"] = sum(t["device_bytes"]
+                                     for t in tenants.values())
+        merged["num_tenants"] = len(tenants)
+        return {"tenants": tenants, "shared": merged}
 
     def reset_stats(self) -> None:
         self._fan_out_retry(lambda w: self._call(w, "reset_stats"),
@@ -874,4 +1287,8 @@ class PoolStorage(EmbeddingStorage):
         self._worker_units = []
         self._routers = {}
         self._degraded = False
+        self._tenants = {}
+        self._tenant_hints = {}
+        self._tenant_degraded = {}
+        self._tenant_depth = {}
         self.window.clear()

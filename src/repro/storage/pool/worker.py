@@ -25,6 +25,13 @@ its rows, and only the per-worker hot/warm device caches duplicate.
 Non-contiguous table groups fall back to a private gather copy; `stats`
 reports both byte counts so the dedup is measurable.
 
+Multi-tenant pools scope the shared verbs per tenant WITHOUT the worker
+knowing tenant names: the pool translates a tenant into the unit ids it
+owns on this worker and passes `unit_ids=` to the stats / flush /
+degraded / depth / refresh verbs (None keeps the whole-worker behavior).
+Tenant table runs are contiguous by namespace construction, so tenant
+units keep the zero-copy shared-segment views.
+
 Errors: a verb that raises is answered with an `err` frame (type, message,
 traceback) and the worker keeps serving — only pipe loss or `shutdown`
 ends the loop.
@@ -168,6 +175,16 @@ class _WorkerState:
             self.pending = None
         return {"aborted": True}
 
+    def _select(self, unit_ids):
+        """The units a verb applies to: all of them (unit_ids None — the
+        single-tenant/whole-worker case) or the listed subset (the pool's
+        tenant scoping; unknown ids are skipped, not an error, so a
+        raced detach stays benign)."""
+        if unit_ids is None:
+            return list(self.units.values())
+        return [self.units[int(i)] for i in unit_ids
+                if int(i) in self.units]
+
     def do_sleep(self, seconds):
         """Failure-injection aid: a synthetic straggler/hung worker (the
         transport-timeout tests drive `WorkerDeadError` through it)."""
@@ -218,43 +235,48 @@ class _WorkerState:
             ok &= bool(u.ps.stage(item["idx"]))
         return {"ok": ok}
 
-    def do_can_stage(self):
-        return {"ok": all(u.ps.can_stage() for u in self.units.values())}
+    def do_can_stage(self, unit_ids=None):
+        return {"ok": all(u.ps.can_stage()
+                          for u in self._select(unit_ids))}
 
     # -- refresh ------------------------------------------------------------
-    def do_plan_refresh(self):
+    def do_plan_refresh(self, unit_ids=None):
         """Per-unit hot-set re-planning from each PS's own live window
         (worker-side planning: the window never crosses the pipe)."""
         return {"plans": {u.unit_id: u.ps.plan_refresh()
-                          for u in self.units.values()}}
+                          for u in self._select(unit_ids)}}
 
-    def do_install_refresh(self, plans):
-        results = [u.ps.install_refresh(plans.get(uid))
-                   for uid, u in self.units.items()]
+    def do_install_refresh(self, plans, unit_ids=None):
+        results = [u.ps.install_refresh(plans.get(u.unit_id))
+                   for u in self._select(unit_ids)]
         return {"replanned": any(r["replanned"] for r in results),
                 "refreshes": max((r["refreshes"] for r in results),
                                  default=0)}
 
     # -- degraded / tuning --------------------------------------------------
-    def do_set_degraded(self, on):
-        self.degraded = bool(on)
-        for u in self.units.values():
+    def do_set_degraded(self, on, unit_ids=None):
+        if unit_ids is None:      # worker-level flag tracks whole-worker
+            self.degraded = bool(on)     # toggles only, not tenant slices
+        for u in self._select(unit_ids):
             u.ps.set_degraded(on)
         return {"degraded": self.degraded}
 
-    def do_set_prefetch_depth(self, depth):
-        for u in self.units.values():
+    def do_set_prefetch_depth(self, depth, unit_ids=None):
+        sel = self._select(unit_ids)
+        for u in sel:
             u.ps.set_prefetch_depth(int(depth))
-        return {"depth": max((u.ps.prefetch.depth
-                              for u in self.units.values()), default=0)}
+        return {"depth": max((u.ps.prefetch.depth for u in sel),
+                             default=0)}
 
-    def do_prefetch_depth(self):
+    def do_prefetch_depth(self, unit_ids=None):
         return {"depth": max((u.ps.prefetch.depth
-                              for u in self.units.values()), default=0)}
+                              for u in self._select(unit_ids)),
+                             default=0)}
 
-    def do_take_window_peak(self):
+    def do_take_window_peak(self, unit_ids=None):
         return {"peak": max((u.ps.prefetch.take_window_peak()
-                             for u in self.units.values()), default=0)}
+                             for u in self._select(unit_ids)),
+                            default=0)}
 
     def do_retune(self, shares):
         """Per-unit budget shares (pool-computed, by table count)."""
@@ -265,8 +287,8 @@ class _WorkerState:
                 results[int(uid)] = u.ps.retune(int(share))
         return {"results": results}
 
-    def do_flush(self):
-        for u in self.units.values():
+    def do_flush(self, unit_ids=None):
+        for u in self._select(unit_ids):
             u.ps.flush()
         return {"flushed": True}
 
@@ -280,18 +302,26 @@ class _WorkerState:
         return {"flushed": sorted(int(u) for u in unit_ids)}
 
     # -- stats --------------------------------------------------------------
-    def do_stats(self):
+    @staticmethod
+    def _device_bytes(ps) -> int:
+        """Device-resident cache footprint of one unit's PS: hot block +
+        warm payload rows (cold rows are host-side and excluded)."""
+        return int((ps.num_hot + ps.cfg.warm_slots)
+                   * ps.cold.num_tables * ps.cold.dim
+                   * ps.cold.tables.dtype.itemsize)
+
+    def do_stats(self, unit_ids=None):
+        sel = self._select(unit_ids)
         return {
-            "units": {u.unit_id: {"shard": u.shard, "stats": u.ps.stats()}
-                      for u in self.units.values()},
-            "host_tier_bytes": sum(u.host_bytes
-                                   for u in self.units.values()),
-            "private_tier_bytes": sum(u.private_bytes
-                                      for u in self.units.values()),
+            "units": {u.unit_id: {"shard": u.shard, "stats": u.ps.stats(),
+                                  "device_bytes": self._device_bytes(u.ps)}
+                      for u in sel},
+            "host_tier_bytes": sum(u.host_bytes for u in sel),
+            "private_tier_bytes": sum(u.private_bytes for u in sel),
         }
 
-    def do_reset_stats(self):
-        for u in self.units.values():
+    def do_reset_stats(self, unit_ids=None):
+        for u in self._select(unit_ids):
             u.ps.reset_stats()
         return {"reset": True}
 

@@ -53,6 +53,23 @@ Stats: per-shard counters merge into ONE report — counter keys sum, rates
 are recomputed from the summed true counters, instantaneous gauges
 (`queue_depth`) and per-shard peaks (`max_queue_depth`) take the per-shard
 max, and the unmerged snapshots ride along under `"per_shard"`.
+
+Multi-tenant mode (`build(..., tenants={name: table_count})`): the table
+axis tiles into contiguous per-tenant namespaces and every unit becomes
+TENANT-PURE — each shard gets one solo unit per tenant instead of one
+overall (a `ParameterServer` serves full batches over its whole table
+group, so a unit that mixed tenants could never serve one tenant's
+lookup). The whole-backend `lookup()`/`stage()` become undefined (they
+raise); tenants serve through `tenant_lookup()` & friends — normally via
+the `repro.storage.tenancy.TenantStorage` facade — with tenant-local
+[B, T_tenant, L] indices mapped onto each unit's `cols`. Hot/warm
+capacity stays ONE shared device budget, re-split per tenant by
+`tenant_retune_capacities` (driven by `repro.ps.tuning.BudgetArbiter`);
+`stats()` reports `{"tenants": {...}, "shared": {...}}`; migration is
+disabled (the arbiter, not placement moves, is the live fairness
+mechanism under tenancy). `attach_tenant`/`detach_tenant` add/remove a
+tenant mid-serving without touching any sibling unit — sibling
+bit-exactness is structural, not incidental.
 """
 from __future__ import annotations
 
@@ -71,6 +88,7 @@ from repro.storage.placement import (DEFAULT_MIGRATION_THRESHOLD,
                                      ShardPlacement, plan_migration,
                                      plan_shard_placement)
 from repro.storage.registry import register
+from repro.storage.tenancy import TenantNamespace, resolve_tenants
 from repro.storage.tiered import (_extract_tables, _reject_double_remap,
                                   build_ps_config)
 
@@ -174,13 +192,24 @@ class _Unit:
     table's copy (`chunk=(k, r)`: batch slice k of r). Replica units
     accumulate service-cost observations (`service_s` over `served_rows`)
     for the table's `ReplicaRouter`; only their owning shard worker
-    writes them."""
+    writes them.
+
+    Under tenancy a unit is tenant-pure: `tenant` names its owner and
+    `cols` maps `table_ids` to the columns of the CALLER's [B, T, L]
+    batch — tenant-local columns for a tenant unit, the global ids
+    otherwise."""
     shard: int
     table_ids: np.ndarray                 # global table ids, ascending
     ps: object                            # repro.ps.ParameterServer
     chunk: Optional[tuple[int, int]] = None
     service_s: float = 0.0                # replica units: window lookup time
     served_rows: int = 0                  # replica units: window batch rows
+    tenant: Optional[str] = None
+    cols: Optional[np.ndarray] = None     # caller-batch columns
+
+    def __post_init__(self):
+        if self.cols is None:
+            self.cols = self.table_ids
 
 
 @register("sharded")
@@ -205,6 +234,9 @@ class ShardedStorage(EmbeddingStorage):
         self._ps_cfg = None
         self._replicate_factor = 0.0
         self._degraded = False        # backend-level: survives migration
+        self._tenants: dict[str, TenantNamespace] = {}
+        self._tenant_hints: dict[str, int] = {}
+        self._tenant_degraded: dict[str, bool] = {}
         # backend-level sliding traffic window ([B, T, L] real-traffic
         # slices) — migration plans from FULL batches, which per-unit
         # windows (sliced tables, sliced replicas) cannot reconstruct
@@ -244,18 +276,34 @@ class ShardedStorage(EmbeddingStorage):
 
     def _construct_units(self, plc: ShardPlacement, tables: np.ndarray,
                          ps_cfg, trace: Optional[np.ndarray] = None,
-                         hot_plans: Optional[dict] = None
+                         hot_plans: Optional[dict] = None,
+                         tenants: Optional[dict] = None
                          ) -> tuple[list[_Unit], list[list[_Unit]]]:
         """Build every unit's ParameterServer for `plc` WITHOUT touching
         any live state — the shared build-before-teardown machinery of
         `build()` and `install_migration()`. A constructor failure here
         raises with nothing torn down and nothing leaked (units already
-        constructed are closed again)."""
+        constructed are closed again).
+
+        With `tenants` ({name: TenantNamespace}), each shard's solo group
+        splits into one unit PER TENANT: a ParameterServer asserts
+        full-table coverage on every lookup, so serving tenants
+        independently requires units that never mix them. Replica units
+        are single-table, hence tenant-pure already — they just get
+        tagged."""
         from repro.ps import ParameterServer
         units: list[_Unit] = []
         shard_units: list[list[_Unit]] = [[] for _ in range(plc.num_shards)]
 
-        def add_unit(shard, ids, chunk):
+        def owner_of(t: int) -> Optional[TenantNamespace]:
+            if not tenants:
+                return None
+            for ns in tenants.values():
+                if ns.owns(t):
+                    return ns
+            raise ValueError(f"table {t} belongs to no tenant namespace")
+
+        def add_unit(shard, ids, chunk, ns=None):
             ids = np.asarray(ids, np.int64)
             if hot_plans is not None:
                 plans = [hot_plans[int(t)] for t in ids]
@@ -264,19 +312,27 @@ class ShardedStorage(EmbeddingStorage):
                 ps = ParameterServer(
                     tables[ids], ps_cfg,
                     trace=None if trace is None else trace[:, ids])
-            unit = _Unit(shard=shard, table_ids=ids, ps=ps, chunk=chunk)
+            unit = _Unit(shard=shard, table_ids=ids, ps=ps, chunk=chunk,
+                         tenant=None if ns is None else ns.name,
+                         cols=None if ns is None else ns.local(ids))
             units.append(unit)
             shard_units[shard].append(unit)
 
         try:
             for s, tabs in enumerate(plc.shard_tables):
                 solo = [t for t in tabs if len(plc.replicas[t]) == 1]
-                if solo:
+                if tenants:
+                    groups: dict[str, list[int]] = {}
+                    for t in solo:
+                        groups.setdefault(owner_of(t).name, []).append(t)
+                    for name, ids in groups.items():
+                        add_unit(s, ids, None, tenants[name])
+                elif solo:
                     add_unit(s, solo, None)
             for t in plc.replicated_tables:
                 owners = plc.replicas[t]
                 for k, s in enumerate(owners):
-                    add_unit(s, [t], (k, len(owners)))
+                    add_unit(s, [t], (k, len(owners)), owner_of(t))
         except BaseException:
             for u in units:               # don't leak worker threads
                 u.ps.close()
@@ -339,6 +395,7 @@ class ShardedStorage(EmbeddingStorage):
               parallel: bool = True,
               migration_threshold: Optional[float] = None,
               replicate_factor: float = 0.0,
+              tenants: Optional[dict] = None,
               **ps_cfg_overrides) -> "ShardedStorage":
         """Assign tables to `num_shards` shard workers and build one
         ParameterServer per placement unit (same `PSConfig` for all —
@@ -361,6 +418,11 @@ class ShardedStorage(EmbeddingStorage):
         `replicate_factor` forwards to the re-planner so a migration may
         also add/remove replicas of a dominant table.
 
+        `tenants` ({name: table_count}, declaration order = contiguous
+        layout, counts must tile the table axis) turns on multi-tenant
+        mode: tenant-pure units, `tenant_*` verbs, tenant-shaped stats,
+        migration disabled. See the module docstring.
+
         Rebuild-safe: on a live backend every new ParameterServer is
         constructed BEFORE the old units tear down, so a constructor
         failure (bad trace shape, exploding config) leaves the old shards
@@ -376,12 +438,22 @@ class ShardedStorage(EmbeddingStorage):
         # everything that can raise runs BEFORE the old backend is touched:
         # placement resolution AND full unit construction — a rejected or
         # failed rebuild must leave the old shards serving
+        spaces = (resolve_tenants(tenants, cfg.num_tables)
+                  if tenants else {})
+        if spaces and migration_threshold is not None:
+            raise ValueError("migration is disabled under tenancy (the "
+                             "arbiter re-splits capacity instead) — drop "
+                             "migration_threshold or tenants")
         plc = self._resolve_placement(placement, num_shards, trace)
         units, shard_units = self._construct_units(plc, tables, ps_cfg,
-                                                   trace=trace)
+                                                   trace=trace,
+                                                   tenants=spaces or None)
         had_pool = self._pool is not None
         self._degraded = False        # a full (re)build starts exact
         self._install_units(plc, units, shard_units)
+        self._tenants = spaces
+        self._tenant_hints = {}
+        self._tenant_degraded = {name: False for name in spaces}
         self._tables = tables
         self._ps_cfg = ps_cfg
         self.migration_threshold = migration_threshold
@@ -407,6 +479,27 @@ class ShardedStorage(EmbeddingStorage):
             raise RuntimeError(
                 "storage='sharded' needs its shard servers: call "
                 "ebc.storage.build(params, ps_cfg, num_shards=N) first")
+
+    def _reject_under_tenancy(self, verb: str) -> None:
+        if self._tenants:
+            raise RuntimeError(
+                f"this backend has tenants attached "
+                f"({sorted(self._tenants)}) — whole-backend {verb}() is "
+                f"undefined under tenancy; serve each tenant through its "
+                f"TenantStorage view (tenant_{verb})")
+
+    def _ns(self, name: str) -> TenantNamespace:
+        try:
+            return self._tenants[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown tenant {name!r}; attached tenants: "
+                f"{sorted(self._tenants)}") from None
+
+    def _tenant_by_shard(self, name: str) -> list[list[_Unit]]:
+        self._ns(name)
+        return [[u for u in g if u.tenant == name]
+                for g in self._shard_units]
 
     def _map_shards(self, fn) -> list:
         """Apply fn(shard_index) across shards — via the pool when one
@@ -435,26 +528,23 @@ class ShardedStorage(EmbeddingStorage):
         return _chunk_bounds(batch, r, k)
 
     # -- data path ----------------------------------------------------------
-    def lookup(self, params: dict, indices, weights=None, *,
-               pre_remapped: bool = False):
-        """Fan the [B, T, L] lookup out by placement unit, join, scatter
-        the per-unit row blocks into one [B, T, L, D] buffer, pool on
-        device — bit-identical to the single-server tiered path. Replica
+    def _fan_lookup(self, by_shard: list[list[_Unit]], idx: np.ndarray,
+                    weights, valid: Optional[int], T: int, pooling: int):
+        """Fan a [B, T, L] lookup out over `by_shard`'s units, join,
+        scatter the per-unit blocks into one output buffer, pool on
+        device — bit-identical to the single-server tiered path. Each
+        unit's `cols` maps its tables onto the CALLER's batch columns, so
+        the same fan-out serves whole-backend lookups (cols == global
+        ids) and tenant-local lookups (cols == namespace-local). Replica
         units are timed (service seconds over routed rows) to feed the
-        router; the real-traffic slice lands in the backend window that
-        migration plans from."""
+        router."""
         from repro.core.embedding import _pool_rows_core
-        self._require_built()
-        idx = np.asarray(indices)
-        B, T, L = idx.shape
-        dtype = self.shards[0].cold.tables.dtype
-        dim = self.shards[0].cold.dim
-        valid, self._valid_hint = self._valid_hint, None
-        real = idx if valid is None else idx[:valid]
-        if real.shape[0]:
-            self.window.append(real)
+        B, _, L = idx.shape
+        flat = [u for g in by_shard for u in g]
+        dtype = flat[0].ps.cold.tables.dtype
+        dim = flat[0].ps.cold.dim
 
-        if all(ps.supports_fused() for ps in self.shards):
+        if all(u.ps.supports_fused() for u in flat):
             # fused fan-out: each unit pools ITS (batch-slice, table-group)
             # block inside one kernel launch, so the join scatters pooled
             # [b, t, D] blocks instead of raw [b, t, L, D] rows. Each
@@ -465,7 +555,7 @@ class ShardedStorage(EmbeddingStorage):
             w_np = None if weights is None else np.asarray(weights)
 
             def run_shard_fused(s):
-                for u in self._shard_units[s]:
+                for u in by_shard[s]:
                     lo, hi = self._unit_bounds(u, B)
                     if lo == hi:
                         continue
@@ -473,19 +563,19 @@ class ShardedStorage(EmbeddingStorage):
                         u.ps.hint_valid(int(np.clip(valid - lo, 0,
                                                     hi - lo)))
                     w_u = (None if w_np is None
-                           else w_np[lo:hi][:, u.table_ids])
+                           else w_np[lo:hi][:, u.cols])
                     if u.chunk is not None:
                         t0 = time.perf_counter()
                         pooled = u.ps.lookup_fused(
-                            idx[lo:hi][:, u.table_ids], w_u,
+                            idx[lo:hi][:, u.cols], w_u,
                             combine=self.cfg.combine)
                         u.service_s += time.perf_counter() - t0
                         u.served_rows += hi - lo
                     else:
                         pooled = u.ps.lookup_fused(
-                            idx[lo:hi][:, u.table_ids], w_u,
+                            idx[lo:hi][:, u.cols], w_u,
                             combine=self.cfg.combine)
-                    pooled_out[lo:hi, u.table_ids] = np.asarray(pooled)
+                    pooled_out[lo:hi, u.cols] = np.asarray(pooled)
 
             self._map_shards(run_shard_fused)
             return jnp.asarray(pooled_out)
@@ -493,7 +583,7 @@ class ShardedStorage(EmbeddingStorage):
         out = np.empty((B, T, L, dim), dtype)
 
         def run_shard(s):
-            for u in self._shard_units[s]:
+            for u in by_shard[s]:
                 lo, hi = self._unit_bounds(u, B)
                 if lo == hi:
                     continue
@@ -501,21 +591,35 @@ class ShardedStorage(EmbeddingStorage):
                     u.ps.hint_valid(int(np.clip(valid - lo, 0, hi - lo)))
                 if u.chunk is not None:
                     t0 = time.perf_counter()
-                    rows = u.ps.lookup(idx[lo:hi, u.table_ids])
+                    rows = u.ps.lookup(idx[lo:hi, u.cols])
                     u.service_s += time.perf_counter() - t0
                     u.served_rows += hi - lo
                 else:
-                    rows = u.ps.lookup(idx[lo:hi, u.table_ids])
-                out[lo:hi, u.table_ids] = rows
+                    rows = u.ps.lookup(idx[lo:hi, u.cols])
+                out[lo:hi, u.cols] = rows
 
         self._map_shards(run_shard)
         rows_t = jnp.swapaxes(jnp.asarray(out), 0, 1)   # [T, B, L, D]
         w_t = (None if weights is None
                else jnp.swapaxes(jnp.asarray(weights), 0, 1))
         # eager on purpose — same 1-ULP rationale as the tiered backend
-        pooled = _pool_rows_core(rows_t, w_t, self.cfg.combine,
-                                 self.cfg.pooling)
+        pooled = _pool_rows_core(rows_t, w_t, self.cfg.combine, pooling)
         return jnp.swapaxes(pooled, 0, 1)               # [B, T, D]
+
+    def lookup(self, params: dict, indices, weights=None, *,
+               pre_remapped: bool = False):
+        """Whole-backend [B, T, L] lookup; the real-traffic slice lands in
+        the backend window that migration plans from. Undefined under
+        tenancy — serve through the per-tenant views instead."""
+        self._require_built()
+        self._reject_under_tenancy("lookup")
+        idx = np.asarray(indices)
+        valid, self._valid_hint = self._valid_hint, None
+        real = idx if valid is None else idx[:valid]
+        if real.shape[0]:
+            self.window.append(real)
+        return self._fan_lookup(self._shard_units, idx, weights, valid,
+                                idx.shape[1], self.cfg.pooling)
 
     # -- prefetch -----------------------------------------------------------
     def can_stage(self) -> bool:
@@ -525,21 +629,25 @@ class ShardedStorage(EmbeddingStorage):
         return bool(self.shards) and all(ps.can_stage()
                                          for ps in self.shards)
 
-    def stage(self, next_indices: np.ndarray) -> bool:
-        self._require_built()
-        idx = np.asarray(next_indices)
+    def _fan_stage(self, by_shard: list[list[_Unit]],
+                   idx: np.ndarray) -> bool:
         B = idx.shape[0]
 
         def run_shard(s):
             ok = True
-            for u in self._shard_units[s]:
+            for u in by_shard[s]:
                 lo, hi = self._unit_bounds(u, B)
                 if lo == hi:
                     continue
-                ok &= u.ps.stage(idx[lo:hi, u.table_ids])
+                ok &= u.ps.stage(idx[lo:hi, u.cols])
             return ok
 
         return all(self._map_shards(run_shard))
+
+    def stage(self, next_indices: np.ndarray) -> bool:
+        self._require_built()
+        self._reject_under_tenancy("stage")
+        return self._fan_stage(self._shard_units, np.asarray(next_indices))
 
     def hint_valid(self, n: int) -> None:
         """Recorded here and applied per unit at the next lookup (replica
@@ -560,6 +668,8 @@ class ShardedStorage(EmbeddingStorage):
         self._degraded = bool(on)
         for ps in self.shards:
             ps.set_degraded(on)
+        for name in self._tenant_degraded:   # keep per-tenant flags honest
+            self._tenant_degraded[name] = bool(on)
         return True
 
     # -- refresh ------------------------------------------------------------
@@ -679,6 +789,10 @@ class ShardedStorage(EmbeddingStorage):
         materially. The plan carries per-table hot plans computed from the
         same window, so `install_migration` only constructs and swaps."""
         self._require_built()
+        if self._tenants:
+            # under tenancy fairness is the arbiter's job; a placement
+            # move would have to preserve tenant-purity anyway
+            return None
         if window is None:
             # only the backend-level full-batch window is needed — don't
             # snapshot every unit's per-PS window (refresh_window) just
@@ -772,12 +886,261 @@ class ShardedStorage(EmbeddingStorage):
                 "warm_slots": max(r["warm_slots"] for r in done),
                 "budget_bytes": int(budget_bytes)}
 
+    def _unit_device_bytes(self, u: _Unit) -> int:
+        """Device-resident cache footprint of one unit: the hot block
+        ([T, K, D] pin) plus the warm payload (warm_slots rows per
+        table). Cold rows live on host and don't count."""
+        ps = u.ps
+        return int((ps.num_hot + ps.cfg.warm_slots)
+                   * ps.cold.num_tables * ps.cold.dim
+                   * ps.cold.tables.dtype.itemsize)
+
+    def device_bytes(self) -> int:
+        return sum(self._unit_device_bytes(u) for u in self._units)
+
+    # -- tenancy ------------------------------------------------------------
+    @property
+    def tenants(self) -> dict:
+        """Attached tenant namespaces, {name: TenantNamespace} (copy)."""
+        return dict(self._tenants)
+
+    def _tenant_units(self, name: str) -> list[_Unit]:
+        self._ns(name)
+        return [u for u in self._units if u.tenant == name]
+
+    def tenant_lookup(self, name: str, indices, weights=None):
+        """One tenant's [B, T_tenant, L] lookup over its own units —
+        the same fan-out/scatter/pool as `lookup()`, just restricted to
+        tenant-pure units with namespace-local columns. Pooling divides
+        by THIS batch's L (tenants may use different bag sizes)."""
+        self._require_built()
+        idx = np.asarray(indices)
+        by_shard = self._tenant_by_shard(name)
+        valid = self._tenant_hints.pop(name, None)
+        return self._fan_lookup(by_shard, idx, weights, valid,
+                                idx.shape[1], idx.shape[2])
+
+    def tenant_stage(self, name: str, next_indices) -> bool:
+        self._require_built()
+        return self._fan_stage(self._tenant_by_shard(name),
+                               np.asarray(next_indices))
+
+    def tenant_can_stage(self, name: str) -> bool:
+        units = self._tenant_units(name)
+        return bool(units) and all(u.ps.can_stage() for u in units)
+
+    def tenant_hint_valid(self, name: str, n: int) -> None:
+        self._ns(name)
+        self._tenant_hints[name] = int(n)
+
+    def tenant_refresh_window(self, name: str) -> dict:
+        return {"units": [list(u.ps.window)
+                          for u in self._tenant_units(name)],
+                "epoch": self._epoch}
+
+    def tenant_plan_refresh(self, name: str, window=None):
+        self._require_built()
+        if window is None:
+            window = self.tenant_refresh_window(name)
+        units = self._tenant_units(name)
+        if window["epoch"] != self._epoch or \
+                len(window["units"]) != len(units):
+            return None
+        plans = [u.ps.plan_refresh(w)
+                 for u, w in zip(units, window["units"])]
+        if all(p is None for p in plans):
+            return None
+        return {"units": plans, "epoch": window["epoch"]}
+
+    def tenant_install_refresh(self, name: str, plan) -> dict:
+        self._require_built()
+        units = self._tenant_units(name)
+        if plan is None or plan["epoch"] != self._epoch or \
+                len(plan["units"]) != len(units):
+            results = [u.ps.install_refresh(None) for u in units]
+            return {"replanned": False,
+                    "refreshes": max((r["refreshes"] for r in results),
+                                     default=0)}
+        results = [u.ps.install_refresh(p)
+                   for u, p in zip(units, plan["units"])]
+        return {"replanned": any(r["replanned"] for r in results),
+                "refreshes": max(r["refreshes"] for r in results)}
+
+    def tenant_prefetch_depth(self, name: str) -> int:
+        return max((u.ps.prefetch.depth for u in self._tenant_units(name)),
+                   default=0)
+
+    def tenant_set_prefetch_depth(self, name: str, depth: int) -> bool:
+        units = self._tenant_units(name)
+        for u in units:
+            u.ps.set_prefetch_depth(depth)
+        return bool(units)
+
+    def tenant_take_prefetch_window_peak(self, name: str) -> int:
+        return max((u.ps.prefetch.take_window_peak()
+                    for u in self._tenant_units(name)), default=0)
+
+    def tenant_retune_capacities(self, name: str,
+                                 budget_bytes: int) -> Optional[dict]:
+        """Re-split ONE TENANT's slice of the shared device budget across
+        its units (by table count, same law as the whole-backend
+        retune). The arbiter calls this once per tenant with shares that
+        sum to ≤ the shared budget, so the backend total stays within
+        it."""
+        self._require_built()
+        units = self._tenant_units(name)
+        total_tables = sum(len(u.table_ids) for u in units)
+        if not total_tables:
+            return None
+        results = []
+        for u in units:
+            share = int(budget_bytes * len(u.table_ids) / total_tables)
+            results.append(u.ps.retune(share))
+        done = [r for r in results if r is not None]
+        if not done:
+            return None
+        return {"tenant": name,
+                "retuned_units": len(done),
+                "hot_rows": max(r["hot_rows"] for r in done),
+                "warm_slots": max(r["warm_slots"] for r in done),
+                "budget_bytes": int(budget_bytes)}
+
+    def tenant_device_bytes(self, name: str) -> int:
+        return sum(self._unit_device_bytes(u)
+                   for u in self._tenant_units(name))
+
+    def tenant_degraded(self, name: str) -> bool:
+        self._ns(name)
+        return self._tenant_degraded.get(name, False)
+
+    def tenant_set_degraded(self, name: str, on: bool) -> bool:
+        units = self._tenant_units(name)
+        if not units:
+            return False
+        self._tenant_degraded[name] = bool(on)
+        for u in units:
+            u.ps.set_degraded(on)
+        return True
+
+    def tenant_stats(self, name: str) -> dict:
+        """One tenant's merged report (same merge law as the whole
+        backend; `per_shard` covers only the shards holding this tenant)
+        plus its resident `device_bytes`."""
+        per_shard = []
+        for g in self._tenant_by_shard(name):
+            if not g:
+                continue
+            if len(g) == 1:
+                per_shard.append(g[0].ps.stats())
+            else:
+                merged = merge_shard_stats([u.ps.stats() for u in g])
+                merged.pop("per_shard", None)
+                merged.pop("num_shards", None)
+                per_shard.append(merged)
+        out = merge_shard_stats(per_shard)
+        out["tenant"] = name
+        out["device_bytes"] = self.tenant_device_bytes(name)
+        return out
+
+    def tenant_reset_stats(self, name: str) -> None:
+        for u in self._tenant_units(name):
+            u.ps.reset_stats()
+            u.service_s, u.served_rows = 0.0, 0
+
+    def tenant_flush(self, name: str) -> None:
+        for u in self._tenant_units(name):
+            u.ps.flush()
+
+    def attach_tenant(self, name: str, tables: np.ndarray, *,
+                      trace: Optional[np.ndarray] = None
+                      ) -> TenantNamespace:
+        """Admit a new tenant mid-serving: build its units FIRST (one per
+        shard, its tables split contiguously), then append — no sibling
+        unit is touched, moved, or rebuilt, so sibling bit-exactness is
+        structural. `tables` is the tenant's [T_new, R, D] stack (same
+        rows/dim/dtype as the shared build); `trace` [N, T_new, L] seeds
+        its hot plans. The tenant starts with the build-time PSConfig
+        capacities; the next arbiter round re-splits the shared budget
+        over the new tenant set."""
+        from repro.ps import ParameterServer
+        self._require_built()
+        if not self._tenants:
+            raise RuntimeError("attach_tenant needs a backend built with "
+                               "tenants={...}")
+        if name in self._tenants:
+            raise ValueError(f"tenant {name!r} is already attached")
+        tables = np.asarray(tables)
+        if tables.ndim != 3 or tables.shape[1] != self.cfg.rows or \
+                tables.shape[2] != self.cfg.dim:
+            raise ValueError(
+                f"tenant tables must be [T, {self.cfg.rows}, "
+                f"{self.cfg.dim}], got {tables.shape}")
+        if tables.dtype != self._tables.dtype:
+            raise ValueError(f"tenant dtype {tables.dtype} != shared "
+                             f"{self._tables.dtype}")
+        start = int(self._tables.shape[0])
+        ns = TenantNamespace(str(name), start, start + tables.shape[0])
+        num_shards = len(self._shard_units)
+        new_units: list[_Unit] = []
+        try:
+            for s, ids in enumerate(np.array_split(
+                    np.arange(ns.start, ns.stop, dtype=np.int64),
+                    num_shards)):
+                if not len(ids):
+                    continue
+                local = ns.local(ids)
+                ps = ParameterServer(
+                    tables[local], self._ps_cfg,
+                    trace=None if trace is None else trace[:, local])
+                new_units.append(_Unit(shard=s, table_ids=ids, ps=ps,
+                                       tenant=ns.name, cols=local))
+        except BaseException:
+            for u in new_units:
+                u.ps.close()
+            raise
+        # commit (serving thread only): append, never reshuffle
+        self._tables = np.concatenate([self._tables, tables], axis=0)
+        for u in new_units:
+            self._units.append(u)
+            self._shard_units[u.shard].append(u)
+        self.shards = [u.ps for u in self._units]
+        self._tenants[ns.name] = ns
+        self._tenant_degraded[ns.name] = False
+        self._epoch += 1          # in-flight refresh plans re-plan next cycle
+        return ns
+
+    def detach_tenant(self, name: str) -> int:
+        """Evict a tenant mid-serving: close ITS units only; siblings keep
+        serving the same ParameterServers (namespaces of remaining
+        tenants are stable — global table ids are never renumbered).
+        Returns the number of units released."""
+        self._require_built()
+        removed = self._tenant_units(name)    # validates the name
+        for u in removed:
+            u.ps.close()
+        self._units = [u for u in self._units if u.tenant != name]
+        self._shard_units = [[u for u in g if u.tenant != name]
+                             for g in self._shard_units]
+        self.shards = [u.ps for u in self._units]
+        del self._tenants[name]
+        self._tenant_hints.pop(name, None)
+        self._tenant_degraded.pop(name, None)
+        self._epoch += 1
+        return len(removed)
+
     # -- stats & hygiene ----------------------------------------------------
     def stats(self) -> dict:
         """One merged report; `per_shard` holds one entry per SHARD (a
-        multi-unit shard's units are pre-merged into its entry)."""
+        multi-unit shard's units are pre-merged into its entry).
+
+        Under tenancy the report is tenant-scoped instead:
+        `{"tenants": {name: merged-per-tenant}, "shared": merged-all}` —
+        the shared half is exactly what the flat report would have said,
+        so the single-tenant flat shape is its one-key degenerate case."""
         per_shard = []
         for units in self._shard_units:
+            if not units:
+                continue
             if len(units) == 1:
                 per_shard.append(units[0].ps.stats())
             else:
@@ -785,7 +1148,14 @@ class ShardedStorage(EmbeddingStorage):
                 merged.pop("per_shard", None)
                 merged.pop("num_shards", None)
                 per_shard.append(merged)
-        return merge_shard_stats(per_shard)
+        merged_all = merge_shard_stats(per_shard)
+        if not self._tenants:
+            return merged_all
+        merged_all["device_bytes"] = self.device_bytes()
+        merged_all["num_tenants"] = len(self._tenants)
+        return {"tenants": {name: self.tenant_stats(name)
+                            for name in self._tenants},
+                "shared": merged_all}
 
     def reset_stats(self) -> None:
         for ps in self.shards:
@@ -816,4 +1186,7 @@ class ShardedStorage(EmbeddingStorage):
         self._shard_units = []
         self._routers = {}
         self._degraded = False
+        self._tenants = {}
+        self._tenant_hints = {}
+        self._tenant_degraded = {}
         self.window.clear()

@@ -6,9 +6,8 @@ and maps its surface one-to-one onto the `EmbeddingStorage` verbs, so the
 generic serving drivers get prefetch overlap and periodic re-pinning with
 no PS-specific code.
 
-`build()` carries the construction logic that used to live on
-`EmbeddingBagCollection.build_parameter_server`: either an explicit
-`PSConfig`, or trace-driven tier auto-tuning under a device byte budget
+`build()` carries the construction logic: either an explicit `PSConfig`,
+or trace-driven tier auto-tuning under a device byte budget
 (`core.plan.plan_tier_capacities` -> `PSConfig.from_plan`).
 """
 from __future__ import annotations
@@ -78,9 +77,9 @@ class TieredStorage(EmbeddingStorage):
     @classmethod
     def adopt(cls, ps) -> "TieredStorage":
         """Wrap an already-built `ParameterServer` (no collection bound) so
-        legacy callers holding a raw PS can talk to protocol-driven code
-        (`InferenceServer(ps=...)` shim). `lookup()` through the collection
-        is unavailable on an adopted instance; the serving verbs all work."""
+        callers holding a raw PS can talk to protocol-driven code.
+        `lookup()` through the collection is unavailable on an adopted
+        instance; the serving verbs all work."""
         return cls(None, ps=ps)
 
     # -- descriptor ---------------------------------------------------------
@@ -141,8 +140,7 @@ class TieredStorage(EmbeddingStorage):
                     "worker is joined) — build() it again before serving")
             raise RuntimeError(
                 f"storage={self.name!r} needs a ParameterServer: call "
-                f"ebc.storage.build(params, ps_cfg) (or the deprecated "
-                f"build_parameter_server shim) first")
+                f"ebc.storage.build(params, ps_cfg) first")
 
     # -- data path ----------------------------------------------------------
     def lookup(self, params: dict, indices, weights=None, *,

@@ -3,16 +3,20 @@
 Rate profiles x hotness models compose into deterministic DLRM traces
 (`generators`), a `VirtualClock` puts the serving loop on trace time
 (`clock`), and `replay()` drives a `ServingSession` through a stream
-while recording an overload timeline (`replay`). See docs/architecture.md
-for the subsystem diagram and docs/serving.md for the operator guide.
+while recording an overload timeline; `replay_tenants()` merges N
+per-tenant streams through one `TenantManager` on the same clock, so
+tenants contend for real serving time (`replay`). See
+docs/architecture.md for the subsystem diagram and docs/serving.md for
+the operator guide.
 """
 from repro.traffic.clock import VirtualClock
 from repro.traffic.generators import (TRACE_KINDS, DiurnalRate,
                                       FlashCrowdRate, SteadyRate,
                                       TimedQuery, TrafficGenerator,
                                       make_traffic)
-from repro.traffic.replay import ReplayReport, ReplaySnapshot, replay
+from repro.traffic.replay import (ReplayReport, ReplaySnapshot, replay,
+                                  replay_tenants)
 
 __all__ = ["VirtualClock", "TimedQuery", "TrafficGenerator", "make_traffic",
            "SteadyRate", "DiurnalRate", "FlashCrowdRate", "TRACE_KINDS",
-           "ReplayReport", "ReplaySnapshot", "replay"]
+           "ReplayReport", "ReplaySnapshot", "replay", "replay_tenants"]

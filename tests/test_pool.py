@@ -20,7 +20,11 @@ Pins the acceptance contract of the `"pool"` backend:
   * merged stats follow the exact sharded merge law (shared parametrized
     schema test: counters sum, `queue_depth` is a per-shard max);
   * the PR 4–6 serving loop (auto-tuned migration inside a live
-    `ServingSession`) works unchanged over processes.
+    `ServingSession`) works unchanged over processes;
+  * tenancy over processes: per-tenant lookups are bit-exact slices of
+    the shared pool, the stats merge law extends to the tenant axis,
+    pool tenancy is STATIC (attach/detach raise — rebuild instead), and
+    per-tenant depth/degraded knobs survive a worker respawn.
 """
 import numpy as np
 import jax
@@ -493,3 +497,94 @@ def test_pool_session_autotune_migrates(dense_ref):
     assert pct["migrations"] == len(migs)
     assert model.ebc.storage.placement.strategy == "balanced"
     model.ebc.storage.close()
+
+
+# ---------------------------------------------------------------------------
+# tenancy over processes: static namespaces, merge law, respawn re-apply
+# ---------------------------------------------------------------------------
+
+def _pool_tenants(params, **kw):
+    ebc = EmbeddingBagCollection(_stage_cfg("pool"))
+    kw.setdefault("num_workers", 2)
+    kw.setdefault("tenants", {"a": 2, "b": 4})
+    ebc.storage.build(params, PSConfig(hot_rows=32, warm_slots=16), **kw)
+    return ebc.storage
+
+
+def _device_slice_ref(tables, idx):
+    """Dense reference over a tenant's slice of the shared tables."""
+    cfg = EmbeddingStageConfig(num_tables=tables.shape[0],
+                               rows=ROWS, dim=DIM, pooling=idx.shape[2],
+                               storage="device")
+    return np.asarray(EmbeddingBagCollection(cfg).apply(
+        {"tables": tables}, idx))
+
+
+def test_pool_tenants_bit_exact_and_merge_law(dense_ref):
+    """Two tenants over one worker pool: per-tenant lookups bit-exact
+    against the dense slice, whole-backend lookup undefined, tenant-axis
+    stats merge law (counters and device bytes fold into the shared
+    report), pool tenancy static (typed attach/detach errors)."""
+    from repro.storage.tenancy import TenantStorage
+    _, params = dense_ref
+    tables = np.asarray(params["tables"])
+    st = _pool_tenants(params)
+    try:
+        rng = np.random.default_rng(0)
+        ia = rng.integers(0, ROWS, size=(8, 2, POOL)).astype(np.int32)
+        ib = rng.integers(0, ROWS, size=(8, 4, 3)).astype(np.int32)
+        va, vb = TenantStorage(st, "a"), TenantStorage(st, "b")
+        ra = _device_slice_ref(tables[0:2], ia)
+        rb = _device_slice_ref(tables[2:6], ib)   # per-tenant pooling L
+        assert np.array_equal(np.asarray(va.lookup({}, ia)), ra)
+        assert np.array_equal(np.asarray(vb.lookup({}, ib)), rb)
+        with pytest.raises(RuntimeError, match="tenancy"):
+            st.lookup({}, np.zeros((1, TABLES, POOL), np.int32))
+        st_all = st.stats()
+        assert set(st_all) == {"tenants", "shared"}
+        ta, tb, sh = (st_all["tenants"]["a"], st_all["tenants"]["b"],
+                      st_all["shared"])
+        for key in ("total_accesses", "hot_hits", "warm_hits",
+                    "cold_misses", "device_bytes"):
+            assert ta[key] + tb[key] == sh[key], key
+        assert sh["num_tenants"] == 2 and "pool" in sh
+        # per-tenant runtime knobs are isolated
+        assert va.set_degraded(True) and va.degraded()
+        assert not vb.degraded()
+        va.set_degraded(False)
+        assert va.set_prefetch_depth(3)
+        assert va.prefetch_depth() == 3 != vb.prefetch_depth()
+        # static tenancy: rebuild, don't mutate, the namespace layout
+        with pytest.raises(RuntimeError, match="static"):
+            st.attach_tenant("c", tables[:1])
+        with pytest.raises(RuntimeError, match="static"):
+            st.detach_tenant("a")
+        # tenant-scoped retune + refresh keep answers exact
+        assert va.retune_capacities(2 << 20)["tenant"] == "a"
+        va.lookup({}, ia)
+        va.refresh()
+        assert np.array_equal(np.asarray(va.lookup({}, ia)), ra)
+    finally:
+        st.close()
+
+
+def test_pool_tenant_state_survives_worker_respawn(dense_ref):
+    """A killed worker respawns with its tenant units' depth/degraded
+    state re-applied — per-tenant knobs are pool state, not process
+    state."""
+    from repro.storage.tenancy import TenantStorage
+    _, params = dense_ref
+    tables = np.asarray(params["tables"])
+    st = _pool_tenants(params)
+    try:
+        rng = np.random.default_rng(1)
+        ia = rng.integers(0, ROWS, size=(8, 2, POOL)).astype(np.int32)
+        va = TenantStorage(st, "a")
+        ra = _device_slice_ref(tables[0:2], ia)
+        assert va.set_prefetch_depth(3)
+        st._transports[0].proc.kill()
+        st._transports[0].proc.join()
+        assert np.array_equal(np.asarray(va.lookup({}, ia)), ra)
+        assert va.prefetch_depth() == 3
+    finally:
+        st.close()

@@ -54,8 +54,8 @@ def test_tiered_bit_exact_vs_device():
     cfgt = EmbeddingStageConfig(num_tables=TABLES, rows=ROWS, dim=DIM,
                                 pooling=POOL, storage="tiered")
     ebct = EmbeddingBagCollection(cfgt)
-    ebct.build_parameter_server(
-        params, PSConfig(hot_rows=32, warm_slots=32), trace=idx)
+    ebct.storage.build(params, PSConfig(hot_rows=32, warm_slots=32),
+                       trace=idx)
     out = np.asarray(ebct.apply(params, jnp.asarray(idx)))
     assert np.array_equal(out, base)  # bit-identical, not just close
 
@@ -63,9 +63,9 @@ def test_tiered_bit_exact_vs_device():
     for seed in range(1, 6):
         idx = _batch(pats, 8, POOL, seed=seed)
         if seed == 2:
-            ebct.ps.stage(_batch(pats, 8, POOL, seed=3))
+            ebct.storage.ps.stage(_batch(pats, 8, POOL, seed=3))
         if seed == 4:
-            ebct.ps.refresh()
+            ebct.storage.ps.refresh()
         out = np.asarray(ebct.apply(params, jnp.asarray(idx)))
         base = np.asarray(ebc0.apply(params, jnp.asarray(idx)))
         assert np.array_equal(out, base)
@@ -84,7 +84,7 @@ def test_tiered_bit_exact_weighted_mean():
                                 pooling=POOL, storage="tiered",
                                 combine="mean")
     ebct = EmbeddingBagCollection(cfgt)
-    ebct.build_parameter_server(params, PSConfig(hot_rows=16, warm_slots=16))
+    ebct.storage.build(params, PSConfig(hot_rows=16, warm_slots=16))
     out = np.asarray(ebct.apply(params, jnp.asarray(idx), jnp.asarray(w)))
     assert np.array_equal(out, base)
 
@@ -271,8 +271,9 @@ def test_padded_partial_batch_not_counted_as_traffic():
         assert rows.shape == (8, TABLES, POOL, DIM)   # padded shape served
         return np.zeros(len(dense), np.float32)
 
+    from repro.storage.tiered import TieredStorage
     srv = InferenceServer(fwd, BatcherConfig(max_batch=8, max_wait_s=0.0),
-                          sla_ms=1e6, ps=ps)
+                          sla_ms=1e6, storage=TieredStorage.adopt(ps))
     idx = _batch(pats, 3, POOL, seed=0)
     for q in range(3):
         srv.submit(Query(qid=q, dense=np.zeros(4, np.float32),
@@ -324,9 +325,10 @@ def test_serving_tiered_end_to_end_stats_and_refresh():
     params = model.init(jax.random.PRNGKey(0))
     stream = DLRMQueryStream(num_tables=TABLES, rows=ROWS, pooling=POOL,
                              batch_size=8, hotness="med_hot", seed=1)
-    ps = model.ebc.build_parameter_server(
+    model.ebc.storage.build(
         params, PSConfig(hot_rows=32, warm_slots=32, window_batches=4),
         trace=stream.sample_trace(2))
+    ps = model.ebc.storage.ps
     rest = jax.jit(lambda d, p: model.forward_from_pooled(params, d, p))
 
     def fwd(dense, idx):
@@ -334,7 +336,8 @@ def test_serving_tiered_end_to_end_stats_and_refresh():
         return rest(jnp.asarray(dense), pooled)
 
     srv = InferenceServer(fwd, BatcherConfig(max_batch=8, max_wait_s=0.0),
-                          sla_ms=1e6, ps=ps, refresh_every_batches=2)
+                          sla_ms=1e6, storage=model.ebc.storage,
+                          refresh_every_batches=2)
     for _ in range(4):
         b = stream.next_batch()
         for i in range(8):

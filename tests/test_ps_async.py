@@ -211,6 +211,43 @@ def test_async_backpressure_and_flush_mid_flight():
     pf.close()
 
 
+def test_async_consume_with_mixed_shape_batches_queued():
+    """Out-of-order consume while differently-shaped batches share the queue.
+
+    Regression: `_Job` used the generated dataclass `__eq__`, so
+    `deque.remove()` in consume() compared StagedBatch ndarray fields and
+    broadcast (32, T, L) against (16, T, L) — exactly what the SLO ladder's
+    batch-shrink rung produces mid-stream. Jobs must be identity objects."""
+    gate = threading.Event()
+
+    def resolver(t, rows):
+        # hold the worker so both jobs stay queued until we consume; an
+        # inline (consumer-thread) resolution must proceed immediately
+        name = threading.current_thread().name
+        if name.startswith("ps-async-prefetch") and not gate.is_set():
+            assert gate.wait(timeout=10.0)
+        return _payload(rows)
+
+    pf = AsyncPrefetcher(3, resolver)
+    big = StagedBatch(np.zeros((4, 2, 3), np.int32),
+                      {0: np.asarray([1, 2], np.int64)}, {})
+    small = StagedBatch(np.ones((2, 2, 3), np.int32),
+                        {0: np.asarray([3], np.int64)}, {})
+    assert pf.stage(big)                         # RUNNING (worker blocked)
+    assert pf.stage(small)                       # PENDING, behind `big`
+    # consuming `small` first forces remove() to walk past the
+    # differently-shaped `big` job — must not broadcast-compare
+    got_small = pf.consume(small.indices)
+    np.testing.assert_array_equal(got_small.data[0],
+                                  _payload(np.array([3])))
+    gate.set()
+    got_big = pf.consume(big.indices)
+    np.testing.assert_array_equal(got_big.data[0],
+                                  _payload(np.array([1, 2])))
+    assert len(pf) == 0
+    pf.close()
+
+
 def test_async_ps_bit_exact_under_adversarial_interleavings():
     """Random stage/lookup/flush/refresh schedules: async lookups must stay
     bit-identical to the dense gather whatever the double buffer is doing."""
@@ -386,9 +423,10 @@ def test_ps_config_from_plan_and_ebc_autotune():
         num_tables=TABLES, rows=ROWS, dim=DIM, pooling=POOL,
         storage="tiered"))
     params = ebc.init(jax.random.PRNGKey(0))
-    ps = ebc.build_parameter_server(params, trace=trace,
-                                    device_budget_bytes=64 * 1024,
-                                    async_prefetch=True)
+    ebc.storage.build(params, trace=trace,
+                      device_budget_bytes=64 * 1024,
+                      async_prefetch=True)
+    ps = ebc.storage.ps
     assert ps.cfg.hot_rows == plan.hot_rows
     assert ps.cfg.async_prefetch
     idx = _batch(pats, 8, POOL, seed=3)
@@ -396,10 +434,10 @@ def test_ps_config_from_plan_and_ebc_autotune():
     assert np.array_equal(ps.lookup(idx), base)
     ps.close()
     with pytest.raises(ValueError, match="device_budget_bytes"):
-        ebc.build_parameter_server(params)       # no cfg, no budget
+        ebc.storage.build(params)                # no cfg, no budget
     with pytest.raises(ValueError, match="overrides"):
-        ebc.build_parameter_server(params, PSConfig(hot_rows=1),
-                                   async_prefetch=True)
+        ebc.storage.build(params, PSConfig(hot_rows=1),
+                          async_prefetch=True)
 
 
 # ---------------------------------------------------------------------------
@@ -414,10 +452,11 @@ def test_serving_async_refresh_and_overlap_stats():
     params = model.init(jax.random.PRNGKey(0))
     stream = DLRMQueryStream(num_tables=TABLES, rows=ROWS, pooling=POOL,
                              batch_size=8, hotness="med_hot", seed=1)
-    ps = model.ebc.build_parameter_server(
+    model.ebc.storage.build(
         params, PSConfig(hot_rows=32, warm_slots=32, window_batches=4,
                          async_prefetch=True),
         trace=stream.sample_trace(2))
+    ps = model.ebc.storage.ps
     rest = jax.jit(lambda d, p: model.forward_from_pooled(params, d, p))
 
     def fwd(dense, idx):
@@ -425,8 +464,8 @@ def test_serving_async_refresh_and_overlap_stats():
         return rest(jnp.asarray(dense), pooled)
 
     srv = InferenceServer(fwd, BatcherConfig(max_batch=8, max_wait_s=0.0),
-                          sla_ms=1e6, ps=ps, refresh_every_batches=2,
-                          async_refresh=True)
+                          sla_ms=1e6, storage=model.ebc.storage,
+                          refresh_every_batches=2, async_refresh=True)
     # submit two batches ahead so _stage_next() sees a full next batch
     for b in range(6):
         batch = stream.next_batch()
@@ -461,8 +500,10 @@ def test_sync_refresh_driver_unchanged():
         ps.lookup(idx)
         return np.zeros(len(dense), np.float32)
 
+    from repro.storage.tiered import TieredStorage
     srv = InferenceServer(fwd, BatcherConfig(max_batch=4, max_wait_s=0.0),
-                          sla_ms=1e6, ps=ps, refresh_every_batches=1)
+                          sla_ms=1e6, storage=TieredStorage.adopt(ps),
+                          refresh_every_batches=1)
     idx = _batch(pats, 4, POOL, seed=0)
     for q in range(4):
         srv.submit(Query(qid=q, dense=np.zeros(2, np.float32),

@@ -239,14 +239,14 @@ class _StubStorage:
         return 0
 
 
-def _controller(storage, stats=None, tuner=None, **cfg_kw):
+def _controller(storage, stats=None, tuner=None, batcher=None, **cfg_kw):
     cfg_kw.setdefault("target_p99_ms", 10.0)
     cfg_kw.setdefault("window_queries", 32)
     cfg_kw.setdefault("check_every_batches", 1)
     stats = stats if stats is not None else types.SimpleNamespace(
         query_latencies_s=[])
-    return SLOController(SLOConfig(**cfg_kw), storage, stats, tuner=tuner), \
-        stats
+    return SLOController(SLOConfig(**cfg_kw), storage, stats, tuner=tuner,
+                         batcher=batcher), stats
 
 
 def test_ladder_escalates_widen_then_degrade_then_recovers():
@@ -276,6 +276,59 @@ def test_ladder_escalates_widen_then_degrade_then_recovers():
     assert ctl.level == 0 and store.depth == 2          # base depth restored
     assert [e["action"] for e in ctl.events] == [
         "widen", "degrade", "restore_exact", "recover"]
+
+
+def test_ladder_shrink_rung_between_widen_and_degrade():
+    """With min_batch > 0 and a batcher handle, the ladder halves the
+    batch quantum (scaling the window) BEFORE degrading, and regrows the
+    original batcher config on the way down."""
+    store = _StubStorage(depth=2)
+    batcher = Batcher(BatcherConfig(max_batch=16, max_wait_s=0.008))
+    ctl, stats = _controller(store, max_prefetch_depth=4, min_batch=4,
+                             batcher=batcher)
+    stats.query_latencies_s.extend([0.050] * 32)        # 50ms >> 10ms
+    ctl.step()
+    assert ctl.level == 1 and not store.is_degraded     # widen first
+    ctl.step()
+    assert ctl.level == 2 and batcher.cfg.max_batch == 8
+    assert batcher.cfg.max_wait_s == pytest.approx(0.004)
+    assert not store.is_degraded                        # quality untouched
+    ctl.step()
+    assert batcher.cfg.max_batch == 4                   # halve to the floor
+    assert ctl.level == 2 and not store.is_degraded
+    ctl.step()                                          # floored: degrade
+    assert ctl.level == 3 and store.is_degraded
+    assert ctl.batch_shrinks == 2
+    assert ctl.summary()["slo_batch_shrinks"] == 2
+
+    # descent mirrors ascent: exact answers, then regrow, then recover
+    stats.query_latencies_s[:] = [0.002] * 32
+    ctl.step()
+    assert ctl.level == 2 and not store.is_degraded
+    assert batcher.cfg.max_batch == 4                   # still shrunken
+    ctl.step()
+    assert ctl.level == 1 and batcher.cfg.max_batch == 16
+    assert batcher.cfg.max_wait_s == pytest.approx(0.008)
+    ctl.step()
+    assert ctl.level == 0 and store.depth == 2
+    assert [e["action"] for e in ctl.events] == [
+        "widen", "shrink", "shrink", "degrade",
+        "restore_exact", "regrow", "recover"]
+
+
+def test_shrink_rung_needs_both_min_batch_and_batcher():
+    """min_batch alone (no batcher handle) leaves the PR-5 2-rung ladder:
+    the degraded rung stays at level 2 and no shrink events appear."""
+    store = _StubStorage()
+    ctl, stats = _controller(store, min_batch=4)        # batcher=None
+    stats.query_latencies_s.extend([0.050] * 32)
+    ctl.step()
+    ctl.step()
+    assert ctl.level == 2 and store.is_degraded
+    assert ctl.batch_shrinks == 0
+    assert all(e["action"] != "shrink" for e in ctl.events)
+    with pytest.raises(ValueError, match="min_batch"):
+        SLOConfig(target_p99_ms=10.0, min_batch=-1)
 
 
 def test_ladder_skips_degrade_on_incapable_backend():

@@ -7,11 +7,10 @@ registration, capability mismatch) raises clear errors; the sharded
 backend merges per-shard stats into one report that preserves the counter
 invariant; `ServingSession` reports `off_critical_frac`/cache stats for
 any async-capable backend with no backend-specific serving code; and the
-PR 1–2 surfaces (`build_parameter_server`, `InferenceServer(ps=...)`)
-keep working behind a single DeprecationWarning.
+PR 1–2 shim surfaces (`build_parameter_server`, `InferenceServer(ps=...)`,
+`EmbeddingBagCollection(ps=...)`) stay removed — the regression tests at
+the bottom pin the replacements from the docs/serving.md migration table.
 """
-import warnings
-
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -370,39 +369,27 @@ def test_session_matches_dense_scores_tiered():
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims (regression: PR 1-2 surfaces keep working)
+# shim removal (the PR 1-2 `ps=` / build_parameter_server surfaces are gone)
 # ---------------------------------------------------------------------------
 
-def test_build_parameter_server_shim_warns_once_and_matches(dense_ref):
-    ebc0, params = dense_ref
-    pats = _pats()
-    idx = _batch(pats, 8, seed=0)
-    ebc = EmbeddingBagCollection(_stage_cfg("tiered"))   # no warning here
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        ps = ebc.build_parameter_server(
-            params, PSConfig(hot_rows=32, warm_slots=32), trace=idx)
-    dep = [w for w in caught if w.category is DeprecationWarning]
-    assert len(dep) == 1                     # a single DeprecationWarning
-    assert "storage.build" in str(dep[0].message)
-    assert ps is ebc.ps is ebc.storage.ps    # legacy accessor still wired
-    got = np.asarray(ebc.apply(params, jnp.asarray(idx)))
-    want = np.asarray(ebc0.apply(params, jnp.asarray(idx)))
-    assert np.array_equal(got, want)
-    # legacy error contracts preserved (auto-tune misuse)
-    with pytest.raises(ValueError, match="device_budget_bytes"):
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore")
-            ebc.build_parameter_server(params)
-    with pytest.raises(TypeError, match="parameter server"):
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore")
-            EmbeddingBagCollection(_stage_cfg("device")) \
-                .build_parameter_server(params)
+def test_build_parameter_server_shim_removed():
+    """The PR-3 deprecation shims were removed: `storage.build()` is the
+    only construction path (replacements in the docs/serving.md table)."""
+    assert not hasattr(EmbeddingBagCollection, "build_parameter_server")
+    with pytest.raises(TypeError):
+        EmbeddingBagCollection(_stage_cfg("tiered"), ps=object())
+    # the replacement path serves bit-exact against the dense reference
+    ebc = EmbeddingBagCollection(_stage_cfg("tiered"))
+    params = ebc.init(jax.random.PRNGKey(0))
+    ebc.storage.build(params, PSConfig(hot_rows=32, warm_slots=32))
+    idx = jnp.asarray(_batch(_pats(), 4, seed=0))
+    ref = EmbeddingBagCollection(_stage_cfg("device"))
+    assert np.array_equal(np.asarray(ebc.apply(params, idx)),
+                          np.asarray(ref.apply(params, idx)))
+    ebc.storage.close()
 
 
-def test_inference_server_ps_shim_warns_and_serves():
-    pats = _pats()
+def test_inference_server_ps_kwarg_removed_adopt_replaces_it():
     rng = np.random.default_rng(0)
     tables = rng.normal(size=(TABLES, ROWS, DIM)).astype(np.float32)
     ps = ParameterServer(tables, PSConfig(hot_rows=16, warm_slots=16,
@@ -412,15 +399,14 @@ def test_inference_server_ps_shim_warns_and_serves():
         ps.lookup(idx)
         return np.zeros(len(dense), np.float32)
 
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        srv = InferenceServer(fwd, BatcherConfig(max_batch=4,
-                                                 max_wait_s=0.0),
-                              sla_ms=1e6, ps=ps, refresh_every_batches=1)
-    assert any(w.category is DeprecationWarning for w in caught)
-    assert srv.ps is ps                      # legacy accessor
-    assert isinstance(srv.storage, TieredStorage)
-    idx = _batch(pats, 4, seed=0)
+    with pytest.raises(TypeError):
+        InferenceServer(fwd, BatcherConfig(), ps=ps)
+    # replacement: adopt the raw server into the storage protocol
+    srv = InferenceServer(fwd, BatcherConfig(max_batch=4, max_wait_s=0.0),
+                          sla_ms=1e6, storage=TieredStorage.adopt(ps),
+                          refresh_every_batches=1)
+    assert not hasattr(srv, "ps")            # legacy accessor gone too
+    idx = _batch(_pats(), 4, seed=0)
     for q in range(4):
         srv.submit(Query(qid=q, dense=np.zeros(2, np.float32),
                          indices=idx[q]))
@@ -428,18 +414,12 @@ def test_inference_server_ps_shim_warns_and_serves():
     assert srv.stats.served == 4
     assert ps.refreshes == 1                 # generic driver still re-pins
     assert srv.stats.ps_stats["cache_hit_rate"] >= 0.0
-    with pytest.raises(ValueError, match="not both"):
-        InferenceServer(fwd, BatcherConfig(), ps=ps,
-                        storage=TieredStorage.adopt(ps))
+    ps.close()
 
 
-def test_ebc_ps_ctor_shim_warns_and_attaches():
-    rng = np.random.default_rng(0)
-    tables = rng.normal(size=(TABLES, ROWS, DIM)).astype(np.float32)
-    ps = ParameterServer(tables, PSConfig(hot_rows=8, warm_slots=8))
-    with pytest.warns(DeprecationWarning, match="storage.build"):
-        ebc = EmbeddingBagCollection(_stage_cfg("tiered"), ps=ps)
-    assert ebc.ps is ps
-    out = ebc.apply({"tables": tables},
-                    jnp.asarray(_batch(_pats(), 4, seed=0)))
-    assert out.shape == (4, TABLES, DIM)
+def test_ebc_ps_accessors_removed():
+    ebc = EmbeddingBagCollection(_stage_cfg("tiered"))
+    assert not hasattr(ebc, "ps")            # property deleted with the shim
+    params = ebc.init(jax.random.PRNGKey(0))
+    with pytest.raises(RuntimeError, match="storage.build"):
+        ebc.apply(params, jnp.asarray(_batch(_pats(), 2, seed=1)))

@@ -16,8 +16,16 @@ Compares a fresh `benchmarks/run.py --json` output against the checked-in
       share), in the `slo_overload` sweep the SLO controller must earn
       its keep under a flash crowd (SLO-on windowed p99 recovers to the
       target after the spike while SLO-off's does not; the shed fraction
-      stays bounded; the armed-but-unloaded steady leg sheds nothing),
-      in the `embedding_stage` sweep the fused warm-cache lookup
+      stays bounded; the armed-but-unloaded steady leg sheds nothing)
+      and its batch-shrink rung must fix the latency-bound oversized-
+      window leg without shedding a single query, in the `multi_tenant`
+      sweep the fair-share arbiter must contain a flash-crowd neighbor
+      (the steady tenant's p99 stays under the SLO bound with fair
+      scheduling + arbiter and breaches it under fifo + a static split),
+      every tenant must stay bit-exact against its dense reference, and
+      every arbiter round's budget split must sum to at most the one
+      shared device budget, in the `embedding_stage` sweep the fused
+      warm-cache lookup
       must be no slower per row than the per-row tier path on the
       warm-hit leg (the leg the fusion exists for) and must lower
       memory-dominant, and in the `sharded_pool` sweep every leg must
@@ -36,8 +44,8 @@ Compares a fresh `benchmarks/run.py --json` output against the checked-in
 New records absent from the baseline are reported as info — refresh the
 baseline (`benchmarks/run.py --sweep storage_backends --sweep
 sharded_balance --sweep sharded_migration --sweep sharded_pool
---sweep embedding_stage --sweep slo_overload --json
-benchmarks/baseline.json`) when adding sweeps.
+--sweep embedding_stage --sweep slo_overload --sweep multi_tenant
+--json benchmarks/baseline.json`) when adding sweeps.
 
 Stdlib only (runs before `pip install` in CI if need be).
 """
@@ -178,6 +186,69 @@ def compare(base: dict, new: dict, timing_factor: float,
         errors.append(f"slo_overload: armed controller shed "
                       f"{steady_shed:g} of a steady in-capacity trace — "
                       f"admission control must be invisible off-overload")
+
+    # semantic invariants: the batch-shrink rung must fix the
+    # latency-bound leg it exists for — shedding is disarmed there, so
+    # re-sizing the batch quantum is the only mechanism in play
+    bb_on = slo(new, "bigbatch_on", "post_p99_ms")
+    bb_off = slo(new, "bigbatch_off", "post_p99_ms")
+    bb_target = slo(new, "bigbatch_on", "target_ms")
+    if bb_on is not None and bb_target is not None:
+        if not bb_on <= bb_target:
+            errors.append(f"slo_overload: shrink-armed bigbatch p99 "
+                          f"{bb_on:g}ms did not recover to the "
+                          f"{bb_target:g}ms target — the batch-shrink "
+                          f"rung stopped fixing the oversized window")
+        if bb_off is not None and not bb_off > bb_target:
+            errors.append(f"slo_overload: unarmed bigbatch p99 "
+                          f"{bb_off:g}ms is within the {bb_target:g}ms "
+                          f"target — the oversized window no longer "
+                          f"breaches, the comparison is vacuous")
+    bb_shrinks = slo(new, "bigbatch_on", "shrinks")
+    if bb_shrinks is not None and not bb_shrinks >= 1:
+        errors.append(f"slo_overload: bigbatch_on recorded {bb_shrinks:g} "
+                      f"batch shrinks — the rung never engaged")
+    bb_shed = slo(new, "bigbatch_on", "shed_frac")
+    if bb_shed is not None and bb_shed != 0.0:
+        errors.append(f"slo_overload: bigbatch_on shed {bb_shed:g} with "
+                      f"shedding disarmed — recovery is no longer "
+                      f"attributable to the shrink rung")
+
+    # semantic invariants: multi-tenant noisy-neighbor containment. Two
+    # tenants share ONE backend; with fair scheduling + the fair-share
+    # arbiter the flash-crowd tenant may not push the steady tenant's
+    # p99 past the SLO bound, and without them it must (else the
+    # comparison is vacuous). All time quantities are multiples of the
+    # measured service time on a virtual clock — compare within the
+    # fresh run only
+    def mt(records, leg, tenant, metric):
+        return records.get(("multi_tenant",
+                            f"multi_tenant/{leg}/{tenant}", metric))
+    fair_p99 = mt(new, "fair_arbiter", "steady", "p99_ms")
+    fifo_p99 = mt(new, "fifo_static", "steady", "p99_ms")
+    mt_target = mt(new, "fair_arbiter", "steady", "target_ms")
+    if fair_p99 is not None and mt_target is not None:
+        if not fair_p99 <= mt_target:
+            errors.append(f"multi_tenant: steady tenant p99 {fair_p99:g}ms "
+                          f"above the {mt_target:g}ms bound under "
+                          f"fair+arbiter — the flash neighbor is no "
+                          f"longer contained")
+        if fifo_p99 is not None and not fifo_p99 > mt_target:
+            errors.append(f"multi_tenant: steady tenant p99 {fifo_p99:g}ms "
+                          f"within the {mt_target:g}ms bound under "
+                          f"fifo+static — the flash crowd no longer "
+                          f"interferes, the containment claim is vacuous")
+    for (sweep, name, metric), v in sorted(new.items()):
+        if sweep == "multi_tenant" and metric == "bit_exact" and v is not True:
+            errors.append(f"multi_tenant: {name} bit_exact={v!r} — a "
+                          f"tenant's lookups diverged from its dense "
+                          f"reference; tenancy broke isolation")
+    conserved = new.get(("multi_tenant", "multi_tenant/fair_arbiter/shared",
+                         "conserved"))
+    if conserved is not None and conserved is not True:
+        errors.append("multi_tenant: arbiter budget conservation failed — "
+                      "some round's tenant splits exceeded the one shared "
+                      "device budget")
 
     # semantic invariants: the fused warm-cache lookup must earn its keep
     # on the leg it exists for (all-resident traffic served in one
