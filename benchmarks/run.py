@@ -1277,6 +1277,134 @@ def multi_tenant():
     leg("fifo_static", "fifo", False)
 
 
+def online_update():
+    """Zero-downtime online model updates: guarded mid-stream delta refresh.
+
+    Serves the SAME deterministic trace through a tiered `ServingSession`
+    twice: a `silent` leg with the update machinery armed but idle (the
+    trainer never publishes past the base snapshot) and an `updates` leg
+    where two row deltas and one delta big enough to trip the
+    full-snapshot fallback land mid-stream. Every answered batch in both
+    legs is replayed through a dense device clone holding the snapshot of
+    the batch's PINNED version, using the session's own engine shapes —
+    `bit_exact` is the epoch-guard contract (a query admitted at version
+    v is answered by exactly v's weights, even while later versions
+    install). `tools/check_bench.py` enforces, within the fresh run: both
+    legs bit-exact, the updates leg applied 2 deltas + 1 full with zero
+    rollbacks and zero sheds, and its p99 stays within a bound of the
+    silent leg's — version swaps must not wreck the serving tail.
+    """
+    import tempfile
+    from repro.checkpoint import ModelUpdateStream
+    from repro.ps import PSConfig
+    from repro import serving
+    from repro.serving import QueryShedError
+
+    rows, dim, t_count, pool, batch, steps = 512, 16, 4, 4, 16, 24
+
+    def leg(name, publish_steps):
+        cfg = DLRMConfig(embedding=EmbeddingStageConfig(
+            num_tables=t_count, rows=rows, dim=dim, pooling=pool,
+            backend="xla", storage="tiered"),
+            bottom_mlp=(32, dim), top_mlp=(16, 1))
+        model = DLRM(cfg)
+        params = model.init(jax.random.PRNGKey(SEED))
+        tables0 = np.asarray(params["embedding"]["tables"])[:t_count].copy()
+        model.ebc.storage.build(
+            params, PSConfig(hot_rows=rows // 8, warm_slots=rows // 8,
+                             prefetch_depth=2))
+        # dense clone for the per-version oracle replay
+        omodel = DLRM(DLRMConfig(embedding=EmbeddingStageConfig(
+            num_tables=t_count, rows=rows, dim=dim, pooling=pool,
+            backend="xla", storage="device"),
+            bottom_mlp=(32, dim), top_mlp=(16, 1)))
+        rng_t = np.random.default_rng(seeded(11))   # traffic: shared by legs
+        rng_u = np.random.default_rng(seeded(12))   # update payloads only
+        with tempfile.TemporaryDirectory() as d:
+            pub = ModelUpdateStream(d)
+            pub.publish_full(tables0)        # v1 base; consumers join here
+            sess = serving.ServingSession(
+                model, params,
+                batcher=serving.BatcherConfig(max_batch=batch,
+                                              max_wait_s=0.0),
+                controllers=serving.configure(
+                    updates=serving.UpdateConfig(
+                        stream=ModelUpdateStream(d))))
+            batches, traffic, sheds = [], [], 0
+            sess.server.on_batch = lambda b, s: batches.append(
+                ([q.qid for q in b], s.copy()))
+            snapshots = {0: tables0.copy(), 1: tables0.copy()}
+            cur = tables0.copy()
+            for step in range(steps):
+                dense = rng_t.normal(size=(batch, 13)).astype(np.float32)
+                idx = rng_t.integers(0, rows, size=(batch, t_count, pool)
+                                     ).astype(np.int32)
+                traffic.extend((dense[i], idx[i]) for i in range(batch))
+                try:
+                    sess.submit_batch(dense, idx)
+                except QueryShedError:
+                    sheds += 1
+                while sess.poll(force=True):
+                    pass
+                if step in publish_steps:
+                    if publish_steps[step] == "delta":
+                        t = step % t_count
+                        r = rng_u.choice(rows, size=8, replace=False)
+                        v = rng_u.normal(size=(8, dim)).astype(np.float32)
+                        cur[t, r] = v
+                        ver = pub.publish_delta({t: (r, v)})
+                    else:   # touch >half of all rows -> full fallback
+                        r = np.arange(rows)
+                        changed = {}
+                        for t in range(t_count - 1):
+                            v = rng_u.normal(size=(rows, dim)
+                                             ).astype(np.float32)
+                            cur[t] = v
+                            changed[t] = (r, v)
+                        ver = pub.publish_delta(changed)
+                    snapshots[ver] = cur.copy()
+            sess.drain()
+            pct = sess.percentiles()
+            mismatched = 0
+            rest = {}        # per-version jit, matching the engine shapes
+            for qids, scores in batches:
+                pins = {sess.version_of(q) for q in qids}
+                if len(pins) != 1:
+                    mismatched += 1          # epoch guard broke batching
+                    continue
+                v = pins.pop()
+                op = dict(params)
+                op["embedding"] = dict(params["embedding"])
+                op["embedding"]["tables"] = jnp.asarray(snapshots[v])
+                if v not in rest:
+                    rest[v] = jax.jit(
+                        lambda dn, po, p=op: omodel.forward_from_pooled(
+                            p, dn, po))
+                dense = np.zeros((batch, 13), np.float32)
+                idx = np.zeros((batch, t_count, pool), np.int32)
+                for i, q in enumerate(qids):
+                    dense[i], idx[i] = traffic[q]
+                pooled = omodel.ebc.apply(op["embedding"], idx)
+                ref = np.asarray(rest[v](jnp.asarray(dense),
+                                         pooled))[:len(qids)]
+                if not np.array_equal(scores, ref):
+                    mismatched += 1
+            served = sum(len(q) for q, _ in batches)
+            sess.close()
+            emit(f"online_update/{name}", "",
+                 f"p99_ms={pct['p99_ms']:.2f} served={served} "
+                 f"sheds={sheds} bit_exact={mismatched == 0} "
+                 f"model_version={pct['model_version']} "
+                 f"updates_applied={pct['updates_applied']} "
+                 f"updates_delta={pct['updates_delta']} "
+                 f"updates_full={pct['updates_full']} "
+                 f"rolled_back={pct['updates_rolled_back']} "
+                 f"update_stall_ms={pct['update_stall_s'] * 1e3:.2f}")
+
+    leg("silent", {})
+    leg("updates", {6: "delta", 12: "delta", 18: "full"})
+
+
 ALL = [tab3_unique_access, fig5_coverage, fig1_embedding_contribution,
        fig6_pipeline_sweep, fig9_prefetch_distance, fig11_l2p_pooling,
        fig12_embedding_speedup, fig12_measured_cpu, fig13_e2e_speedup,
@@ -1284,7 +1412,7 @@ ALL = [tab3_unique_access, fig5_coverage, fig1_embedding_contribution,
        tab45_microarch, tiered_ps_capacity_sweep, tiered_ps_sync_vs_async,
        tiered_ps_autotune, storage_backends, sharded_balance,
        sharded_migration, sharded_pool, embedding_stage, slo_overload,
-       multi_tenant]
+       multi_tenant, online_update]
 
 
 def main(argv: list[str] | None = None) -> None:

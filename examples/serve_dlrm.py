@@ -21,6 +21,14 @@ re-splitting device budget and prefetch depth from live per-tenant load.
 Per-tenant traffic replays through `replay_tenants` on one virtual
 clock, so tenants contend for real serving time.
 
+`--update-every N` arms zero-downtime online model updates: a
+trainer-side `ModelUpdateStream` publishes a delta touching
+`--update-rows FRAC` of each target table's rows every N batches, and
+the session installs each version between batches behind the epoch
+guard — in-flight queries finish on the version they were admitted
+under, and the summary line reports the final model version, how many
+deltas/full snapshots landed, and the total update stall.
+
 `--trace` switches to timestamped-trace replay (repro.traffic): queries
 arrive on a virtual clock following a named rate profile (steady Zipf,
 diurnal sinusoid, flash-crowd spike, hotness shift) at a rate calibrated
@@ -40,8 +48,11 @@ docs/serving.md "Serving under overload").
     PYTHONPATH=src python examples/serve_dlrm.py --tenants 2
     PYTHONPATH=src python examples/serve_dlrm.py --storage tiered \
         --trace flash --slo-p99-ms 20
+    PYTHONPATH=src python examples/serve_dlrm.py --storage tiered \
+        --update-every 4 --update-rows 0.02
 """
 import argparse
+import tempfile
 import time
 
 import jax
@@ -112,6 +123,15 @@ def parse_args():
                          "device budget (overrides --hot-rows/--warm-slots)")
     ap.add_argument("--hotness", choices=HOTNESS + ("all",), default="all",
                     help="run one hotness level (CI smoke) or the sweep")
+    ap.add_argument("--update-every", type=int, default=0,
+                    help="zero-downtime online updates: publish a "
+                         "trainer-side delta every N batches and install "
+                         "it mid-serving through the epoch-guarded "
+                         "version stream (0 = off)")
+    ap.add_argument("--update-rows", type=float, default=0.01,
+                    help="fraction of rows per table each published "
+                         "delta touches; past the stream's fallback "
+                         "ratio a FULL snapshot lands instead")
     ap.add_argument("--tenants", type=int, default=0,
                     help="serve N tenant DLRMs over ONE shared "
                          "sharded/pool backend (TenantManager + fair-share "
@@ -195,6 +215,22 @@ def run_session(args, hotness) -> tuple[dict, int, float]:
         migrate_threshold=args.migrate_threshold)
         if (args.auto_tune or args.route_every or args.migrate_every)
         else None)
+    pub, upd_dir, rng_u = None, None, None
+    controllers = None
+    if args.update_every:
+        # trainer side: a publisher stream over a scratch version root;
+        # the session consumes it through the epoch-guarded UpdateConfig
+        from repro.checkpoint import ModelUpdateStream
+        from repro.serving import UpdateConfig, configure
+        upd_dir = tempfile.TemporaryDirectory()
+        pub = ModelUpdateStream(upd_dir.name)
+        pub.publish_full(
+            np.asarray(params["embedding"]["tables"])[:args.tables])
+        controllers = configure(
+            auto_tune=auto_tune,
+            updates=UpdateConfig(stream=ModelUpdateStream(upd_dir.name)))
+        auto_tune = None          # rides inside the controllers spec
+        rng_u = np.random.default_rng(1)
     with ServingSession(
             model, params,
             batcher=BatcherConfig(max_batch=args.batch, max_wait_s=0.0),
@@ -202,16 +238,23 @@ def run_session(args, hotness) -> tuple[dict, int, float]:
             refresh_every_batches=(0 if device_resident
                                    else args.refresh_every),
             async_refresh=args.async_mode and not device_resident,
-            auto_tune=auto_tune) as sess:
+            auto_tune=auto_tune, controllers=controllers) as sess:
         # keep one batch queued ahead of the executing one so the generic
         # _stage_next() sees the full next batch and prefetch overlap fires
-        submitted = 0
+        submitted = n_batch = 0
         while submitted < args.queries:
             b = stream.next_batch()
             sess.submit_batch(b.dense, b.indices, qid0=submitted)
             submitted += args.batch
+            n_batch += 1
             if submitted > args.batch:
                 sess.poll()
+            if pub is not None and n_batch % args.update_every == 0:
+                t = (n_batch // args.update_every - 1) % args.tables
+                n = max(1, int(args.update_rows * args.rows))
+                rows = rng_u.choice(args.rows, size=n, replace=False)
+                pub.publish_delta({t: (rows, rng_u.normal(
+                    size=(n, 128)).astype(np.float32))})
         sess.drain()
         print_worker_status(model.ebc.storage)   # before close() joins them
         sess.close()    # install any in-flight async refresh before reading
@@ -227,6 +270,8 @@ def run_session(args, hotness) -> tuple[dict, int, float]:
             t_emb = time.perf_counter() - t0
             emb_share = t_emb / max(np.mean(sess.stats.batch_latencies_s),
                                     1e-9)
+    if upd_dir is not None:
+        upd_dir.cleanup()
     return pct, viol, emb_share
 
 
@@ -449,6 +494,12 @@ def main():
                 line += f" reroutes={pct['routing_updates']}"
         else:
             line += f" emb_share~{min(emb_share, 1.0):.0%}"
+        if "model_version" in pct:
+            line += (f" v={pct['model_version']} "
+                     f"updates={pct['updates_applied']}"
+                     f"(d={pct['updates_delta']} f={pct['updates_full']} "
+                     f"rb={pct['updates_rolled_back']}) "
+                     f"stall={pct['update_stall_s'] * 1e3:.1f}ms")
         print(line, flush=True)
 
 

@@ -1,1 +1,2 @@
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import (CheckpointError, CheckpointManager,
+                                      ModelUpdateStream)

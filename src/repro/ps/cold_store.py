@@ -64,6 +64,32 @@ class ColdStore:
                     self._norms_sq = np.einsum("trd,trd->tr", t64, t64)
         return self._norms_sq[table]
 
+    def update_rows(self, table: int, rows: np.ndarray,
+                    values: np.ndarray) -> None:
+        """Online model update: overwrite `rows` of one table.
+
+        The 'immutable during serving' contract above still holds where
+        it matters: this runs on the single serving thread at update
+        COMMIT, after the prefetch queue is flushed, so no concurrent
+        gather can observe a torn row. Drops the lazy norm cache —
+        degraded-mode L2 accounting must see the new bytes.
+
+        Copy-on-first-write: construction may have adopted a read-only
+        view (a zero-copy look at a JAX buffer); the first committed
+        update privatizes it. Pool workers' shared-segment views never
+        reach here — their commit passes write_cold=False and the segment
+        OWNER writes the bytes."""
+        if not self.tables.flags.writeable:
+            self.tables = self.tables.copy()
+        self.tables[table, rows] = values
+        self._norms_sq = None
+
+    def drop_norm_cache(self) -> None:
+        """Invalidate the lazy norm cache after the table bytes changed
+        UNDERNEATH this store (a shared-segment view the pool process
+        wrote) — `update_rows` cannot run on a read-only view."""
+        self._norms_sq = None
+
     def hot_block(self, table: int, hot_row_ids: np.ndarray) -> np.ndarray:
         """Materialize the device-resident hot block for one table."""
         return self.tables[table, hot_row_ids].copy()

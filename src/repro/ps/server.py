@@ -88,6 +88,10 @@ class ParameterServer:
         # one-shot hint from the serving layer: only the first N queries of
         # the next lookup are real traffic (the rest is batcher padding)
         self._valid_hint: int | None = None
+        # online model updates: committed version + the (at most one) open
+        # buffered transaction — see the "online model updates" section
+        self._version = 0
+        self._update_txn = None
         self._install_hot_tier()
 
     # -- lifecycle ----------------------------------------------------------
@@ -587,6 +591,88 @@ class ParameterServer:
         The synchronous driver; see plan_refresh/install_refresh for the
         split the async serving driver uses."""
         return self.install_refresh(self.plan_refresh())
+
+    # -- online model updates ------------------------------------------------
+    def version(self) -> int:
+        """Committed model version (0 = construction-time weights)."""
+        return self._version
+
+    def begin_update(self, version: int) -> bool:
+        """Open a buffered update transaction targeting `version`. Rows
+        applied into it stay invisible to lookups until `commit_update` —
+        the buffer is the shadow copy of changed rows."""
+        from repro.core.update import UpdateTxn
+        if self._update_txn is not None:
+            raise RuntimeError(
+                f"an update to v{self._update_txn.version} is already "
+                f"open — commit or abort it first")
+        self._update_txn = UpdateTxn(version, self._version)
+        return True
+
+    def apply_update(self, table: int, rows: np.ndarray,
+                     values: np.ndarray) -> bool:
+        from repro.core.update import require_open
+        require_open(self._update_txn, "apply_update").add(
+            table, rows, values, num_tables=self.cold.num_tables,
+            num_rows=self.cold.num_rows, dim=self.cold.dim,
+            dtype=self.cold.tables.dtype)
+        return True
+
+    def _install_update_rows(self, merged: dict, *,
+                             write_cold: bool = True) -> int:
+        """Tier maintenance for COMMITTED update rows (table -> (rows,
+        values), table ids local to this server). Serving thread only.
+
+        Order matters: the prefetch queue is flushed FIRST (staged
+        payloads are keyed by raw row id but hold the OLD bytes — a
+        later consume must never serve the previous version), then the
+        cold tables take the new rows, warm entries for touched rows are
+        invalidated (they re-admit from traffic with the new bytes), and
+        hot-pinned touched rows are re-copied into the pinned block with
+        the device mirror dropped. `write_cold=False` serves the pool
+        workers' zero-copy shared-segment views: the segment owner
+        already wrote the bytes underneath, so only the caches need
+        fixing (and the norm cache still drops)."""
+        applied = 0
+        self.prefetch.flush()
+        for t, (rows, vals) in merged.items():
+            if write_cold:
+                self.cold.update_rows(t, rows, vals)
+            else:
+                self.cold.drop_norm_cache()
+            self.warm[t].invalidate(rows)
+            if self.num_hot > 0:
+                pos = self._inv_perm[t][rows]
+                hot = pos < self.num_hot
+                if hot.any():
+                    self._hot[t][pos[hot]] = self.cold.tables[t, rows[hot]]
+                    self._hot_dev = None
+            applied += int(rows.size)
+        return applied
+
+    def commit_update(self, version: int) -> dict:
+        """Publish the open transaction: flush stale staged payloads,
+        write the cold rows, invalidate/re-pin touched cache entries.
+        Runs between batches on the serving thread, so the swap is atomic
+        with respect to lookups by construction."""
+        from repro.core.update import require_open
+        txn = require_open(self._update_txn, "commit_update")
+        txn.check_commit(version)
+        merged = txn.merged()
+        applied = self._install_update_rows(merged)
+        self._version = txn.version
+        self._update_txn = None
+        return {"updated": True, "version": self._version,
+                "rows": applied, "tables": len(merged)}
+
+    def abort_update(self, version: int) -> bool:
+        """Drop the open transaction (if any); the committed version keeps
+        serving untouched — no tier was modified by begin/apply."""
+        if self._update_txn is None:
+            return False
+        self._update_txn.check_commit(version)
+        self._update_txn = None
+        return True
 
     # -- stats --------------------------------------------------------------
     def stats(self) -> dict:

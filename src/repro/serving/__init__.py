@@ -21,7 +21,7 @@ and stats namespaces, with the shared device budget re-split live by the
 """
 from repro.ps.tuning import (ArbiterConfig, AutoTuneConfig, BudgetArbiter,
                              QueueDepthController)
-from repro.serving.config import ServingControllers, configure
+from repro.serving.config import ServingControllers, UpdateConfig, configure
 from repro.serving.server import (Batcher, BatcherConfig, InferenceServer,
                                   Query, QueryShedError, ServeStats)
 from repro.serving.session import ServingSession
@@ -32,5 +32,5 @@ __all__ = ["Batcher", "BatcherConfig", "InferenceServer", "Query",
            "QueryShedError", "ServeStats", "ServingSession",
            "AutoTuneConfig", "QueueDepthController", "SLOConfig",
            "SLOController", "windowed_p99_ms", "ServingControllers",
-           "configure", "ArbiterConfig", "BudgetArbiter", "TenantManager",
-           "TenantSpec"]
+           "UpdateConfig", "configure", "ArbiterConfig", "BudgetArbiter",
+           "TenantManager", "TenantSpec"]

@@ -24,21 +24,54 @@ session rejects it for the same fail-fast reason.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Union
+from typing import Any, Optional, Union
 
 from repro.ps.tuning import ArbiterConfig, AutoTuneConfig
 from repro.serving.slo import SLOConfig
 
 
 @dataclasses.dataclass(frozen=True)
+class UpdateConfig:
+    """Zero-downtime online model updates for a serving session.
+
+    `stream` is a `repro.checkpoint.ModelUpdateStream` (or anything with
+    its `poll()` surface returning update records). The session polls it
+    between batches — every `poll_every_batches` executed batches — and
+    applies new versions through the storage `begin_update / apply_update
+    / commit_update` protocol behind the epoch guard: in-flight queries
+    stay pinned to the version current at their admission, and the commit
+    barrier drains them before the swap becomes visible.
+
+    `drain_timeout_s` bounds the commit barrier — how long the session
+    will spend force-flushing pinned in-flight batches before a version
+    swap (the stall is accounted in `percentiles()['update_stall_s']`)."""
+
+    stream: Any
+    poll_every_batches: int = 1
+    drain_timeout_s: float = 10.0
+
+    def __post_init__(self):
+        if self.stream is None or not hasattr(self.stream, "poll"):
+            raise ValueError(
+                "UpdateConfig.stream must expose poll() — pass a "
+                "repro.checkpoint.ModelUpdateStream")
+        if self.poll_every_batches < 1:
+            raise ValueError(
+                f"poll_every_batches must be >= 1, got "
+                f"{self.poll_every_batches}")
+
+
+@dataclasses.dataclass(frozen=True)
 class ServingControllers:
     """The full controller stack for a session (or every tenant of a
-    manager): inner auto-tuners, SLO outer loop, cross-tenant arbiter.
-    Any field left None leaves that controller off."""
+    manager): inner auto-tuners, SLO outer loop, cross-tenant arbiter,
+    online model updates. Any field left None leaves that controller
+    off."""
 
     auto_tune: Union[AutoTuneConfig, bool, None] = None
     slo: Optional[SLOConfig] = None
     arbiter: Optional[ArbiterConfig] = None
+    updates: Optional[UpdateConfig] = None
 
     def __post_init__(self):
         # normalize the auto_tune=True shorthand here so every consumer
@@ -51,10 +84,12 @@ class ServingControllers:
 
 def configure(*, auto_tune: Union[AutoTuneConfig, bool, None] = None,
               slo: Optional[SLOConfig] = None,
-              arbiter: Optional[ArbiterConfig] = None) -> ServingControllers:
+              arbiter: Optional[ArbiterConfig] = None,
+              updates: Optional[UpdateConfig] = None) -> ServingControllers:
     """Build a `ServingControllers` spec (keyword-only, so call sites
     read like the config they produce)."""
-    return ServingControllers(auto_tune=auto_tune, slo=slo, arbiter=arbiter)
+    return ServingControllers(auto_tune=auto_tune, slo=slo, arbiter=arbiter,
+                              updates=updates)
 
 
 def resolve_controllers(controllers: Optional[ServingControllers],

@@ -259,6 +259,11 @@ class InferenceServer:
         self._refresh_pool: Optional[
             concurrent.futures.ThreadPoolExecutor] = None
         self._refresh_future: Optional[concurrent.futures.Future] = None
+        # optional response tap: called with (batch, scores[:len(batch)])
+        # after every executed batch, outside the timed region. The
+        # online-update bench uses it to check each response bit-exactly
+        # against the model version its query was pinned to.
+        self.on_batch: Optional[Callable] = None
 
     def submit(self, q: Query) -> None:
         """Admit or shed one query. A shed query raises `QueryShedError`
@@ -362,6 +367,8 @@ class InferenceServer:
         scores = self.forward(dense, idx)
         np.asarray(scores)  # block
         t1 = time.perf_counter()
+        if self.on_batch is not None:
+            self.on_batch(batch, np.asarray(scores)[:n])
         # batch service time is always REAL seconds (it feeds the deadline
         # admission's EWMA); a virtual clock advances by exactly that
         # duration, so query latencies = virtual queueing delay + real

@@ -32,6 +32,7 @@ Typical use (see docs/serving.md for the operator guide):
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Optional, Union
 
 import jax
@@ -75,6 +76,27 @@ class ServingSession:
         self.storage = model.ebc.storage
         self.clock = clock
         caps = self.storage.capabilities()
+        # online model updates (epoch guard): every admitted query is
+        # pinned to the version current at its admission, and the stream
+        # is polled between batches — see _apply_updates for the barrier
+        self._updates = spec.updates
+        self._model_version = 0
+        self._updates_applied = 0
+        self._updates_delta = 0
+        self._updates_full = 0
+        self._updates_rolled_back = 0
+        self._update_stall_s = 0.0
+        self._update_batches = 0
+        self._pending_updates: list = []
+        self._qid_versions: dict[int, int] = {}
+        if self._updates is not None:
+            require_capability(self.storage, "updatable")
+            if caps.device_resident:
+                # device updates mutate the bound params' tables — bind
+                # THIS session's dict so a commit swaps the very object
+                # the engine reads each call
+                self.storage.build(self.params)
+            self._model_version = self.storage.version()
         if (async_refresh or refresh_every_batches) and not caps.refreshable:
             # fail fast instead of silently never re-pinning
             require_capability(self.storage, "refreshable")
@@ -132,7 +154,12 @@ class ServingSession:
         place residency is ever consulted."""
         model, params = self.model, self.params
         if caps.device_resident:
-            return jax.jit(lambda d, i: model.forward(params, d, i))
+            # params ride as a per-call ARGUMENT, not a closure capture: a
+            # closed-over array is baked into the jaxpr as a constant, so
+            # an online update (which swaps params["tables"] inside this
+            # dict) would be invisible to the compiled engine forever
+            jitted = jax.jit(lambda p, d, i: model.forward(p, d, i))
+            return lambda d, i: jitted(self.params, d, i)
         rest = jax.jit(lambda d, p: model.forward_from_pooled(params, d, p))
 
         def forward(dense, idx):
@@ -157,6 +184,11 @@ class ServingSession:
     # -- serving loop (delegation) ------------------------------------------
     def submit(self, query: Query) -> None:
         self.server.submit(query)
+        # admission is the pin point: the query is guaranteed to be served
+        # by THIS version (the commit barrier drains it before any swap).
+        # A shed query raises above and is never pinned.
+        if self._updates is not None:
+            self._qid_versions[query.qid] = self._model_version
         # keep the auto-advancing submit_batch counter ahead of manually
         # assigned qids so mixing the two surfaces never reuses an id
         self._next_qid = max(self._next_qid, query.qid + 1)
@@ -181,6 +213,8 @@ class ServingSession:
                 self.server.submit(Query(qid=qid0 + i, dense=dense[i],
                                          indices=indices[i]))
                 admitted += 1
+                if self._updates is not None:
+                    self._qid_versions[qid0 + i] = self._model_version
             except QueryShedError:
                 pass            # tallied in stats by the server
         self._next_qid = qid0 + len(dense)
@@ -195,7 +229,59 @@ class ServingSession:
                 self.slo.step()
             if self.tuner is not None:
                 self.tuner.step()   # one executed batch per serving poll
+            if self._updates is not None:
+                self._update_batches += 1
+                if self._update_batches \
+                        % self._updates.poll_every_batches == 0:
+                    self._apply_updates()
         return served
+
+    # -- online model updates ------------------------------------------------
+    def version_of(self, qid: int) -> Optional[int]:
+        """The model version `qid` was pinned to at admission (None when
+        updates are not armed or the qid was never admitted). The epoch
+        guard guarantees the response for `qid` is bit-exact under this
+        version's tables."""
+        return self._qid_versions.get(qid)
+
+    def _apply_updates(self) -> None:
+        """Poll the update stream; publish any new versions behind the
+        epoch guard. Runs between batches on the serving thread.
+
+        The commit barrier comes first: every queued query was admitted —
+        and pinned — under the CURRENT version, so they are force-served
+        through the raw server poll (no recursion into this hook) before
+        any tier takes new bytes. Only then do the records apply, in
+        version order, through the storage update transaction. A
+        distributed rollback (a pool worker killed mid-commit) leaves the
+        record pending for the next poll — versions never apply out of
+        order, and the stream cursor is never replayed."""
+        records = self._pending_updates \
+            + list(self._updates.stream.poll())
+        self._pending_updates = []
+        if not records:
+            return
+        t0 = time.perf_counter()
+        deadline = t0 + self._updates.drain_timeout_s
+        while self.server.batcher.queue and time.perf_counter() < deadline:
+            self.server.poll(force=True)
+        for i, rec in enumerate(records):
+            v = int(rec["version"])
+            self.storage.begin_update(v)
+            for t, (rows, vals) in rec["tables"].items():
+                self.storage.apply_update(int(t), rows, vals)
+            res = self.storage.commit_update(v)
+            if not res.get("updated"):
+                self._updates_rolled_back += 1
+                self._pending_updates = records[i:]
+                break
+            self._model_version = v
+            self._updates_applied += 1
+            if rec.get("kind") == "delta":
+                self._updates_delta += 1
+            else:
+                self._updates_full += 1
+        self._update_stall_s += time.perf_counter() - t0
 
     def drain(self, timeout_s: float = 10.0) -> None:
         """`InferenceServer.drain` routed through `self.poll` so the
@@ -218,6 +304,13 @@ class ServingSession:
             out.update(self.tuner.summary())
         if self.slo is not None and out:
             out.update(self.slo.summary())
+        if self._updates is not None and out:
+            out["model_version"] = self._model_version
+            out["updates_applied"] = self._updates_applied
+            out["updates_delta"] = self._updates_delta
+            out["updates_full"] = self._updates_full
+            out["updates_rolled_back"] = self._updates_rolled_back
+            out["update_stall_s"] = float(self._update_stall_s)
         return out
 
     def sla_violations(self) -> int:

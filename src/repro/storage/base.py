@@ -80,6 +80,13 @@ class StorageCapabilities:
     # PSConfig.fused_lookup=True and a device-resident warm payload; the
     # per-row Python path serves otherwise (same bits either way).
     fused_lookup: bool = False
+    # online model updates: begin_update()/apply_update()/commit_update()/
+    # abort_update() install a NEW weight version transactionally — applied
+    # rows stay invisible to lookups until commit, commit is all-or-none
+    # across shards/workers, abort keeps serving the old version bit-exact,
+    # and version() reports the committed version. False (the default)
+    # means all the update verbs are inert no-ops.
+    updatable: bool = False
 
     def describe(self) -> str:
         on = [f.name for f in dataclasses.fields(self)
@@ -250,6 +257,39 @@ class EmbeddingStorage(abc.ABC):
         so a failed or rejected migration always leaves the old backend
         serving. Returns at least {'migrated': bool}."""
         return {"migrated": False}
+
+    # -- online model update hooks ------------------------------------------
+    def version(self) -> int:
+        """Currently COMMITTED model version (0 = the build-time weights).
+        Lookups always serve exactly this version's bytes — an open
+        update transaction is invisible until `commit_update`."""
+        return 0
+
+    def begin_update(self, version: int) -> bool:
+        """Open an update transaction targeting `version` (> the committed
+        version; one transaction at a time). Returns False when the
+        backend cannot update (the inert default)."""
+        return False
+
+    def apply_update(self, table: int, rows: np.ndarray,
+                     values: np.ndarray) -> bool:
+        """Buffer changed rows (`rows` [n] ints, `values` [n, D]) for the
+        open transaction. NOT visible to lookups until commit — a lookup
+        racing an apply serves the old version bit-exact."""
+        return False
+
+    def commit_update(self, version: int) -> dict:
+        """Atomically publish the open transaction: every tier/shard/worker
+        swaps to the new rows all-or-none, stale cache entries for touched
+        rows are invalidated or re-staged (never served), and `version()`
+        advances. Returns at least {'updated': bool}."""
+        return {"updated": False}
+
+    def abort_update(self, version: int) -> bool:
+        """Discard the open transaction; the old version keeps serving
+        untouched. Also the rollback path when a participant dies between
+        apply and commit."""
+        return False
 
     # -- stats & hygiene ----------------------------------------------------
     def stats(self) -> dict:

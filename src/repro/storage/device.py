@@ -23,10 +23,88 @@ from repro.storage.registry import register
 
 @register("device")
 class DeviceStorage(EmbeddingStorage):
-    """Dense device-resident storage: params ARE the storage."""
+    """Dense device-resident storage: params ARE the storage.
+
+    Online updates therefore mutate the bound params dict: `build(params)`
+    binds it (same object the serving engine reads each call), and
+    `commit_update` replaces `params["tables"]` with a scattered copy —
+    logical row ids route through the EBC's hot-first remap, since the
+    stored tables are physically permuted when `pinned_rows > 0`."""
+
+    def __init__(self, ebc):
+        super().__init__(ebc)
+        self._params = None
+        self._version = 0
+        self._update_txn = None
 
     def capabilities(self) -> StorageCapabilities:
-        return StorageCapabilities(device_resident=True)
+        return StorageCapabilities(device_resident=True, updatable=True)
+
+    def build(self, params: dict, **kwargs) -> "DeviceStorage":
+        """No materialization needed (params already ARE the storage) —
+        binding the dict here is what arms online updates."""
+        if kwargs:
+            raise TypeError(f"backend {self.name!r} takes no build "
+                            f"options, got {sorted(kwargs)}")
+        # accept full-DLRM or embedding-only trees (same law as the tiered
+        # _extract_tables): commit must swap "tables" inside the SUB-dict
+        # the model's forward actually indexes
+        if "tables" not in params and "embedding" in params:
+            params = params["embedding"]
+        self._params = params
+        return self
+
+    # -- online model updates -------------------------------------------------
+    def version(self) -> int:
+        return self._version
+
+    def begin_update(self, version: int) -> bool:
+        from repro.core.update import UpdateTxn
+        if self._params is None:
+            raise RuntimeError(
+                "device updates mutate the bound params' tables in "
+                "place — call storage.build(params) first")
+        if self._update_txn is not None:
+            raise RuntimeError(
+                f"an update to v{self._update_txn.version} is already "
+                f"open — commit or abort it first")
+        self._update_txn = UpdateTxn(version, self._version)
+        return True
+
+    def apply_update(self, table: int, rows, values) -> bool:
+        from repro.core.update import require_open
+        cfg = self.cfg
+        require_open(self._update_txn, "apply_update").add(
+            table, rows, values, num_tables=cfg.num_tables,
+            num_rows=cfg.rows, dim=cfg.dim, dtype=cfg.jnp_dtype)
+        return True
+
+    def commit_update(self, version: int) -> dict:
+        from repro.core.update import require_open
+        txn = require_open(self._update_txn, "commit_update")
+        txn.check_commit(version)
+        merged = txn.merged()
+        tables = self._params["tables"]
+        applied = 0
+        for t, (rows, vals) in merged.items():
+            phys = (rows if self.ebc._remap is None
+                    else self.ebc._remap[t][rows])
+            tables = tables.at[t, phys].set(vals)
+            applied += int(rows.size)
+        # same dict object the engine reads per call: the swap is visible
+        # on the NEXT forward, never mid-batch
+        self._params["tables"] = tables
+        self._version = txn.version
+        self._update_txn = None
+        return {"updated": True, "version": self._version,
+                "rows": applied, "tables": len(merged)}
+
+    def abort_update(self, version: int) -> bool:
+        if self._update_txn is None:
+            return False
+        self._update_txn.check_commit(version)
+        self._update_txn = None
+        return True
 
     def lookup(self, params: dict, indices, weights=None, *,
                pre_remapped: bool = False):

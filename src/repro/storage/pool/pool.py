@@ -171,6 +171,10 @@ class PoolStorage(EmbeddingStorage):
         self._tenant_hints: dict[str, int] = {}
         self._tenant_degraded: dict[str, bool] = {}
         self._tenant_depth: dict[str, int] = {}   # respawn re-applies
+        self._version = 0
+        self._update_txn = None
+        self._tenant_versions: dict[str, int] = {}
+        self._tenant_txns: dict[str, Any] = {}
         self._timeout = DEFAULT_TIMEOUT
         self._ctx = None
         # backend-level sliding traffic window — migration plans from FULL
@@ -193,7 +197,8 @@ class PoolStorage(EmbeddingStorage):
             tunable=live,
             migratable=live,
             degradable=live,
-            fused_lookup=live and self._ps_cfg.fused_lookup)
+            fused_lookup=live and self._ps_cfg.fused_lookup,
+            updatable=live)
 
     @property
     def num_shards(self) -> int:
@@ -341,6 +346,11 @@ class PoolStorage(EmbeddingStorage):
         self.migration_threshold = migration_threshold
         self._replicate_factor = float(replicate_factor)
         self._prefetch_depth = ps_cfg.prefetch_depth
+        # a (re)build installs fresh tables: version history restarts
+        self._version = 0
+        self._update_txn = None
+        self._tenant_versions = {name: 0 for name in spaces}
+        self._tenant_txns = {}
         self.window = deque(maxlen=ps_cfg.window_batches)
         self._valid_hint = None
         self._closed = False
@@ -860,6 +870,171 @@ class PoolStorage(EmbeddingStorage):
                 "imbalance_before": round(mig.imbalance_before, 4),
                 "imbalance_after": round(mig.imbalance_after, 4)}
 
+    # -- online model updates ------------------------------------------------
+    def version(self) -> int:
+        return self._version
+
+    def begin_update(self, version: int) -> bool:
+        from repro.core.update import UpdateTxn
+        self._require_built()
+        self._reject_under_tenancy("begin_update")
+        if self._update_txn is not None:
+            raise RuntimeError(
+                f"an update to v{self._update_txn.version} is already "
+                f"open — commit or abort it first")
+        self._update_txn = UpdateTxn(version, self._version)
+        return True
+
+    def apply_update(self, table: int, rows, values) -> bool:
+        from repro.core.update import require_open
+        cfg = self.cfg
+        require_open(self._update_txn, "apply_update").add(
+            table, rows, values, num_tables=cfg.num_tables,
+            num_rows=cfg.rows, dim=cfg.dim, dtype=self._dtype)
+        return True
+
+    def _segment_tables(self) -> np.ndarray:
+        """Writable [T, R, D] view over the shared cold-table segment —
+        the pool is the segment OWNER (workers map it read-only)."""
+        _, dtype, shape = self._seg_meta
+        return np.ndarray(tuple(shape), np.dtype(dtype),
+                          buffer=self._segment.buf)
+
+    def _distribute_commit(self, version: int, merged: dict) -> dict:
+        """Two-phase distributed commit of `merged` ({global table ->
+        (rows, values)}) across the worker pool.
+
+        Phase 1 ships the rows to every worker hosting a touched table,
+        which BUFFERS them (no tier touched). A worker killed here — the
+        'between apply and commit' crash the rollback test drives — aborts
+        the survivors' buffers and respawns the dead worker against the
+        UNMODIFIED segment: the old version keeps serving bit-exactly.
+
+        Only when every worker holds its buffer does phase 2 write the new
+        bytes into the shared segment (no lookup is in flight during this
+        synchronous call, so the write races nothing) and commit the
+        caches everywhere. A death in phase 2 rolls FORWARD: the respawn
+        rebuilds every tier from the already-updated segment."""
+        tables_by_worker: dict[int, dict] = {}
+        for w, units in enumerate(self._worker_units):
+            owned = {int(t) for u in units for t in u.table_ids}
+            mine = {t: payload for t, payload in merged.items()
+                    if t in owned}
+            if mine:
+                tables_by_worker[w] = mine
+        targets = sorted(tables_by_worker)
+
+        outs, errs = self._map_workers(
+            lambda w: self._call(w, "apply_update",
+                                 {"version": int(version),
+                                  "tables": tables_by_worker[w]}),
+            targets)
+        if errs:
+            dead = [w for w, e in errs.items()
+                    if isinstance(e, WorkerDeadError)]
+            live = [w for w in targets if w not in dead]
+            self._map_workers(
+                lambda w: self._call(w, "abort_update"), live)
+            for w in dead:
+                self._respawn_worker(w)   # old segment bytes: old version
+            remote = [e for e in errs.values()
+                      if not isinstance(e, WorkerDeadError)]
+            if remote:
+                raise remote[0]
+            return {"updated": False, "rolled_back": True,
+                    "respawned_workers": dead}
+
+        seg = self._segment_tables()
+        applied = 0
+        for t, (rows, vals) in merged.items():
+            seg[t, rows] = vals
+            applied += int(rows.size)
+
+        outs, errs = self._map_workers(
+            lambda w: self._call(w, "commit_update",
+                                 {"version": int(version)}),
+            targets)
+        respawned: list[int] = []
+        if errs:
+            respawned = sorted(errs)
+            self._recover(errs)   # roll forward — see the docstring
+        return {"updated": True, "rows": applied, "tables": len(merged),
+                "respawned_workers": respawned}
+
+    def commit_update(self, version: int) -> dict:
+        from repro.core.update import require_open
+        self._require_built()
+        self._reject_under_tenancy("commit_update")
+        txn = require_open(self._update_txn, "commit_update")
+        txn.check_commit(version)
+        res = self._distribute_commit(version, txn.merged())
+        self._update_txn = None   # a rollback drops the buffered rows too
+        if res.get("updated"):
+            self._version = txn.version
+            res["version"] = self._version
+        return res
+
+    def abort_update(self, version: int) -> bool:
+        if self._update_txn is None:
+            return False
+        self._update_txn.check_commit(version)
+        self._update_txn = None
+        return True
+
+    def tenant_version(self, name: str) -> int:
+        self._ns(name)
+        return self._tenant_versions.get(name, 0)
+
+    def tenant_begin_update(self, name: str, version: int) -> bool:
+        from repro.core.update import UpdateTxn
+        self._require_built()
+        self._ns(name)
+        open_txn = self._tenant_txns.get(name)
+        if open_txn is not None:
+            raise RuntimeError(
+                f"tenant {name!r} already has an update to "
+                f"v{open_txn.version} open — commit or abort it first")
+        self._tenant_txns[name] = UpdateTxn(
+            version, self._tenant_versions.get(name, 0))
+        return True
+
+    def tenant_apply_update(self, name: str, table: int, rows,
+                            values) -> bool:
+        from repro.core.update import require_open
+        ns = self._ns(name)
+        require_open(self._tenant_txns.get(name), "apply_update").add(
+            table, rows, values, num_tables=ns.num_tables,
+            num_rows=self.cfg.rows, dim=self.cfg.dim, dtype=self._dtype)
+        return True
+
+    def tenant_commit_update(self, name: str, version: int) -> dict:
+        """Tenant-scoped two-phase commit: table ids translate from the
+        namespace to the global axis, and tenant-pure units mean the
+        fan-out only ever touches THIS tenant's units — a sibling's
+        version and caches are untouched by construction."""
+        from repro.core.update import require_open
+        self._require_built()
+        ns = self._ns(name)
+        txn = require_open(self._tenant_txns.get(name), "commit_update")
+        txn.check_commit(version)
+        merged = {ns.start + t: payload
+                  for t, payload in txn.merged().items()}
+        res = self._distribute_commit(version, merged)
+        self._tenant_txns.pop(name, None)
+        if res.get("updated"):
+            self._tenant_versions[name] = txn.version
+            res["version"] = txn.version
+            res["tenant"] = name
+        return res
+
+    def tenant_abort_update(self, name: str, version: int) -> bool:
+        txn = self._tenant_txns.get(name)
+        if txn is None:
+            return False
+        txn.check_commit(version)
+        self._tenant_txns.pop(name, None)
+        return True
+
     # -- runtime tuning ------------------------------------------------------
     def prefetch_depth(self) -> int:
         return self._prefetch_depth if self._units else 0
@@ -1291,4 +1466,6 @@ class PoolStorage(EmbeddingStorage):
         self._tenant_hints = {}
         self._tenant_degraded = {}
         self._tenant_depth = {}
+        self._update_txn = None
+        self._tenant_txns = {}
         self.window.clear()

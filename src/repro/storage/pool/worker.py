@@ -75,6 +75,7 @@ class _WorkerState:
         self.segment = None                   # shared cold-table segment
         self.tables = None                    # [T, R, D] view over it
         self.degraded = False
+        self.pending_update = None            # (version, {t: (rows, vals)})
 
     # -- lifecycle ----------------------------------------------------------
     def do_ping(self):
@@ -300,6 +301,72 @@ class _WorkerState:
             if u is not None:
                 u.ps.prefetch.flush()
         return {"flushed": sorted(int(u) for u in unit_ids)}
+
+    # -- online model updates ------------------------------------------------
+    def do_apply_update(self, version, tables):
+        """Phase 1 of the pool's distributed commit: buffer + validate the
+        update rows for this worker's tables WITHOUT touching any tier —
+        the worker can still die (or the pool can abort) and the committed
+        version keeps serving untouched."""
+        if self.tables is None:
+            raise RuntimeError(f"worker {self.worker}: attach_tables must "
+                               f"run before apply_update")
+        T, R, _ = self.tables.shape
+        buffered = {}
+        total = 0
+        for t, (rows, vals) in tables.items():
+            t = int(t)
+            if not 0 <= t < T:
+                raise ValueError(f"update table {t} out of range [0, {T})")
+            rows = np.asarray(rows, np.int64).ravel()
+            if rows.size and (rows.min() < 0 or rows.max() >= R):
+                raise ValueError(f"update rows for table {t} out of "
+                                 f"range [0, {R})")
+            vals = np.asarray(vals)
+            if vals.dtype != self.tables.dtype:
+                raise ValueError(
+                    f"update dtype {vals.dtype} != table dtype "
+                    f"{self.tables.dtype}")
+            buffered[t] = (rows, vals)
+            total += int(rows.size)
+        self.pending_update = (int(version), buffered)
+        return {"buffered": total}
+
+    def do_commit_update(self, version):
+        """Phase 2: the pool already wrote the new bytes into the shared
+        segment; fix every unit's caches over them. Zero-copy view units
+        see the new cold rows through the segment (write_cold=False —
+        only caches and the norm cache need maintenance); private-gather
+        units write their own cold copy. A RESPAWNED worker arrives here
+        with no pending buffer and returns a no-op — its units were
+        rebuilt from the already-updated segment, so it is consistent by
+        construction."""
+        if self.pending_update is None:
+            return {"applied": 0, "units": 0, "respawned": True}
+        pv, buffered = self.pending_update
+        if pv != int(version):
+            raise RuntimeError(
+                f"worker {self.worker}: commit_update(v{version}) does "
+                f"not match the buffered update (v{pv})")
+        applied = units = 0
+        for u in self.units.values():
+            local = {}
+            for li, t in enumerate(u.table_ids):
+                if int(t) in buffered:
+                    local[li] = buffered[int(t)]
+            if not local:
+                continue
+            write_cold = bool(u.ps.cold.tables.flags.writeable)
+            applied += u.ps._install_update_rows(local,
+                                                 write_cold=write_cold)
+            units += 1
+        self.pending_update = None
+        return {"applied": applied, "units": units}
+
+    def do_abort_update(self):
+        had = self.pending_update is not None
+        self.pending_update = None
+        return {"aborted": had}
 
     # -- stats --------------------------------------------------------------
     @staticmethod

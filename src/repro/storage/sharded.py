@@ -237,6 +237,12 @@ class ShardedStorage(EmbeddingStorage):
         self._tenants: dict[str, TenantNamespace] = {}
         self._tenant_hints: dict[str, int] = {}
         self._tenant_degraded: dict[str, bool] = {}
+        # online model updates: whole-backend version/transaction plus
+        # per-tenant counterparts (tenants upgrade independently)
+        self._version = 0
+        self._update_txn = None
+        self._tenant_versions: dict[str, int] = {}
+        self._tenant_txns: dict[str, Any] = {}
         # backend-level sliding traffic window ([B, T, L] real-traffic
         # slices) — migration plans from FULL batches, which per-unit
         # windows (sliced tables, sliced replicas) cannot reconstruct
@@ -263,7 +269,8 @@ class ShardedStorage(EmbeddingStorage):
             migratable=bool(self.shards),
             degradable=bool(self.shards),
             fused_lookup=bool(self.shards) and all(
-                ps.supports_fused() for ps in self.shards))
+                ps.supports_fused() for ps in self.shards),
+            updatable=bool(self.shards))
 
     @property
     def num_shards(self) -> int:
@@ -455,6 +462,12 @@ class ShardedStorage(EmbeddingStorage):
         self._tenant_hints = {}
         self._tenant_degraded = {name: False for name in spaces}
         self._tables = tables
+        # a (re)build installs params' weights wholesale: version restarts
+        # at 0 and any buffered transaction dies with the old units
+        self._version = 0
+        self._update_txn = None
+        self._tenant_versions = {name: 0 for name in spaces}
+        self._tenant_txns = {}
         self._ps_cfg = ps_cfg
         self.migration_threshold = migration_threshold
         self._replicate_factor = float(replicate_factor)
@@ -850,6 +863,140 @@ class ShardedStorage(EmbeddingStorage):
                 "imbalance_before": round(mig.imbalance_before, 4),
                 "imbalance_after": round(mig.imbalance_after, 4)}
 
+    # -- online model updates ------------------------------------------------
+    def version(self) -> int:
+        return self._version
+
+    def begin_update(self, version: int) -> bool:
+        from repro.core.update import UpdateTxn
+        self._require_built()
+        self._reject_under_tenancy("begin_update")
+        if self._update_txn is not None:
+            raise RuntimeError(
+                f"an update to v{self._update_txn.version} is already "
+                f"open — commit or abort it first")
+        self._update_txn = UpdateTxn(version, self._version)
+        return True
+
+    def apply_update(self, table: int, rows, values) -> bool:
+        from repro.core.update import require_open
+        require_open(self._update_txn, "apply_update").add(
+            table, rows, values, num_tables=self.cfg.num_tables,
+            num_rows=self.cfg.rows, dim=self.cfg.dim,
+            dtype=self._tables.dtype)
+        return True
+
+    def _commit_units(self, units: list[_Unit], merged: dict) -> int:
+        """Fan committed rows to every unit owning a touched table —
+        replicas included (each copy must take the new bytes).
+
+        All-units-or-none by construction: the per-unit local payloads
+        are computed FIRST (pure — anything that can raise, raises here
+        with no unit touched), and only then does the install loop run,
+        which is plain tier maintenance that cannot fail — the same
+        validate-before-mutate shape `_construct_units`/`_install_units`
+        give migration."""
+        per_unit = []
+        for u in units:
+            index_of = {int(t): i for i, t in enumerate(u.table_ids)}
+            local = {index_of[int(t)]: payload
+                     for t, payload in merged.items()
+                     if int(t) in index_of}
+            per_unit.append(local)
+        touched = 0
+        for u, local in zip(units, per_unit):
+            if local:
+                u.ps._install_update_rows(local)
+                touched += 1
+        return touched
+
+    def _write_authoritative(self, merged: dict) -> None:
+        """The backend-level table copy migration rebuilds units from
+        must carry the new bytes too — otherwise the next swap would
+        silently roll the weights back."""
+        if not self._tables.flags.writeable:
+            self._tables = self._tables.copy()
+        for t, (rows, vals) in merged.items():
+            self._tables[t, rows] = vals
+
+    def commit_update(self, version: int) -> dict:
+        from repro.core.update import require_open
+        self._require_built()
+        self._reject_under_tenancy("commit_update")
+        txn = require_open(self._update_txn, "commit_update")
+        txn.check_commit(version)
+        merged = txn.merged()
+        units = self._commit_units(self._units, merged)
+        self._write_authoritative(merged)
+        self._version = txn.version
+        self._update_txn = None
+        return {"updated": True, "version": self._version,
+                "rows": txn.rows, "tables": len(merged), "units": units}
+
+    def abort_update(self, version: int) -> bool:
+        if self._update_txn is None:
+            return False
+        self._update_txn.check_commit(version)
+        self._update_txn = None
+        return True
+
+    # tenant-scoped updates: each tenant runs its own version counter and
+    # transaction over ITS namespace — tenants upgrade independently, and
+    # sibling units are never touched (same isolation law as attach/detach)
+    def tenant_version(self, name: str) -> int:
+        self._ns(name)
+        return self._tenant_versions.get(name, 0)
+
+    def tenant_begin_update(self, name: str, version: int) -> bool:
+        from repro.core.update import UpdateTxn
+        self._require_built()
+        self._ns(name)
+        if name in self._tenant_txns:
+            raise RuntimeError(
+                f"tenant {name!r} already has an update open to "
+                f"v{self._tenant_txns[name].version}")
+        self._tenant_txns[name] = UpdateTxn(
+            version, self._tenant_versions.get(name, 0))
+        return True
+
+    def tenant_apply_update(self, name: str, table: int, rows,
+                            values) -> bool:
+        from repro.core.update import require_open
+        ns = self._ns(name)
+        require_open(self._tenant_txns.get(name),
+                     f"tenant {name!r} apply_update").add(
+            table, rows, values, num_tables=ns.num_tables,
+            num_rows=self.cfg.rows, dim=self.cfg.dim,
+            dtype=self._tables.dtype)
+        return True
+
+    def tenant_commit_update(self, name: str, version: int) -> dict:
+        from repro.core.update import require_open
+        self._require_built()
+        ns = self._ns(name)
+        txn = require_open(self._tenant_txns.get(name),
+                           f"tenant {name!r} commit_update")
+        txn.check_commit(version)
+        # tenant-local table ids -> global, then the standard unit fan-out
+        # restricted to THIS tenant's units
+        merged = {ns.start + t: payload
+                  for t, payload in txn.merged().items()}
+        units = self._commit_units(self._tenant_units(name), merged)
+        self._write_authoritative(merged)
+        self._tenant_versions[name] = txn.version
+        del self._tenant_txns[name]
+        return {"updated": True, "tenant": name, "version": txn.version,
+                "rows": txn.rows, "tables": len(merged), "units": units}
+
+    def tenant_abort_update(self, name: str, version: int) -> bool:
+        self._ns(name)
+        txn = self._tenant_txns.get(name)
+        if txn is None:
+            return False
+        txn.check_commit(version)
+        del self._tenant_txns[name]
+        return True
+
     # -- runtime tuning ------------------------------------------------------
     def prefetch_depth(self) -> int:
         return max((ps.prefetch.depth for ps in self.shards), default=0)
@@ -1106,6 +1253,7 @@ class ShardedStorage(EmbeddingStorage):
         self.shards = [u.ps for u in self._units]
         self._tenants[ns.name] = ns
         self._tenant_degraded[ns.name] = False
+        self._tenant_versions[ns.name] = 0
         self._epoch += 1          # in-flight refresh plans re-plan next cycle
         return ns
 
@@ -1125,6 +1273,8 @@ class ShardedStorage(EmbeddingStorage):
         del self._tenants[name]
         self._tenant_hints.pop(name, None)
         self._tenant_degraded.pop(name, None)
+        self._tenant_versions.pop(name, None)
+        self._tenant_txns.pop(name, None)
         self._epoch += 1
         return len(removed)
 
@@ -1189,4 +1339,6 @@ class ShardedStorage(EmbeddingStorage):
         self._tenants = {}
         self._tenant_hints = {}
         self._tenant_degraded = {}
+        self._update_txn = None
+        self._tenant_txns = {}
         self.window.clear()

@@ -168,6 +168,26 @@ class TenantStorage(EmbeddingStorage):
     def set_degraded(self, on: bool) -> bool:
         return self.shared.tenant_set_degraded(self.tenant, on)
 
+    # -- online model updates -------------------------------------------------
+    # tenant-scoped: table ids are TENANT-LOCAL, the version counter is
+    # this tenant's own — tenants upgrade independently and a sibling's
+    # units are never touched
+    def version(self) -> int:
+        return self.shared.tenant_version(self.tenant)
+
+    def begin_update(self, version: int) -> bool:
+        return self.shared.tenant_begin_update(self.tenant, version)
+
+    def apply_update(self, table: int, rows, values) -> bool:
+        return self.shared.tenant_apply_update(self.tenant, table, rows,
+                                               values)
+
+    def commit_update(self, version: int) -> dict:
+        return self.shared.tenant_commit_update(self.tenant, version)
+
+    def abort_update(self, version: int) -> bool:
+        return self.shared.tenant_abort_update(self.tenant, version)
+
     # -- placement -----------------------------------------------------------
     def update_routing(self) -> Optional[dict]:
         # replica routing is per-table, so the global fold is tenant-safe

@@ -101,7 +101,8 @@ class TieredStorage(EmbeddingStorage):
             shardable=False,
             tunable=self.ps is not None,
             degradable=self.ps is not None,
-            fused_lookup=self.ps is not None and self.ps.supports_fused())
+            fused_lookup=self.ps is not None and self.ps.supports_fused(),
+            updatable=self.ps is not None)
 
     # -- construction -------------------------------------------------------
     def build(self, params: dict, ps_cfg=None,
@@ -204,6 +205,25 @@ class TieredStorage(EmbeddingStorage):
     def refresh(self) -> dict:
         self._require_built()
         return self.ps.refresh()
+
+    # -- online model updates ------------------------------------------------
+    def version(self) -> int:
+        return 0 if self.ps is None else self.ps.version()
+
+    def begin_update(self, version: int) -> bool:
+        self._require_built()
+        return self.ps.begin_update(version)
+
+    def apply_update(self, table: int, rows, values) -> bool:
+        self._require_built()
+        return self.ps.apply_update(table, rows, values)
+
+    def commit_update(self, version: int) -> dict:
+        self._require_built()
+        return self.ps.commit_update(version)
+
+    def abort_update(self, version: int) -> bool:
+        return False if self.ps is None else self.ps.abort_update(version)
 
     # -- runtime tuning ------------------------------------------------------
     def prefetch_depth(self) -> int:

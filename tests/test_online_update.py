@@ -1,0 +1,449 @@
+"""Zero-downtime online model updates (PR 10).
+
+Pins the acceptance contract of the versioned-update stack:
+
+  * every updatable backend (`device`, `tiered`, `sharded`, `pool`,
+    tenant views) speaks begin/apply/commit/abort and serves the OLD
+    version bit-exact until commit — buffered rows are invisible;
+  * after commit, lookups are bit-exact against a dense-gather oracle
+    holding the updated tables; abort restores cleanly and the version
+    never advances;
+  * the shared `UpdateTxn` plumbing enforces version monotonicity,
+    one-open-transaction, geometry/dtype validation at apply time, and
+    last-write-wins merge of repeated row applies;
+  * a delta landing while a sharded migration plan is in flight commits
+    correctly, and installing the (still-fresh) plan afterwards carries
+    the new bytes — migration never rolls weights back;
+  * pool commits are two-phase: a worker killed between apply and
+    commit rolls the WHOLE update back (old version keeps serving,
+    dead worker respawned), and the immediate retry succeeds;
+  * tenant-scoped updates bump only their tenant's version and never
+    disturb sibling tables;
+  * the serving-session epoch guard: queries are pinned to the model
+    version at ADMISSION, every served batch is single-version, and
+    each response is bit-exact against the pinned version's snapshot
+    run through the same jitted engine shapes.
+"""
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import ModelUpdateStream
+from repro.core import (EmbeddingBagCollection, EmbeddingStageConfig,
+                        make_pattern)
+from repro.models.dlrm import DLRM, DLRMConfig
+from repro.ps import PSConfig
+from repro import serving
+
+ROWS, TABLES, DIM, POOL = 256, 6, 16, 6
+SKEWED = ("one_item", "one_item", "high_hot", "med_hot", "random", "random")
+
+
+def _pats(hotness=SKEWED):
+    return [make_pattern(h, ROWS, seed=t) for t, h in enumerate(hotness)]
+
+
+def _batch(pats, batch, seed):
+    return np.stack([p.sample(batch, POOL, seed=seed * 100 + t)
+                     for t, p in enumerate(pats)], axis=1).astype(np.int32)
+
+
+def _trace(pats, batches=3, batch=8, seed0=50):
+    return np.concatenate([_batch(pats, batch, seed0 + s)
+                           for s in range(batches)], axis=0)
+
+
+def _stage_cfg(storage="device"):
+    return EmbeddingStageConfig(num_tables=TABLES, rows=ROWS, dim=DIM,
+                                pooling=POOL, backend="xla",
+                                storage=storage)
+
+
+@pytest.fixture(scope="module")
+def dense_ref():
+    ebc = EmbeddingBagCollection(_stage_cfg("device"))
+    params = ebc.init(jax.random.PRNGKey(0))
+    return ebc, params
+
+
+def _oracle_apply(ebc0, params, tables, idx):
+    """Dense-gather reference at an explicit [T, R, D] snapshot."""
+    padded = np.asarray(params["tables"]).copy()
+    padded[:TABLES] = tables
+    return np.asarray(ebc0.apply({"tables": jnp.asarray(padded)},
+                                 jnp.asarray(idx)))
+
+
+def _delta(rng, tables, n_tables=2, n_rows=5):
+    """Random changed-rows payload + the updated oracle snapshot."""
+    changed = {}
+    want = tables.copy()
+    for t in rng.choice(TABLES, size=n_tables, replace=False):
+        rows = rng.choice(ROWS, size=n_rows, replace=False)
+        vals = rng.normal(size=(n_rows, DIM)).astype(np.float32)
+        changed[int(t)] = (rows, vals)
+        want[int(t), rows] = vals
+    return changed, want
+
+
+# ---------------------------------------------------------------------------
+# storage-level round trip: invisible -> commit bit-exact -> abort clean
+# ---------------------------------------------------------------------------
+
+def _build(kind, params, pats, **kw):
+    ebc = EmbeddingBagCollection(_stage_cfg(kind))
+    if kind == "device":
+        ebc.storage.build(params)
+        return ebc
+    cfg = PSConfig(hot_rows=16, warm_slots=16, prefetch_depth=2)
+    if kind == "sharded":
+        kw.setdefault("num_shards", 2)
+        kw.setdefault("trace", _trace(pats))
+    elif kind == "pool":
+        kw.setdefault("num_workers", 2)
+        kw.setdefault("num_shards", 2)
+        kw.setdefault("trace", _trace(pats))
+    ebc.storage.build(params, cfg, **kw)
+    return ebc
+
+
+@pytest.mark.parametrize("kind", ["device", "tiered", "sharded", "pool"])
+def test_update_invisible_then_commit_bit_exact(dense_ref, kind):
+    ebc0, dense_params = dense_ref
+    pats = _pats()
+    rng = np.random.default_rng(0)
+    ebc = EmbeddingBagCollection(_stage_cfg("device"))
+    params = ebc.init(jax.random.PRNGKey(0))     # fresh: device path mutates
+    ebc = _build(kind, params, pats)
+    st = ebc.storage
+    tables = np.asarray(params["tables"])[:TABLES].copy()
+    idx = _batch(pats, 8, seed=1)
+
+    assert st.capabilities().updatable
+    assert st.version() == 0
+    np.testing.assert_array_equal(
+        np.asarray(ebc.apply(params, jnp.asarray(idx))),
+        _oracle_apply(ebc0, dense_params, tables, idx))
+
+    changed, want = _delta(rng, tables)
+    st.begin_update(1)
+    for t, (rows, vals) in changed.items():
+        st.apply_update(t, rows, vals)
+    # buffered rows are INVISIBLE until commit — old version still serves
+    np.testing.assert_array_equal(
+        np.asarray(ebc.apply(params, jnp.asarray(idx))),
+        _oracle_apply(ebc0, dense_params, tables, idx))
+
+    res = st.commit_update(1)
+    assert res["updated"] and res["version"] == 1 and st.version() == 1
+    np.testing.assert_array_equal(
+        np.asarray(ebc.apply(params, jnp.asarray(idx))),
+        _oracle_apply(ebc0, dense_params, want, idx))
+
+    # abort: buffered rows dropped, version pinned, serving untouched
+    changed2, _ = _delta(rng, want)
+    st.begin_update(2)
+    for t, (rows, vals) in changed2.items():
+        st.apply_update(t, rows, vals)
+    assert st.abort_update(2) is True
+    assert st.abort_update(2) is False           # idempotent when closed
+    assert st.version() == 1
+    np.testing.assert_array_equal(
+        np.asarray(ebc.apply(params, jnp.asarray(idx))),
+        _oracle_apply(ebc0, dense_params, want, idx))
+    if hasattr(st, "close"):
+        st.close()
+
+
+def test_update_txn_guards():
+    pats = _pats()
+    ebc = EmbeddingBagCollection(_stage_cfg("tiered"))
+    params = ebc.init(jax.random.PRNGKey(0))
+    ebc.storage.build(params, PSConfig(hot_rows=16, warm_slots=16))
+    st = ebc.storage
+    with pytest.raises(ValueError, match="monotonic"):
+        st.begin_update(0)
+    with pytest.raises(RuntimeError, match="begin_update"):
+        st.apply_update(0, np.array([0]), np.zeros((1, DIM), np.float32))
+    with pytest.raises(RuntimeError, match="begin_update"):
+        st.commit_update(1)
+    st.begin_update(1)
+    with pytest.raises(RuntimeError, match="already"):
+        st.begin_update(2)
+    with pytest.raises(ValueError, match="outside"):
+        st.apply_update(TABLES, np.array([0]), np.zeros((1, DIM), np.float32))
+    with pytest.raises(ValueError, match="outside"):
+        st.apply_update(0, np.array([ROWS]), np.zeros((1, DIM), np.float32))
+    with pytest.raises(ValueError, match="shape"):
+        st.apply_update(0, np.array([0]), np.zeros((2, DIM), np.float32))
+    with pytest.raises(ValueError, match="dtype"):
+        st.apply_update(0, np.array([0]), np.zeros((1, DIM), np.float64))
+    with pytest.raises(ValueError, match="does not match"):
+        st.commit_update(7)
+    assert st.version() == 0                      # nothing leaked through
+    assert st.abort_update(1)
+
+
+def test_update_last_write_wins(dense_ref):
+    ebc0, dense_params = dense_ref
+    pats = _pats()
+    ebc = EmbeddingBagCollection(_stage_cfg("tiered"))
+    params = ebc.init(jax.random.PRNGKey(0))
+    ebc.storage.build(params, PSConfig(hot_rows=16, warm_slots=16))
+    st = ebc.storage
+    tables = np.asarray(params["tables"])[:TABLES].copy()
+    rng = np.random.default_rng(1)
+    first = rng.normal(size=(3, DIM)).astype(np.float32)
+    last = rng.normal(size=(2, DIM)).astype(np.float32)
+    st.begin_update(1)
+    st.apply_update(2, np.array([4, 5, 6]), first)
+    st.apply_update(2, np.array([5, 6]), last)    # overwrites rows 5, 6
+    st.apply_update(3, np.array([], np.int64),
+                    np.zeros((0, DIM), np.float32))   # empty delta: legal
+    res = st.commit_update(1)
+    assert res["updated"] and res["tables"] == 1
+    want = tables.copy()
+    want[2, [4, 5, 6]] = first
+    want[2, [5, 6]] = last
+    idx = _batch(pats, 8, seed=2)
+    np.testing.assert_array_equal(
+        np.asarray(ebc.apply(params, jnp.asarray(idx))),
+        _oracle_apply(ebc0, dense_params, want, idx))
+
+
+# ---------------------------------------------------------------------------
+# sharded: delta during an in-flight migration plan
+# ---------------------------------------------------------------------------
+
+def test_sharded_update_during_inflight_migration(dense_ref):
+    ebc0, dense_params = dense_ref
+    pats = _pats()
+    rng = np.random.default_rng(2)
+    ebc = EmbeddingBagCollection(_stage_cfg("sharded"))
+    params = ebc.init(jax.random.PRNGKey(0))
+    ebc.storage.build(params,
+                      PSConfig(hot_rows=16, warm_slots=16,
+                               async_prefetch=True, window_batches=8),
+                      trace=_trace(pats), num_shards=2,
+                      placement="contiguous", migration_threshold=1.1)
+    st = ebc.storage
+    tables = np.asarray(params["tables"])[:TABLES].copy()
+    with st:
+        for seed in range(4):
+            st.stage(_batch(pats, 8, seed=seed + 1))
+            np.asarray(ebc.apply(params, jnp.asarray(_batch(pats, 8,
+                                                            seed=seed))))
+        plan = st.plan_migration()
+        assert plan is not None                  # skew crossed the threshold
+        # the delta lands while the plan is in hand
+        changed, want = _delta(rng, tables)
+        st.begin_update(1)
+        for t, (rows, vals) in changed.items():
+            st.apply_update(t, rows, vals)
+        assert st.commit_update(1)["updated"] and st.version() == 1
+        idx = _batch(pats, 8, seed=9)
+        np.testing.assert_array_equal(
+            np.asarray(ebc.apply(params, jnp.asarray(idx))),
+            _oracle_apply(ebc0, dense_params, want, idx))
+        # installing the pre-update plan must carry the NEW bytes — the
+        # rebuilt units gather from the updated authoritative copy
+        assert st.install_migration(plan)["migrated"]
+        assert st.version() == 1                 # migration keeps the epoch
+        np.testing.assert_array_equal(
+            np.asarray(ebc.apply(params, jnp.asarray(idx))),
+            _oracle_apply(ebc0, dense_params, want, idx))
+
+
+# ---------------------------------------------------------------------------
+# pool: two-phase distributed commit + kill-rollback
+# ---------------------------------------------------------------------------
+
+def test_pool_worker_kill_between_apply_and_commit_rolls_back(dense_ref):
+    ebc0, dense_params = dense_ref
+    pats = _pats()
+    rng = np.random.default_rng(3)
+    ebc = EmbeddingBagCollection(_stage_cfg("pool"))
+    params = ebc.init(jax.random.PRNGKey(0))
+    ebc = _build("pool", params, pats)
+    st = ebc.storage
+    tables = np.asarray(params["tables"])[:TABLES].copy()
+    idx = _batch(pats, 8, seed=3)
+    try:
+        changed, want = _delta(rng, tables)
+        st.begin_update(1)
+        for t, (rows, vals) in changed.items():
+            st.apply_update(t, rows, vals)
+        st._transports[0].kill()                 # dies between apply & commit
+        res = st.commit_update(1)
+        assert not res["updated"] and res["rolled_back"], res
+        assert 0 in res["respawned_workers"], res
+        assert st.version() == 0                 # old epoch keeps serving
+        np.testing.assert_array_equal(
+            np.asarray(ebc.apply(params, jnp.asarray(idx))),
+            _oracle_apply(ebc0, dense_params, tables, idx))
+        # the immediate retry succeeds over the respawned worker
+        st.begin_update(1)
+        for t, (rows, vals) in changed.items():
+            st.apply_update(t, rows, vals)
+        res = st.commit_update(1)
+        assert res["updated"] and st.version() == 1, res
+        np.testing.assert_array_equal(
+            np.asarray(ebc.apply(params, jnp.asarray(idx))),
+            _oracle_apply(ebc0, dense_params, want, idx))
+    finally:
+        st.close()
+
+
+# ---------------------------------------------------------------------------
+# tenant-scoped updates: independent versions, sibling isolation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["sharded", "pool"])
+def test_tenant_scoped_update_isolated(kind):
+    pats = _pats()
+    rng = np.random.default_rng(4)
+    ebc = EmbeddingBagCollection(_stage_cfg(kind))
+    params = ebc.init(jax.random.PRNGKey(0))
+    ebc = _build(kind, params, pats, tenants={"a": 2, "b": 4})
+    st = ebc.storage
+    tables = np.asarray(params["tables"])[:TABLES].copy()
+    idx_a = np.stack([pats[t].sample(4, POOL, seed=40 + t)
+                      for t in range(2)], axis=1).astype(np.int32)
+    idx_b = np.stack([pats[2 + t].sample(4, POOL, seed=60 + t)
+                      for t in range(4)], axis=1).astype(np.int32)
+
+    def ref(tb, start, idx):
+        """Dense reference over a tenant's slice of the shared tables —
+        same XLA gather+sum the backends run, so comparisons are exact."""
+        n = idx.shape[1]
+        cfg = EmbeddingStageConfig(num_tables=n, rows=ROWS, dim=DIM,
+                                   pooling=idx.shape[2], storage="device")
+        return np.asarray(EmbeddingBagCollection(cfg).apply(
+            {"tables": jnp.asarray(tb[start:start + n])}, idx))
+    try:
+        # a tenanted backend refuses GLOBAL updates — scoping is explicit
+        with pytest.raises(RuntimeError):
+            st.begin_update(1)
+        vals = rng.normal(size=(3, DIM)).astype(np.float32)
+        st.tenant_begin_update("a", 1)
+        st.tenant_apply_update("a", 1, np.array([5, 6, 7]), vals)
+        res = st.tenant_commit_update("a", 1)
+        assert res["updated"] and res["tenant"] == "a"
+        assert st.tenant_version("a") == 1 and st.tenant_version("b") == 0
+        tables[1, [5, 6, 7]] = vals              # tenant-local t1 == global t1
+        np.testing.assert_allclose(
+            np.asarray(st.tenant_lookup("a", idx_a)),
+            ref(tables, 0, idx_a), rtol=0, atol=0)
+        # sibling tables bit-identical to the untouched snapshot
+        np.testing.assert_allclose(
+            np.asarray(st.tenant_lookup("b", idx_b)),
+            ref(tables, 2, idx_b), rtol=0, atol=0)
+        # tenant abort: version pinned, nothing applied
+        st.tenant_begin_update("b", 3)
+        st.tenant_apply_update("b", 0, np.array([0]),
+                               rng.normal(size=(1, DIM)).astype(np.float32))
+        assert st.tenant_abort_update("b", 3) is True
+        assert st.tenant_version("b") == 0
+        np.testing.assert_allclose(
+            np.asarray(st.tenant_lookup("b", idx_b)),
+            ref(tables, 2, idx_b), rtol=0, atol=0)
+    finally:
+        if hasattr(st, "close"):
+            st.close()
+
+
+# ---------------------------------------------------------------------------
+# serving session: epoch guard — per-qid pinning, single-version batches
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["device", "tiered", "sharded"])
+def test_session_epoch_guard_bit_exact(kind):
+    rng = np.random.default_rng(5)
+    ecfg = EmbeddingStageConfig(num_tables=4, rows=64, dim=8, pooling=2,
+                                storage=kind, backend="xla")
+    cfg = DLRMConfig(dense_features=4, bottom_mlp=(16, 8), top_mlp=(8, 1),
+                     embedding=ecfg)
+    model = DLRM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tables0 = np.asarray(params["embedding"]["tables"])[:4].copy()
+    if kind == "tiered":
+        model.ebc.storage.build(params, PSConfig(hot_rows=8, warm_slots=16,
+                                                 prefetch_depth=2))
+    elif kind == "sharded":
+        model.ebc.storage.build(params, PSConfig(hot_rows=8, warm_slots=16,
+                                                 prefetch_depth=2),
+                                num_shards=2)
+
+    # oracle: dense device clone, replaying each pinned version through the
+    # SAME engine shapes the session compiled (jit-vs-eager differs)
+    omodel = DLRM(DLRMConfig(
+        dense_features=4, bottom_mlp=(16, 8), top_mlp=(8, 1),
+        embedding=EmbeddingStageConfig(num_tables=4, rows=64, dim=8,
+                                       pooling=2, storage="device",
+                                       backend="xla")))
+
+    def engine_like(ptree, dense, idx):
+        if kind == "device":
+            jitted = jax.jit(lambda p, d, i: omodel.forward(p, d, i))
+            return np.asarray(jitted(ptree, dense, idx))
+        rest = jax.jit(
+            lambda d, p: omodel.forward_from_pooled(ptree, d, p))
+        pooled = omodel.ebc.apply(ptree["embedding"], idx)
+        return np.asarray(rest(jnp.asarray(dense), pooled))
+
+    with tempfile.TemporaryDirectory() as d:
+        pub = ModelUpdateStream(d)
+        pub.publish_full(tables0)            # v1: the base snapshot
+        stream = ModelUpdateStream(d)        # consumer cursor starts at v1
+        sess = serving.ServingSession(
+            model, params,
+            batcher=serving.BatcherConfig(max_batch=8, max_wait_s=0.0),
+            controllers=serving.configure(
+                updates=serving.UpdateConfig(stream=stream)))
+        batches = []
+        sess.server.on_batch = lambda b, s: batches.append(
+            ([q.qid for q in b], s.copy()))
+
+        snapshots = {0: tables0.copy(), 1: tables0.copy()}
+        version_tables = tables0.copy()
+        traffic = []
+        for step in range(10):
+            dense = rng.normal(size=(8, 4)).astype(np.float32)
+            idx = rng.integers(0, 64, size=(8, 4, 2)).astype(np.int32)
+            traffic.extend((dense[i], idx[i]) for i in range(8))
+            sess.submit_batch(dense, idx)
+            while sess.poll(force=True):
+                pass
+            if step in (3, 6):
+                t = step % 4
+                rows = rng.choice(64, size=5, replace=False)
+                vals = rng.normal(size=(5, 8)).astype(np.float32)
+                v = pub.publish_delta({t: (rows, vals)})
+                version_tables[t, rows] = vals
+                snapshots[v] = version_tables.copy()
+        sess.drain()
+        p = sess.percentiles()
+        # the consumer joined at the v1 base, so exactly the two deltas apply
+        assert p["updates_applied"] == 2 and p["model_version"] == 3, p
+        assert p["updates_delta"] == 2 and p["updates_full"] == 0, p
+        assert p["updates_rolled_back"] == 0, p
+
+        checked = 0
+        for qids, scores in batches:
+            pins = {sess.version_of(q) for q in qids}
+            assert len(pins) == 1, f"mixed-version batch: {pins}"
+            dense = np.zeros((8, 4), np.float32)   # engine pads to max_batch
+            idx = np.zeros((8, 4, 2), np.int32)
+            for i, q in enumerate(qids):
+                dense[i], idx[i] = traffic[q]
+            op = dict(params)
+            op["embedding"] = dict(params["embedding"])
+            op["embedding"]["tables"] = jnp.asarray(snapshots[pins.pop()])
+            ref = engine_like(op, dense, idx)[:len(qids)]
+            np.testing.assert_array_equal(scores, ref)
+            checked += len(qids)
+        assert checked == len(traffic)
+        sess.close()

@@ -9,7 +9,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import (CheckpointError, CheckpointManager,
+                              ModelUpdateStream)
 from repro.data import DLRMQueryStream, TokenStream, HETERO_MIXES
 from repro.runtime import TrainLoop, TrainLoopConfig
 from repro.serving import BatcherConfig, InferenceServer, Query
@@ -91,8 +92,101 @@ def test_checkpoint_ignores_partial_writes(tmp_path):
 def test_checkpoint_leaf_mismatch_raises(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     mgr.save(1, {"w": jnp.ones(3)})
-    with pytest.raises(AssertionError):
+    with pytest.raises(CheckpointError):
         mgr.restore({"w": jnp.ones(3), "extra": jnp.ones(2)})
+
+
+def test_checkpoint_rotate_sweeps_stale_tmp(tmp_path):
+    """A crash between tmp-dir creation and the atomic rename used to leak
+    `.tmp_step_*` forever — _rotate now sweeps them on the next save."""
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    os.makedirs(tmp_path / ".tmp_step_000000003")
+    os.makedirs(tmp_path / ".tmp_v_000000004")
+    mgr.save(5, {"w": jnp.ones(2)})
+    assert [d for d in os.listdir(tmp_path)
+            if d.startswith(".tmp_")] == []
+    assert mgr.latest_step() == 5
+
+
+# -- versioned embedding snapshots / update stream ----------------------------
+
+def test_versioned_delta_chain_reconstructs_bit_exact(tmp_path):
+    rng = np.random.default_rng(0)
+    mgr = CheckpointManager(str(tmp_path))
+    tables = rng.normal(size=(3, 16, 4)).astype(np.float32)
+    mgr.save_version(1, tables)
+    want = tables.copy()
+    for v in (2, 3):
+        changed = {}
+        for t in range(3):
+            rows = rng.choice(16, size=4, replace=False)
+            vals = rng.normal(size=(4, 4)).astype(np.float32)
+            changed[t] = (rows, vals)
+            want[t, rows] = vals
+        mgr.save_delta(v, changed)
+    got = mgr.load_version(3)
+    assert got.dtype == np.float32
+    np.testing.assert_array_equal(got, want)
+    # and the intermediate version is still materializable
+    assert mgr.latest_version() == 3
+    assert mgr.load_version(1).shape == tables.shape
+
+
+def test_versioned_delta_edge_cases(tmp_path):
+    """Empty per-table deltas are skipped; a full-table delta round-trips;
+    a delta touching most rows falls back to a FULL snapshot."""
+    rng = np.random.default_rng(1)
+    mgr = CheckpointManager(str(tmp_path))
+    tables = rng.normal(size=(2, 8, 3)).astype(np.float32)
+    mgr.save_version(1, tables)
+    want = tables.copy()
+    full_rows = np.arange(8)
+    full_vals = rng.normal(size=(8, 3)).astype(np.float32)
+    want[1] = full_vals
+    mgr.save_delta(2, {0: (np.array([], np.int64),
+                           np.zeros((0, 3), np.float32)),
+                       1: (full_rows, full_vals)})
+    assert mgr.load_version_manifest(2)["kind"] == "delta"
+    np.testing.assert_array_equal(mgr.load_version(2), want)
+    # touching every row of every table blows the delta ratio -> full
+    all_vals = rng.normal(size=(8, 3)).astype(np.float32)
+    mgr.save_delta(3, {t: (full_rows, all_vals) for t in range(2)})
+    assert mgr.load_version_manifest(3)["kind"] == "full"
+    want[0] = all_vals
+    want[1] = all_vals
+    np.testing.assert_array_equal(mgr.load_version(3), want)
+
+
+def test_versioned_delta_dtype_and_version_guards(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tables = np.ones((1, 4, 2), np.float32)
+    mgr.save_version(1, tables)
+    with pytest.raises(CheckpointError):
+        mgr.save_delta(2, {0: (np.array([0]), np.ones((1, 2), np.float64))})
+    with pytest.raises(CheckpointError):   # versions are monotonic
+        mgr.save_version(1, tables)
+
+
+def test_update_stream_polls_exactly_once(tmp_path):
+    rng = np.random.default_rng(2)
+    consumer = ModelUpdateStream(str(tmp_path))
+    pub = ModelUpdateStream(str(tmp_path))
+    tables = rng.normal(size=(2, 8, 3)).astype(np.float32)
+    assert pub.version() == 0
+    pub.publish_full(tables)
+    pub.publish_delta({0: (np.array([1, 3]),
+                           rng.normal(size=(2, 3)).astype(np.float32))})
+    recs = consumer.poll()
+    assert [r["version"] for r in recs] == [1, 2]
+    assert recs[0]["kind"] == "full" and recs[1]["kind"] == "delta"
+    # a full record normalizes to whole-table row updates
+    rows, vals = recs[0]["tables"][0]
+    np.testing.assert_array_equal(rows, np.arange(8))
+    np.testing.assert_array_equal(vals, tables[0])
+    assert consumer.poll() == []           # exactly-once per consumer
+    late = ModelUpdateStream(str(tmp_path))
+    assert late.poll() == []               # fresh consumers skip history
+    assert late.version() == 2
 
 
 # -- fault-tolerant train loop ----------------------------------------------------

@@ -33,8 +33,12 @@ Compares a fresh `benchmarks/run.py --json` output against the checked-in
       table copy however many worker processes map it (flat — not
       linear — in worker count), and both backends' migrations must
       follow the moving hot set (each swap lands below the imbalance it
-      started from) — all compared WITHIN the fresh run, so host
-      speed never flakes them.
+      started from), and in the `online_update` sweep both serving legs
+      must replay bit-exact at each query's pinned model version, the
+      update leg must land its delta and full-fallback installs with
+      zero rollbacks and zero sheds, and its p99 must stay within a
+      bound of the silent leg's — all compared WITHIN the fresh run, so
+      host speed never flakes them.
   warnings (exit 0)      — numeric drift: timing metrics (units us/ms/s)
       outside a generous x`--timing-factor` band, other numerics (hit
       rates, overlap fractions — thread-race dependent) moving more than
@@ -45,7 +49,8 @@ New records absent from the baseline are reported as info — refresh the
 baseline (`benchmarks/run.py --sweep storage_backends --sweep
 sharded_balance --sweep sharded_migration --sweep sharded_pool
 --sweep embedding_stage --sweep slo_overload --sweep multi_tenant
---json benchmarks/baseline.json`) when adding sweeps.
+--sweep online_update --json benchmarks/baseline.json`) when adding
+sweeps.
 
 Stdlib only (runs before `pip install` in CI if need be).
 """
@@ -318,6 +323,40 @@ def compare(base: dict, new: dict, timing_factor: float,
                               f"{phase.upper()} migration left imbalance "
                               f"{ia:g} not below {ib:g} — the swap no "
                               f"longer rebalances")
+
+    # semantic invariants: zero-downtime online model updates. The epoch
+    # guard pins every query to its admission-time version, so BOTH legs
+    # must replay bit-exact against per-version dense oracles; the update
+    # leg must actually exercise both delta and full-fallback installs
+    # with no rollbacks, shed nothing, and keep its tail within a bound
+    # of the silent leg's — within the fresh run, so host speed never
+    # flakes it
+    def ou(records, leg, metric):
+        return records.get(("online_update",
+                            f"online_update/{leg}", metric))
+    for leg in ("silent", "updates"):
+        be = ou(new, leg, "bit_exact")
+        if be is not None and be is not True:
+            errors.append(f"online_update: {leg} bit_exact={be!r} — a "
+                          f"served batch diverged from its PINNED "
+                          f"version's dense replay; the epoch guard "
+                          f"broke version isolation")
+    for metric, want, why in (
+            ("updates_delta", 2, "delta installs"),
+            ("updates_full", 1, "full-fallback installs"),
+            ("rolled_back", 0, "rollbacks"),
+            ("sheds", 0, "update-attributed sheds")):
+        v = ou(new, "updates", metric)
+        if v is not None and v != want:
+            errors.append(f"online_update: updates leg recorded {v:g} "
+                          f"{why}, expected {want} — the guarded update "
+                          f"path is not doing what the sweep arranged")
+    up99, sp99 = ou(new, "updates", "p99_ms"), ou(new, "silent", "p99_ms")
+    if up99 is not None and sp99 is not None \
+            and not up99 <= 5.0 * sp99 + 50.0:
+        errors.append(f"online_update: updates-leg p99 {up99:g}ms blew "
+                      f"past the silent leg's {sp99:g}ms (bound 5x+50ms) "
+                      f"— version swaps are stalling the serving tail")
     return errors, warnings
 
 
